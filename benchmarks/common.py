@@ -1,0 +1,58 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.netsim import ComputeParams, ModelSplit, NetworkParams
+
+# A100-class constants calibrated in EXPERIMENTS.md §Table2 so that the
+# cloud-based strategy lands on the paper's ~370 s / 100 Alpaca cases.
+PAPER_COMP = ComputeParams(edge_layer_time=1.28e-3, cloud_layer_time=1.28e-3,
+                           exit_head_time=1e-3)
+PAPER_NET = NetworkParams(up_bw=3.8e6, down_bw=8e6, rtt=0.003)
+PAPER_SPLIT = ModelSplit(n_layers=32, l_ee1=8, l_ee2=16, d_model=4096)
+
+
+def time_call(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (us) of a jitted call."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def tiny_trained_model(steps: int = 120, seed: int = 0) -> Dict:
+    """Train the tiny EE model used by measured-trace benchmarks."""
+    from repro.configs.base import ModelConfig
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+    from repro.models.registry import build_model
+    from repro.training.optim import AdamWConfig, init_adamw
+    from repro.training.train_step import make_train_step
+
+    cfg = ModelConfig(name="tiny-ee", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=256, tie_embeddings=True,
+                      exit_layers=(1, 2)).validate()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = init_adamw(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(
+        lr=1e-3, warmup_steps=10, total_steps=steps + 100)))
+    data = SyntheticCorpus(DataConfig(vocab_size=256, seq_len=64,
+                                      batch_size=8, kind="markov",
+                                      seed=seed))
+    for b in data.batches(steps):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, _ = step(params, opt, batch)
+    return {"model": model, "params": params, "data": data}

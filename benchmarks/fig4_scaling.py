@@ -1,0 +1,39 @@
+"""Paper Fig 4: multi-edge-client scaling (1..5 clients), CE-CoLLM vs
+cloud-based deployment, both datasets, theta in {0.8, 0.9}."""
+from __future__ import annotations
+
+from repro.core.netsim import simulate
+from repro.core.workload import ALPACA, XSUM, paper_calibrated_cases, \
+    split_clients
+
+from benchmarks.common import PAPER_COMP, PAPER_NET, PAPER_SPLIT
+
+
+def run(csv=True):
+    rows = []
+    for prof in (ALPACA, XSUM):
+        for n in range(1, 6):
+            # each client serves the full 100-case workload replicated, as in
+            # the paper (total work grows with client count)
+            cases = paper_calibrated_cases(prof, 100, seed=1)
+            clients = [list(cases) for _ in range(n)]
+            rc = simulate("cloud_llm", clients, PAPER_NET, PAPER_COMP,
+                          PAPER_SPLIT)
+            rows.append({"table": "fig4", "dataset": prof.name,
+                         "clients": n, "strategy": "cloud_llm", **rc.as_row()})
+            for theta in (0.8, 0.9):
+                r = simulate("ce_collm", clients, PAPER_NET, PAPER_COMP,
+                             PAPER_SPLIT, theta=theta)
+                rows.append({"table": "fig4", "dataset": prof.name,
+                             "clients": n, "strategy": f"ce_collm@{theta}",
+                             **r.as_row()})
+    if csv:
+        for row in rows:
+            print(f"fig4,{row['dataset']},{row['clients']},"
+                  f"{row['strategy']},{row['total_s']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1))

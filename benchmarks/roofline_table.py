@@ -1,0 +1,50 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the
+dry-run artifacts in artifacts/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES_BY_NAME
+from repro.roofline.analyze import analyze
+
+
+def run(csv=True, art_dir="artifacts/dryrun", opt_dir="artifacts/opt",
+        out_csv="artifacts/roofline.csv"):
+    rows = []
+    for label, d in (("baseline", art_dir), ("optimized", opt_dir)):
+        for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(path) as f:
+                rec = json.load(f)
+            if rec.get("status") != "ok" or "shape" not in rec:
+                continue   # skip two-tier (collm_*) artifacts
+            cfg = get_config(rec["arch"])
+            shape = SHAPES_BY_NAME[rec["shape"]]
+            terms = analyze(rec, cfg, shape)
+            row = terms.row()
+            row["pass"] = label
+            ma = rec.get("memory_analysis", {})
+            row["hbm_gb"] = round((ma.get("argument_size_in_bytes", 0)
+                                   + ma.get("temp_size_in_bytes", 0))
+                                  / 2 ** 30, 2)
+            row["fits_16gb"] = row["hbm_gb"] <= 16.0
+            rows.append(row)
+    if csv and rows:
+        os.makedirs(os.path.dirname(out_csv), exist_ok=True)
+        cols = list(rows[0].keys())
+        with open(out_csv, "w") as f:
+            f.write(",".join(cols) + "\n")
+            for row in rows:
+                f.write(",".join(str(row[c]) for c in cols) + "\n")
+        for row in rows:
+            print("roofline," + ",".join(str(row[c]) for c in cols))
+    elif csv:
+        print("roofline,NO_ARTIFACTS (run: python -m repro.launch.dryrun --all)")
+    return rows
+
+
+if __name__ == "__main__":
+    import json as _j
+    print(_j.dumps(run(csv=False), indent=1))

@@ -1,0 +1,65 @@
+"""Paper Table 2: cost/performance across deployment strategies.
+
+100 cases per dataset, paper-calibrated confidence traces, single client.
+Prints our simulated numbers next to the paper's reported values."""
+from __future__ import annotations
+
+from repro.core.netsim import simulate
+from repro.core.workload import ALPACA, XSUM, paper_calibrated_cases, \
+    split_clients
+
+from benchmarks.common import PAPER_COMP, PAPER_NET, PAPER_SPLIT
+
+PAPER_TOTALS = {
+    ("alpaca", "cloud_llm", None): 370.2,
+    ("alpaca", "naive", None): 3371.8,
+    ("alpaca", "standalone", None): 201.6,
+    ("alpaca", "ce_collm", 0.8): 319.1,
+    ("alpaca", "ce_collm", 0.9): 345.4,
+    ("alpaca", "ce_collm", 1.0): 481.3,
+    ("xsum", "cloud_llm", None): 392.5,
+    ("xsum", "naive", None): 19108.7,
+    ("xsum", "standalone", None): 221.4,
+    ("xsum", "ce_collm", 0.8): 376.0,
+    ("xsum", "ce_collm", 0.9): 402.4,
+    ("xsum", "ce_collm", 1.0): 611.9,
+}
+PAPER_RR = {("alpaca", 0.8): 49.58, ("alpaca", 0.9): 58.00,
+            ("xsum", 0.8): 27.73, ("xsum", 0.9): 36.13}
+
+
+def run(csv=True):
+    rows = []
+    for prof in (ALPACA, XSUM):
+        cases = paper_calibrated_cases(prof, 100, seed=1)
+        clients = split_clients(cases, 1)
+        plan = [("cloud_llm", None, True), ("naive", None, False),
+                ("standalone", None, True), ("ce_collm", 0.8, True),
+                ("ce_collm", 0.9, True), ("ce_collm", 1.0, True)]
+        for strat, theta, hp in plan:
+            kw = {"theta": theta} if theta is not None else {}
+            r = simulate(strat, clients, PAPER_NET, PAPER_COMP, PAPER_SPLIT,
+                         half_precision=hp, **kw)
+            paper = PAPER_TOTALS.get((prof.name, strat, theta))
+            row = {
+                "table": "table2", "dataset": prof.name,
+                "strategy": strat + (f"@{theta}" if theta else ""),
+                **r.as_row(),
+                "paper_total_s": paper,
+                "rel_err_pct": (round(100 * (r.total_time - paper) / paper, 1)
+                                if paper else None),
+            }
+            if strat == "ce_collm" and (prof.name, theta) in PAPER_RR:
+                row["paper_request_rate_pct"] = PAPER_RR[(prof.name, theta)]
+            rows.append(row)
+    if csv:
+        for row in rows:
+            print("table2," + row["dataset"] + "," + row["strategy"] + ","
+                  + str(row["total_s"]) + "," + str(row["paper_total_s"])
+                  + "," + str(row["rel_err_pct"]))
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1))

@@ -1,0 +1,58 @@
+"""Paper Table 3 + §4.3: effect of early-exit thresholds and transport
+precision on predictions, measured on the REAL tiny EE model (not the
+simulator): generation agreement vs the float32 undivided model, plus the
+paper's hidden-state range check (fp16 representability)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collm import CollmConfig
+from repro.serving.engine import ServingSystem, token_agreement
+
+from benchmarks.common import tiny_trained_model
+
+
+def run(csv=True, n_prompts=4, gen=24):
+    tt = tiny_trained_model()
+    model, params, data = tt["model"], tt["params"], tt["data"]
+    prompts = [data.sample_tokens(12) for _ in range(n_prompts)]
+    base = ServingSystem(model, params, CollmConfig(theta=1.0)).generate(
+        prompts, gen, mode="cloud")
+
+    rows = []
+    for theta in (0.8, 0.9, 1.0):
+        for fmt in ("float32", "float16", "int8"):
+            sysx = ServingSystem(model, params,
+                                 CollmConfig(theta=theta, wire_format=fmt))
+            r = sysx.generate(prompts, gen, mode="collm")
+            ag = float(np.mean([token_agreement(a, b) for a, b in
+                                zip(r["tokens"], base["tokens"])]))
+            rows.append({"table": "table3", "theta": theta, "wire": fmt,
+                         "agreement_lcsf1": round(ag, 4),
+                         "request_rate_pct":
+                             round(100 * r["stats"].request_rate, 1)})
+
+    # paper §4.3: hidden-state range vs float16 representable range
+    caches = model.init_cache(1, 64)
+    x, exit_h, _, _ = model.prefill(
+        params, {"tokens": jnp.asarray(prompts[0][None, :])}, caches)
+    h = exit_h[model.cfg.exit_layers[0]]
+    hmin, hmax = float(h.min()), float(h.max())
+    rows.append({"table": "table3_range", "hidden_min": round(hmin, 2),
+                 "hidden_max": round(hmax, 2),
+                 "fp16_safe": bool(-65504 < hmin and hmax < 65504)})
+    if csv:
+        for row in rows:
+            if row["table"] == "table3":
+                print(f"table3,{row['theta']},{row['wire']},"
+                      f"{row['agreement_lcsf1']},{row['request_rate_pct']}")
+            else:
+                print(f"table3_range,{row['hidden_min']},{row['hidden_max']},"
+                      f"{row['fp16_safe']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1))

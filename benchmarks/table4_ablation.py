@@ -1,0 +1,50 @@
+"""Paper Table 4: component ablations at theta=0.8 (fp16 wire, early exit,
+content manager + parallel upload)."""
+from __future__ import annotations
+
+from repro.core.netsim import simulate
+from repro.core.workload import ALPACA, XSUM, paper_calibrated_cases, \
+    split_clients
+
+from benchmarks.common import PAPER_COMP, PAPER_NET, PAPER_SPLIT
+
+PAPER_REL = {   # paper's "Relative Total Cost (%)"
+    ("alpaca", "full"): 100.0, ("alpaca", "no_fp16"): 105.69,
+    ("alpaca", "no_ee"): 151.24, ("alpaca", "no_cm"): 441.28,
+    ("xsum", "full"): 100.0, ("xsum", "no_fp16"): 114.51,
+    ("xsum", "no_ee"): 165.96, ("xsum", "no_cm"): 1335.14,
+}
+
+
+def run(csv=True):
+    rows = []
+    for prof in (ALPACA, XSUM):
+        cases = paper_calibrated_cases(prof, 100, seed=1)
+        clients = split_clients(cases, 1)
+        variants = [
+            ("full", dict()),
+            ("no_fp16", dict(half_precision=False)),
+            ("no_ee", dict(early_exit=False)),
+            ("no_cm", dict(content_manager=False)),
+        ]
+        base_total = None
+        for name, kw in variants:
+            r = simulate("ce_collm", clients, PAPER_NET, PAPER_COMP,
+                         PAPER_SPLIT, theta=0.8, **kw)
+            if base_total is None:
+                base_total = r.total_time
+            rel = 100 * r.total_time / base_total
+            rows.append({"table": "table4", "dataset": prof.name,
+                         "variant": name, **r.as_row(),
+                         "relative_pct": round(rel, 2),
+                         "paper_relative_pct": PAPER_REL[(prof.name, name)]})
+    if csv:
+        for row in rows:
+            print(f"table4,{row['dataset']},{row['variant']},"
+                  f"{row['relative_pct']},{row['paper_relative_pct']}")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(csv=False), indent=1))

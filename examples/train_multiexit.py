@@ -1,0 +1,23 @@
+"""Train a multi-exit model of any assigned architecture family.
+
+Default trains a reduced variant for a few hundred steps on CPU; pass a
+bigger --d-model/--layers (or drop --smoke on a TPU mesh) to scale up.
+
+    PYTHONPATH=src python examples/train_multiexit.py --arch olmoe-1b-7b \
+        --steps 120
+"""
+import argparse
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import main as train_main  # noqa: E402
+
+
+if __name__ == "__main__":
+    if "--smoke" not in sys.argv:
+        sys.argv.append("--smoke")
+    if "--arch" not in " ".join(sys.argv):
+        sys.argv += ["--arch", "olmoe-1b-7b"]
+    if "--steps" not in " ".join(sys.argv):
+        sys.argv += ["--steps", "120"]
+    train_main()

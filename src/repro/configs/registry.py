@@ -1,0 +1,51 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Maps the assigned public-pool ids (with dots/dashes) onto config modules.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs import (
+    granite_moe_3b_a800m,
+    qwen1_5_110b,
+    xlstm_350m,
+    olmoe_1b_7b,
+    gemma3_12b,
+    paligemma_3b,
+    command_r_35b,
+    zamba2_1_2b,
+    whisper_medium,
+    stablelm_12b,
+    ee_llm_7b,
+)
+from repro.configs.base import ModelConfig, reduced
+
+_MODULES = (
+    granite_moe_3b_a800m,
+    qwen1_5_110b,
+    xlstm_350m,
+    olmoe_1b_7b,
+    gemma3_12b,
+    paligemma_3b,
+    command_r_35b,
+    zamba2_1_2b,
+    whisper_medium,
+    stablelm_12b,
+    ee_llm_7b,
+)
+
+ARCHS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+# The 10 assigned architectures (paper's own model excluded from the matrix).
+ASSIGNED = tuple(n for n in ARCHS if n != "ee-llm-7b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    return ARCHS[arch]
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return reduced(get_config(arch))

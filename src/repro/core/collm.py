@@ -1,0 +1,242 @@
+"""CE-CoLLM co-inference steps (paper §4.4, Algorithm 1).
+
+Building blocks:
+
+  * ``edge_step``        — edge partition (layers 1..l_ee2) with exits at
+                           l_ee1/l_ee2; emits the quantized l_ee1 upload.
+  * ``cloud_step``       — cloud partition (layers l_ee1+1..L) continuing
+                           from an uploaded hidden state; supports lazy KV
+                           *backfill* of early-exited tokens (see DESIGN.md).
+  * ``standalone_step``  — paper's low-latency edge standalone mode (last
+                           exit is the output head; no threshold).
+  * ``full_step``        — undivided model (cloud-deployment baseline).
+  * ``fused_step``       — single-graph adaptive step with a bounded upload
+                           ring and ``lax.cond``-gated cloud compute: the
+                           TPU-native expression of "request cloud only on
+                           low confidence".  θ=1.0 reproduces the full model
+                           exactly (unit-tested invariant).
+
+Host-level multi-client serving (with the ContentManager and the network
+simulator) lives in ``repro.serving.engine``; this module is pure JAX.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.exits import ExitDecision, evaluate_exit, first_confident_exit
+from repro.core.transport import dequantize, quantize
+from repro.models.transformer import Model
+
+Params = Dict[str, Any]
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CollmConfig:
+    theta: float = 0.8
+    wire_format: str = "float16"      # paper: float16; beyond-paper: int8
+    max_pending: int = 4              # upload ring size (fused mode)
+    speculative: bool = False         # cloud always computes (latency-hiding)
+    # Paper-faithful: the content manager RELEASES hidden states of tokens
+    # that exited early, so the cloud KV cache has gaps at those positions
+    # (this is why Table 2 ROUGE-L < 1 for theta < 1).  backfill=True is the
+    # beyond-paper fix: ringed uploads are run through the cloud partition on
+    # the next request, keeping cloud KV exact at modest extra cloud compute.
+    backfill: bool = False
+
+
+class EdgeStepOut(NamedTuple):
+    decisions: Dict[int, ExitDecision]
+    token: jax.Array            # (B,) first-confident-exit token
+    exited: jax.Array           # (B,) bool
+    upload: Dict[str, jax.Array]   # quantized l_ee1 hidden (wire packet)
+    caches: Dict[int, Pytree]
+
+
+def _tree_where(pred: jax.Array, a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+
+
+class CoLLM:
+    """Binds a Model to the paper's partition + gating machinery."""
+
+    def __init__(self, model: Model, ccfg: CollmConfig = CollmConfig()):
+        cfg = model.cfg
+        if len(cfg.exit_layers) < 1:
+            raise ValueError("CE-CoLLM requires at least one exit layer")
+        self.model = model
+        self.ccfg = ccfg
+        self.l_ee1 = cfg.exit_layers[0]
+        self.l_ee2 = cfg.exit_layers[-1]
+        self.edge_segs = model.edge_segments(self.l_ee2)
+        self.cloud_segs = model.cloud_segments(self.l_ee1)
+        # segments strictly before l_ee1 (their output is the upload point)
+        self.pre_segs = tuple(i for i, s in enumerate(model.segments)
+                              if s.end <= self.l_ee1)
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def init_edge_cache(self, batch: int, max_seq: int, dtype=None):
+        return self.model.init_cache(batch, max_seq, self.edge_segs,
+                                     dtype=dtype)
+
+    def init_cloud_cache(self, batch: int, max_seq: int, dtype=None):
+        return self.model.init_cache(batch, max_seq, self.cloud_segs,
+                                     dtype=dtype)
+
+    # ------------------------------------------------------------------
+    # prefill (prompt processing)
+    # ------------------------------------------------------------------
+    def edge_prefill(self, params: Params, batch: Dict[str, jax.Array],
+                     caches: Dict[int, Pytree]):
+        """Edge processes the prompt; returns (exit decisions at last pos,
+        l_ee1 hidden sequence for upload, caches)."""
+        x, exit_h, new_caches, ctx = self.model.prefill(
+            params, batch, caches, self.edge_segs)
+        h1_seq = exit_h[self.l_ee1]
+        decisions = {l: evaluate_exit(
+            self.model.exit_logits(params, l, h[:, -1:]))
+            for l, h in exit_h.items()}
+        return decisions, h1_seq, new_caches
+
+    def cloud_prefill(self, params: Params, h1_seq: jax.Array,
+                      caches: Dict[int, Pytree],
+                      enc_out: Optional[jax.Array] = None):
+        """Cloud builds its KV over the uploaded prompt hidden states."""
+        from repro.models.blocks import BlockCtx
+        ctx = BlockCtx(positions=jnp.arange(h1_seq.shape[1]), enc_out=enc_out,
+                       dtype=self.model.compute_dtype)
+        x, _, _, new_caches = self.model.run_segments(
+            params, h1_seq, ctx, self.cloud_segs, caches=caches,
+            collect_exits=False)
+        logits = self.model.logits(params, x[:, -1:])
+        return logits, new_caches
+
+    # ------------------------------------------------------------------
+    # decode steps
+    # ------------------------------------------------------------------
+    def edge_step(self, params: Params, token: jax.Array,
+                  caches: Dict[int, Pytree], pos: jax.Array) -> EdgeStepOut:
+        x, exit_h, new_caches = self.model.decode_step(
+            params, token, caches, pos, self.edge_segs)
+        decisions = {l: evaluate_exit(self.model.exit_logits(params, l, h))
+                     for l, h in exit_h.items()}
+        tok, exited, _ = first_confident_exit(decisions, self.ccfg.theta)
+        upload = quantize(exit_h[self.l_ee1], self.ccfg.wire_format)
+        return EdgeStepOut(decisions, tok, exited, upload, new_caches)
+
+    def cloud_step(self, params: Params, upload: Dict[str, jax.Array],
+                   caches: Dict[int, Pytree], pos: jax.Array
+                   ) -> Tuple[jax.Array, Dict[int, Pytree]]:
+        """One uploaded hidden -> final logits (paper Algorithm 1 lines 29-37).
+        Also used for KV backfill of early-exited positions."""
+        hidden = dequantize(upload, self.model.compute_dtype)
+        x, _, new_caches = self.model.decode_from_hidden(
+            params, hidden, caches, pos, self.cloud_segs)
+        return self.model.logits(params, x)[:, 0], new_caches
+
+    def standalone_step(self, params: Params, token: jax.Array,
+                        caches: Dict[int, Pytree], pos: jax.Array):
+        """Edge standalone (low-latency) mode: last exit is the output."""
+        x, exit_h, new_caches = self.model.decode_step(
+            params, token, caches, pos, self.edge_segs)
+        d = evaluate_exit(self.model.exit_logits(params, self.l_ee2,
+                                                 exit_h[self.l_ee2]))
+        return d.token, d, new_caches
+
+    def full_step(self, params: Params, token: jax.Array,
+                  caches: Dict[int, Pytree], pos: jax.Array):
+        """Undivided model — the cloud-deployment baseline."""
+        x, _, new_caches = self.model.decode_step(
+            params, token, caches, pos, collect_exits=False)
+        logits = self.model.logits(params, x)[:, 0]
+        return jnp.argmax(logits, -1).astype(jnp.int32), logits, new_caches
+
+    # ------------------------------------------------------------------
+    # fused adaptive step (single-graph; TPU-native cond-gated cloud)
+    # ------------------------------------------------------------------
+    def init_fused_state(self, batch: int, max_seq: int, dtype=None):
+        d = self.model.cfg.d_model
+        k = self.ccfg.max_pending
+        dt = dtype or self.model.compute_dtype
+        return {
+            "edge": self.init_edge_cache(batch, max_seq, dtype),
+            "cloud": self.init_cloud_cache(batch, max_seq, dtype),
+            "ring_h": jnp.zeros((k, batch, 1, d), dt),
+            "ring_pos": jnp.zeros((k,), jnp.int32),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def fused_step(self, params: Params, token: jax.Array, state: Pytree,
+                   pos: jax.Array):
+        """token: (B,1).  Returns (next_token (B,), info, new_state).
+
+        Semantics: every step the l_ee1 hidden is pushed into the upload
+        ring (paper's parallel upload).  Cloud compute fires only when some
+        row is below θ or the ring is full; it then *backfills* the KV of
+        all ringed positions in order — so the cloud cache is always exact.
+        """
+        model, ccfg = self.model, self.ccfg
+        k = ccfg.max_pending if ccfg.backfill else 1
+        out = self.edge_step(params, token, state["edge"], pos)
+
+        # simulate the wire: quantize -> dequantize
+        h1 = dequantize(out.upload, model.compute_dtype)
+        # paper-faithful (no backfill): only the newest upload is retained —
+        # the content manager releases the rest (gapped cloud KV).
+        idx = state["count"] if ccfg.backfill else jnp.zeros((), jnp.int32)
+        ring_h = jax.lax.dynamic_update_index_in_dim(
+            state["ring_h"], h1.astype(state["ring_h"].dtype), idx, 0)
+        ring_pos = jax.lax.dynamic_update_index_in_dim(
+            state["ring_pos"], jnp.asarray(pos, jnp.int32), idx, 0)
+        count = idx + 1
+
+        need_cloud = ~jnp.all(out.exited)
+        if ccfg.backfill:
+            need_cloud = need_cloud | (count >= k)   # ring full -> flush
+        if ccfg.speculative:
+            need_cloud = jnp.ones((), bool)
+
+        b = token.shape[0]
+        vocab = model.cfg.vocab_size
+
+        def run_cloud(operand):
+            caches, rh, rp, cnt = operand
+
+            def body(carry, i):
+                c = carry
+                logits_i, c_new = self.cloud_step(
+                    params, {"data": rh[i]}, c, rp[i])
+                valid = i < cnt
+                c = _tree_where(valid, c_new, c)
+                return c, jnp.where(valid, logits_i,
+                                    jnp.zeros((b, vocab), logits_i.dtype))
+
+            caches, all_logits = jax.lax.scan(body, caches, jnp.arange(k))
+            final_logits = all_logits[jnp.maximum(cnt - 1, 0)]
+            return caches, final_logits, jnp.zeros((), jnp.int32)
+
+        def skip_cloud(operand):
+            caches, rh, rp, cnt = operand
+            return caches, jnp.zeros((b, vocab), jnp.float32), cnt
+
+        cloud_caches, cloud_logits, new_count = jax.lax.cond(
+            need_cloud, run_cloud, skip_cloud,
+            (state["cloud"], ring_h, ring_pos, count))
+
+        cloud_tok = jnp.argmax(cloud_logits, -1).astype(jnp.int32)
+        next_token = jnp.where(out.exited, out.token, cloud_tok)
+
+        new_state = {"edge": out.caches, "cloud": cloud_caches,
+                     "ring_h": ring_h, "ring_pos": ring_pos,
+                     "count": new_count}
+        info = {"exited": out.exited, "need_cloud": need_cloud,
+                "confidences": {l: d.confidence
+                                for l, d in out.decisions.items()}}
+        return next_token, info, new_state

@@ -1,0 +1,135 @@
+"""Cloud-side content manager (paper §4.2).
+
+Host-level component that coordinates per-client state on the cloud tier:
+
+  * uploaded hidden-state packets (parallel upload lands here *before* the
+    matching inference request arrives — paper fig 3 step 4);
+  * per-client KV / recurrent caches for the cloud LLM partition, preserved
+    across token steps to avoid recomputation;
+  * release of consumed hidden states and end-of-sequence cleanup
+    (paper fig 3 step 6).
+
+It deliberately mirrors the paper's dual-API split: ``upload`` is the data
+receive API, ``request_inference`` is the inference API.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.transport import StatePacket
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class ClientState:
+    device_id: str
+    pending_uploads: Dict[int, StatePacket] = dataclasses.field(default_factory=dict)
+    cache: Optional[Pytree] = None          # cloud-partition KV / ssm states
+    last_active: float = 0.0
+    uploads_received: int = 0
+    uploads_consumed: int = 0
+    uploads_released: int = 0
+    bytes_received: int = 0
+    requests_served: int = 0
+
+
+class ContentManager:
+    """Multi-client cloud state store."""
+
+    def __init__(self, max_pending_per_client: int = 8,
+                 clock: Callable[[], float] = time.monotonic):
+        self._clients: Dict[str, ClientState] = {}
+        self._max_pending = max_pending_per_client
+        self._clock = clock
+
+    # -- data-receive API ---------------------------------------------------
+    def upload(self, device_id: str, pos: int, packet: StatePacket) -> None:
+        c = self._client(device_id)
+        c.pending_uploads[pos] = packet
+        c.uploads_received += 1
+        c.bytes_received += packet.nbytes()
+        c.last_active = self._clock()
+        # continuously release stale hidden states (paper §4.2): any upload
+        # older than the window can no longer be requested.
+        while len(c.pending_uploads) > self._max_pending:
+            oldest = min(c.pending_uploads)
+            del c.pending_uploads[oldest]
+            c.uploads_released += 1
+
+    # -- inference API ------------------------------------------------------
+    def take_upload(self, device_id: str, pos: int) -> StatePacket:
+        c = self._client(device_id)
+        if pos not in c.pending_uploads:
+            raise KeyError(
+                f"client {device_id}: no uploaded state for position {pos} "
+                f"(have {sorted(c.pending_uploads)})")
+        pkt = c.pending_uploads.pop(pos)
+        # token inference for pos invalidates earlier speculative uploads
+        for stale in [p for p in c.pending_uploads if p < pos]:
+            del c.pending_uploads[stale]
+            c.uploads_released += 1
+        c.uploads_consumed += 1
+        c.requests_served += 1
+        c.last_active = self._clock()
+        return pkt
+
+    def take_uploads_upto(self, device_id: str, pos: int):
+        """Backfill mode: pop ALL pending uploads with position <= pos, in
+        order (beyond-paper exact-KV mode; see DESIGN.md)."""
+        c = self._client(device_id)
+        out = []
+        for p in sorted(k for k in c.pending_uploads if k <= pos):
+            out.append((p, c.pending_uploads.pop(p)))
+            c.uploads_consumed += 1
+        c.requests_served += 1
+        c.last_active = self._clock()
+        return out
+
+    def has_upload(self, device_id: str, pos: int) -> bool:
+        c = self._clients.get(device_id)
+        return bool(c and pos in c.pending_uploads)
+
+    # -- per-client cloud cache ----------------------------------------------
+    def get_cache(self, device_id: str) -> Optional[Pytree]:
+        return self._client(device_id).cache
+
+    def put_cache(self, device_id: str, cache: Pytree) -> None:
+        c = self._client(device_id)
+        c.cache = cache
+        c.last_active = self._clock()
+
+    # -- lifecycle ------------------------------------------------------------
+    def end_of_sequence(self, device_id: str) -> None:
+        """Paper step 6: clear KV caches + hidden states on completion."""
+        c = self._clients.get(device_id)
+        if c is None:
+            return
+        c.uploads_released += len(c.pending_uploads)
+        c.pending_uploads.clear()
+        c.cache = None
+
+    def drop_client(self, device_id: str) -> None:
+        self._clients.pop(device_id, None)
+
+    def stats(self) -> Dict[str, Dict[str, int]]:
+        return {
+            d: {"uploads_received": c.uploads_received,
+                "uploads_consumed": c.uploads_consumed,
+                "uploads_released": c.uploads_released,
+                "bytes_received": c.bytes_received,
+                "requests_served": c.requests_served,
+                "pending": len(c.pending_uploads)}
+            for d, c in self._clients.items()
+        }
+
+    def clients(self):
+        return list(self._clients)
+
+    def _client(self, device_id: str) -> ClientState:
+        if device_id not in self._clients:
+            self._clients[device_id] = ClientState(device_id=device_id,
+                                                   last_active=self._clock())
+        return self._clients[device_id]

@@ -1,0 +1,145 @@
+"""Disaggregated two-tier CE-CoLLM runtime (DESIGN.md §2).
+
+Pod 0 of the multi-pod mesh is the *edge tier* (layers 1..l_ee2 + exit
+heads), pod 1 the *cloud tier* (layers l_ee1+1..L).  Each tier is its own
+jit program on its own ("data","model") submesh — separate failure domains,
+exactly like the paper's edge/cloud split (edge standalone keeps working if
+the cloud program dies).  The l_ee1 hidden state crosses tiers as an fp16 /
+int8 packet (``jax.device_put`` over DCN on real hardware); jax async
+dispatch gives the paper's "parallel upload" for free: the edge program
+continues running while the transfer is in flight.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.collm import CoLLM, CollmConfig
+from repro.core.transport import dequantize, packet_bytes, quantize
+from repro.launch import sharding as shardlib
+from repro.models.transformer import Model
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class TierPrograms:
+    edge_step: Any
+    cloud_step: Any
+    edge_mesh: Any
+    cloud_mesh: Any
+    wire_bytes_per_token: int
+
+
+class TwoTierRuntime:
+    """Compiles the edge partition on one submesh and the cloud partition on
+    the other; moves only quantized packets between them."""
+
+    def __init__(self, model: Model, ccfg: CollmConfig, edge_mesh,
+                 cloud_mesh):
+        self.model = model
+        self.collm = CoLLM(model, ccfg)
+        self.ccfg = ccfg
+        self.edge_mesh = edge_mesh
+        self.cloud_mesh = cloud_mesh
+
+    # -- lowering (also used by the technique dry-run) ----------------------
+    def lower_tiers(self, batch: int, max_seq: int
+                    ) -> Tuple[Any, Any, Dict]:
+        co = self.collm
+        model = self.model
+        params = model.param_specs()
+
+        def edge_step(params, token, caches, pos):
+            out = co.edge_step(params, token, caches, pos)
+            return out.token, out.exited, out.upload, out.caches
+
+        def cloud_step(params, upload, caches, pos):
+            logits, caches = co.cloud_step(params, upload, caches, pos)
+            return jnp.argmax(logits, -1).astype(jnp.int32), caches
+
+        token = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        e_caches = jax.eval_shape(
+            lambda: co.init_edge_cache(batch, max_seq,
+                                       dtype=model.compute_dtype))
+        c_caches = jax.eval_shape(
+            lambda: co.init_cloud_cache(batch, max_seq,
+                                        dtype=model.compute_dtype))
+        d = model.cfg.d_model
+        wire_dtype = {"float32": jnp.float32, "float16": jnp.float16,
+                      "int8": jnp.int8}[self.ccfg.wire_format]
+        upload = {"data": jax.ShapeDtypeStruct((batch, 1, d), wire_dtype)}
+        if self.ccfg.wire_format == "int8":
+            upload["scale"] = jax.ShapeDtypeStruct((batch, 1, 1), jnp.float32)
+
+        def shardings(mesh, caches):
+            psh = shardlib.params_shardings(params, mesh, fsdp=False)
+            tsh = NamedSharding(mesh, shardlib.input_pspec(token, mesh, batch))
+            csh = shardlib.cache_shardings(caches, mesh, batch=batch)
+            possh = NamedSharding(mesh, P())
+            return psh, tsh, csh, possh
+
+        e_psh, e_tsh, e_csh, e_possh = shardings(self.edge_mesh, e_caches)
+        edge_lowered = jax.jit(
+            edge_step, in_shardings=(e_psh, e_tsh, e_csh, e_possh),
+            out_shardings=(None, None, None, e_csh),
+            donate_argnums=(2,)).lower(params, token, e_caches, pos)
+
+        c_psh, c_tsh, c_csh, c_possh = shardings(self.cloud_mesh, c_caches)
+        upload_sh = jax.tree.map(
+            lambda l: NamedSharding(self.cloud_mesh,
+                                    shardlib.input_pspec(l, self.cloud_mesh,
+                                                         batch)), upload)
+        cloud_lowered = jax.jit(
+            cloud_step, in_shardings=(c_psh, upload_sh, c_csh, c_possh),
+            out_shardings=(None, c_csh),
+            donate_argnums=(2,)).lower(params, upload, c_caches, pos)
+
+        wire = packet_bytes(upload)
+        return edge_lowered, cloud_lowered, {"wire_bytes_per_token": wire}
+
+    # -- live serving (small models / tests) --------------------------------
+    def build(self, params_edge: Pytree, params_cloud: Pytree):
+        co = self.collm
+        self._edge = jax.jit(co.edge_step)
+        self._cloud = jax.jit(co.cloud_step)
+        self._pe, self._pc = params_edge, params_cloud
+
+    def decode(self, prompt: jax.Array, max_new: int, max_seq: int = 256):
+        """Single-stream decode across the two tiers (device_put = DCN)."""
+        co = self.collm
+        edge_dev = self.edge_mesh.devices.flat[0]
+        cloud_dev = self.cloud_mesh.devices.flat[0]
+        e_caches = co.init_edge_cache(1, max_seq)
+        c_caches = co.init_cloud_cache(1, max_seq)
+        _, h1, e_caches = co.edge_prefill(self._pe, {"tokens": prompt},
+                                          e_caches)
+        h1q = quantize(h1, self.ccfg.wire_format)
+        h1q = jax.device_put(h1q, cloud_dev)           # prompt upload (DCN)
+        logits, c_caches = co.cloud_prefill(self._pc,
+                                            dequantize(h1q), c_caches)
+        tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+        toks = [int(tok[0])]
+        wire = 0
+        pos = prompt.shape[1]
+        for _ in range(max_new - 1):
+            out = self._edge(self._pe, tok[:, None], e_caches,
+                             jnp.asarray(pos, jnp.int32))
+            e_caches = out.caches
+            # parallel upload: dispatch the transfer, edge continues
+            pkt = jax.device_put(out.upload, cloud_dev)
+            wire += packet_bytes(out.upload)
+            if bool(out.exited[0]):
+                tok = out.token
+            else:
+                logits, c_caches = self._cloud(self._pc, pkt, c_caches,
+                                               jnp.asarray(pos, jnp.int32))
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            toks.append(int(tok[0]))
+            pos += 1
+        return toks, {"wire_bytes": wire}

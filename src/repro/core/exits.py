@@ -1,0 +1,52 @@
+"""Early-exit confidence logic (paper §4.1, Algorithm 1 lines 7-21).
+
+Confidence = probability of the most likely token at an exit head's softmax
+(paper Table 1).  A token exits at the FIRST exit whose confidence >= theta;
+otherwise the cloud completes inference.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ExitDecision(NamedTuple):
+    token: jax.Array        # (B,) argmax token at this exit
+    confidence: jax.Array   # (B,) max softmax probability
+    logits: jax.Array       # (B, V)
+
+
+def evaluate_exit(logits: jax.Array) -> ExitDecision:
+    """logits: (B, V) (or (B,1,V) squeezed) -> ExitDecision."""
+    if logits.ndim == 3:
+        logits = logits[:, -1]
+    lf = logits.astype(jnp.float32)
+    # max softmax prob via logsumexp — numerically identical to
+    # softmax(logits).max() but never materializes the (B,V) softmax twice.
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    mx = jnp.max(lf, axis=-1)
+    conf = jnp.exp(mx - lse)
+    token = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    return ExitDecision(token=token, confidence=conf, logits=lf)
+
+
+def first_confident_exit(decisions: Dict[int, ExitDecision], theta: float
+                         ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Combine per-exit decisions (ordered by layer).
+
+    Returns (token, exited_mask, exit_index) where exit_index is the index of
+    the chosen exit (len(decisions) == needs cloud)."""
+    layers = sorted(decisions)
+    b = decisions[layers[0]].token.shape[0]
+    token = jnp.zeros((b,), jnp.int32)
+    exited = jnp.zeros((b,), bool)
+    exit_idx = jnp.full((b,), len(layers), jnp.int32)
+    for i, l in enumerate(layers):
+        d = decisions[l]
+        take = (~exited) & (d.confidence >= theta)
+        token = jnp.where(take, d.token, token)
+        exit_idx = jnp.where(take, i, exit_idx)
+        exited = exited | take
+    return token, exited, exit_idx

@@ -1,0 +1,95 @@
+"""Edge<->cloud transport: wire formats and quantization (paper §4.3).
+
+The paper uploads hidden states in float16 (validated range ±65504).  We
+implement fp16 (paper-faithful) plus an int8 per-row-scaled format
+(beyond-paper: 2x fewer bytes, evaluated in EXPERIMENTS.md §Perf).
+
+For SSM/hybrid architectures the packet carries the recurrent state
+snapshots at the partition boundary in addition to the token activation
+(see DESIGN.md §4) — the cloud cannot reconstruct them from a single
+token's hidden state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+FORMATS = ("float32", "float16", "int8")
+
+
+def quantize(x: jax.Array, fmt: str) -> Dict[str, jax.Array]:
+    if fmt == "float32":
+        return {"data": x.astype(jnp.float32)}
+    if fmt == "float16":
+        return {"data": x.astype(jnp.float16)}
+    if fmt == "int8":
+        xf = x.astype(jnp.float32)
+        scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+        return {"data": q, "scale": scale}
+    raise ValueError(fmt)
+
+
+def dequantize(packet: Dict[str, jax.Array], dtype=jnp.float32) -> jax.Array:
+    data = packet["data"]
+    if data.dtype == jnp.int8:
+        return (data.astype(jnp.float32) * packet["scale"]).astype(dtype)
+    return data.astype(dtype)
+
+
+def packet_bytes(packet: Pytree) -> int:
+    """Wire size of a (possibly nested) packet in bytes."""
+    leaves = jax.tree.leaves(packet)
+    return int(sum(l.size * l.dtype.itemsize for l in leaves))
+
+
+def quantize_tree(tree: Pytree, fmt: str) -> Pytree:
+    """Quantize every array leaf of a state snapshot."""
+    return jax.tree.map(lambda x: quantize(x, fmt), tree)
+
+
+def dequantize_tree(tree: Pytree, dtype=jnp.float32) -> Pytree:
+    is_packet = lambda t: isinstance(t, dict) and "data" in t
+    return jax.tree.map(lambda p: dequantize(p, dtype), tree,
+                        is_leaf=is_packet)
+
+
+@dataclasses.dataclass
+class StatePacket:
+    """What crosses the edge->cloud boundary for one upload (paper fig 3
+    step 3): the l_ee1 token activation, and (SSM/hybrid only) boundary
+    recurrent-state snapshots."""
+    hidden: Dict[str, jax.Array]                   # quantized (B,1,d)
+    states: Optional[Pytree] = None                # quantized recurrent states
+    pos: Optional[jax.Array] = None                # token position
+
+    def nbytes(self) -> int:
+        n = packet_bytes(self.hidden)
+        if self.states is not None:
+            n += packet_bytes(self.states)
+        if self.pos is not None:
+            n += 4
+        return n
+
+
+def make_packet(hidden: jax.Array, fmt: str, *, states: Pytree = None,
+                pos: jax.Array = None) -> StatePacket:
+    return StatePacket(
+        hidden=quantize(hidden, fmt),
+        states=quantize_tree(states, fmt) if states is not None else None,
+        pos=pos,
+    )
+
+
+def open_packet(pkt: StatePacket, dtype=jnp.float32
+                ) -> Tuple[jax.Array, Optional[Pytree]]:
+    hidden = dequantize(pkt.hidden, dtype)
+    states = (dequantize_tree(pkt.states, dtype)
+              if pkt.states is not None else None)
+    return hidden, states

@@ -1,0 +1,103 @@
+"""GQA flash-decode attention — Pallas TPU kernel.
+
+One new query token attends over a long (possibly ring-buffered) KV cache:
+the cloud tier's per-token hot loop at decode_32k/long_500k shapes.  KV is
+streamed HBM->VMEM in (block_s, d) tiles; online-softmax statistics live in
+VMEM scratch; the (G, d) output tile is written once at the last S tile.
+
+Grid: (B, KV_heads, S/block_s) — S minormost (sequential), so scratch
+carries (acc, m, l) across KV tiles.  The G = H/KV query heads of one KV
+group ride together through the MXU: (G, d) @ (d, block_s).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+                        acc_scr, m_scr, l_scr, *, n_s: int, window: int,
+                        scale: float):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (bs, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (bs, d)
+    pos = pos_ref[0]                               # (bs,)
+    cur = cur_ref[0]
+
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= cur)
+    if window:
+        valid &= (cur - pos) < window
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+
+    m_old = m_scr[...]                             # (G,)
+    m_new = jnp.maximum(m_old, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.exp(m_old - m_new)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+
+    @pl.when(si == n_s - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "window", "interpret"))
+def decode_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                       pos_ids: jax.Array, cur_pos: jax.Array, *,
+                       block_s: int = 512, window: int = 0,
+                       interpret: bool = True) -> jax.Array:
+    """q: (B,H,d); k/v: (B,S,KV,d); pos_ids: (B,S); cur_pos: () int32."""
+    b, h, d = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    block_s = min(block_s, s)
+    assert s % block_s == 0
+    n_s = s // block_s
+    qg = q.reshape(b, kvh, g, d)
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32)[None], (1,))
+
+    kernel = functools.partial(_decode_attn_kernel, n_s=n_s, window=window,
+                               scale=1.0 / math.sqrt(d))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kvh, n_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s, 1, d), lambda bi, ki, si: (bi, si, ki, 0)),
+            pl.BlockSpec((1, block_s), lambda bi, ki, si: (bi, si)),
+            pl.BlockSpec((1,), lambda bi, ki, si: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, ki, si: (bi, ki, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v, pos_ids, cur)
+    return out.reshape(b, h, d)

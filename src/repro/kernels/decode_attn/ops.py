@@ -1,0 +1,26 @@
+"""jit'd public wrapper for GQA flash-decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attn.kernel import decode_attn_pallas
+from repro.kernels.decode_attn.ref import decode_attn_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 pos_ids: jax.Array, cur_pos, *, window: int = 0,
+                 block_s: int = 512, interpret: bool = None,
+                 use_kernel: bool = True) -> jax.Array:
+    """q: (B,H,d) one new token; k/v: (B,S,KV,d) ring cache -> (B,H,d)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    s = k.shape[1]
+    bs = min(block_s, s)
+    if not use_kernel or s % bs:
+        return decode_attn_ref(q, k, v, pos_ids, cur_pos, window=window)
+    return decode_attn_pallas(q, k, v, pos_ids, cur_pos, block_s=bs,
+                              window=window, interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for GQA flash-decode attention over a ring KV cache."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                    pos_ids: jax.Array, cur_pos: jax.Array,
+                    window: int = 0) -> jax.Array:
+    """q: (B,H,d); k/v: (B,S,KV,d); pos_ids: (B,S) (-1 = empty slot);
+    cur_pos: scalar int.  Returns (B,H,d)."""
+    b, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    valid = (pos_ids >= 0) & (pos_ids <= cur_pos)
+    if window:
+        valid &= (cur_pos - pos_ids) < window
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

@@ -1,0 +1,35 @@
+"""jit'd public wrapper for the fused exit-head confidence kernel.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU set
+``interpret=False`` (default resolves from the backend)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.exit_head.kernel import exit_head_pallas
+from repro.kernels.exit_head.ref import exit_head_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def exit_confidence(hidden: jax.Array, weight: jax.Array,
+                    norm_scale: jax.Array, *, block_b: int = 8,
+                    block_v: int = 512, interpret: bool = None,
+                    use_kernel: bool = True):
+    """(B,d) hidden + (V,d) unembedding -> (confidence, token, logsumexp).
+
+    Falls back to the jnp oracle for shapes the kernel's tiling cannot
+    cover evenly (the oracle IS the reference semantics)."""
+    b, d = hidden.shape
+    v = weight.shape[0]
+    if interpret is None:
+        interpret = _default_interpret()
+    bb = min(block_b, b)
+    bv = min(block_v, v)
+    if not use_kernel or b % bb or v % bv:
+        return exit_head_ref(hidden, weight, norm_scale)
+    return exit_head_pallas(hidden, weight, norm_scale, block_b=bb,
+                            block_v=bv, interpret=interpret)

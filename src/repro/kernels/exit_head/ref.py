@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused early-exit confidence head."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def exit_head_ref(hidden: jax.Array, weight: jax.Array, norm_scale: jax.Array,
+                  eps: float = 1e-5) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """hidden: (B, d); weight: (V, d); norm_scale: (d,).
+
+    Returns (confidence (B,), token (B,), logsumexp (B,)) of the exit head:
+    rms-norm -> unembed -> max-softmax-prob + argmax."""
+    h = hidden.astype(jnp.float32)
+    var = jnp.mean(jnp.square(h), axis=-1, keepdims=True)
+    hn = h * jax.lax.rsqrt(var + eps) * (1.0 + norm_scale.astype(jnp.float32))
+    logits = hn @ weight.astype(jnp.float32).T           # (B, V)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    mx = jnp.max(logits, axis=-1)
+    conf = jnp.exp(mx - lse)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return conf, tok, lse

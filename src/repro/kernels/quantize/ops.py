@@ -1,0 +1,26 @@
+"""jit'd public wrapper for the int8 transport quantizer."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.quantize.kernel import quantize_int8_pallas
+from repro.kernels.quantize.ref import dequantize_int8_ref, quantize_int8_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def quantize_int8(x: jax.Array, *, block_n: int = 256,
+                  interpret: bool = None, use_kernel: bool = True):
+    """(N,d) -> (int8 payload, fp32 per-row scale)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    n = x.shape[0]
+    bn = min(block_n, n)
+    if not use_kernel or n % bn:
+        return quantize_int8_ref(x)
+    return quantize_int8_pallas(x, block_n=bn, interpret=interpret)
+
+
+dequantize_int8 = dequantize_int8_ref

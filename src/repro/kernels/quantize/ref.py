@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the transport quantizer (per-row int8 + fp16)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8_ref(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (N, d) -> (q int8 (N,d), scale fp32 (N,1))."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale

@@ -1,0 +1,37 @@
+"""Production mesh construction (TPU v5e target).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state — ``jax.make_mesh`` is only called by launchers (dryrun.py sets
+XLA_FLAGS for 512 host devices *before* any jax import)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1):
+    """Tiny mesh over whatever devices exist (tests)."""
+    n = min(n_devices, len(jax.devices()))
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0:
+            model = m
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def pod_submeshes(mesh):
+    """Split a multi-pod mesh into per-pod ("data","model") meshes — the
+    two-tier (edge pod / cloud pod) CE-CoLLM deployment."""
+    import numpy as np
+    from jax.sharding import Mesh
+    devs = np.asarray(mesh.devices)
+    assert "pod" in mesh.axis_names and devs.shape[0] >= 2
+    edge = Mesh(devs[0], ("data", "model"))
+    cloud = Mesh(devs[1], ("data", "model"))
+    return edge, cloud

@@ -1,0 +1,295 @@
+"""Role-based sharding policy for the production meshes.
+
+Rules (DESIGN.md §5):
+  * params — tensor-parallel on heads/d_ff/experts/vocab over ``model``;
+    optional FSDP over ``data`` (and ``pod``) for storage of large models.
+    Stacked segment params never shard the leading layer axis.
+  * batch tensors — leading batch dim over ``("pod","data")``.
+  * decode caches — batch over ``("pod","data")``; KV sequence over
+    ``model``; when batch is unshardable (long_500k B=1) the sequence dim
+    takes ``("data","model")`` (sequence-parallel decode attention).
+  * activations — residual stream constrained to sequence-parallel
+    ``(batch, "model", None)`` between blocks; logits vocab-sharded over
+    ``model`` (keeps (B,S,V) exit/main logits on-chip).
+
+Every assignment is divisibility-checked; anything that does not divide
+evenly is replicated on that axis.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is not None and dim % _axis_size(mesh, axes) == 0 \
+        and _axis_size(mesh, axes) > 1
+
+
+def batch_axes(mesh: Mesh, b: int):
+    """Largest prefix of ("pod","data") that divides the batch."""
+    cands = [ax for ax in ("pod", "data") if ax in mesh.axis_names]
+    for trial in (tuple(cands), ("data",), None):
+        if trial is None:
+            return None
+        if b % _axis_size(mesh, trial) == 0:
+            return trial
+    return None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "idx"):
+            names.append(str(p.idx))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return tuple(names)
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+_COL_PARALLEL = {"wq", "wk", "wv", "w_gate", "w_up", "w1", "ffn_up", "w_in",
+                 "vis_proj"}          # shard OUTPUT dim over model
+_ROW_PARALLEL = {"wo", "w_down", "w2", "ffn_down", "w_out"}  # shard INPUT dim
+_EMBED = {"embed", "lm_head"}
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, fsdp: bool) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    in_segment = "segments" in names or "layers" in names
+    stack = 1 if in_segment and leaf.ndim >= 1 else 0   # leading layer axis
+    nd = leaf.ndim
+    spec = [None] * nd
+    fsdp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names) \
+        if fsdp else None
+
+    def put(dim, axes):
+        if 0 <= dim < nd and spec[dim] is None and _fits(leaf.shape[dim],
+                                                         mesh, axes):
+            spec[dim] = axes if isinstance(axes, str) else tuple(axes)
+            return True
+        return False
+
+    if nd - stack < 2:
+        return P()                      # norms / biases replicated
+    if name in _EMBED:
+        put(0, "model")
+        if fsdp_axes:
+            put(1, fsdp_axes)
+        return P(*spec)
+    if name in _COL_PARALLEL:
+        put(nd - 1, "model")
+        if fsdp_axes:
+            put(nd - 2, fsdp_axes)
+        return P(*spec)
+    if name in _ROW_PARALLEL:
+        put(nd - 2, "model")
+        if fsdp_axes:
+            put(nd - 1, fsdp_axes)
+        return P(*spec)
+    if name == "router":
+        return P()
+    # fallback: greedy — model on largest shardable dim, fsdp on next
+    order = sorted(range(stack, nd), key=lambda i: -leaf.shape[i])
+    for i in order:
+        if put(i, "model"):
+            break
+    if fsdp_axes:
+        for i in order:
+            if put(i, fsdp_axes):
+                break
+    return P(*spec)
+
+
+# --------------------------------------------------------------------------
+# cache specs
+# --------------------------------------------------------------------------
+def cache_pspec(path, leaf, mesh: Mesh, *, batch: int) -> P:
+    """Cache layouts (leading stacked-layer axis L for scanned segments):
+       k/v:  (L?, B, S, KV, hd)   pos: (L?, B, S)
+       gla S:(L?, B, H, dk, dv)   n: (L?, B, H, dk)   m: (L?, B, H)
+       conv: (L?, B, W, di)       slstm c/n/m/h: (L?, B, H, hd)
+    """
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    nd = leaf.ndim
+    spec = [None] * nd
+    baxes = batch_axes(mesh, batch)
+
+    def put(dim, axes):
+        if axes is None or not (0 <= dim < nd) or spec[dim] is not None:
+            return False
+        if _fits(leaf.shape[dim], mesh, axes):
+            spec[dim] = axes if isinstance(axes, str) else tuple(axes)
+            return True
+        return False
+
+    # locate dims from the right (robust to the optional stack axis)
+    if name in ("k", "v"):
+        bdim, sdim = nd - 4, nd - 3
+    elif name == "pos":
+        bdim, sdim = nd - 2, nd - 1
+    elif name == "S":
+        bdim, sdim = nd - 4, None
+    elif name in ("n", "conv", "c", "h"):
+        bdim, sdim = nd - 3, None
+    elif name == "m":
+        bdim, sdim = nd - 2 if nd >= 2 else 0, None
+    else:
+        bdim, sdim = None, None
+
+    if bdim is not None and leaf.shape[bdim] == batch and baxes is not None:
+        put(bdim, baxes)
+    if sdim is not None:
+        # KV sequence dim: model axis, plus data/pod when batch unsharded
+        if baxes is None:
+            for trial in (("pod", "data", "model"), ("data", "model"),
+                          ("model",)):
+                axes = tuple(a for a in trial if a in mesh.axis_names)
+                if put(sdim, axes):
+                    break
+        else:
+            put(sdim, "model")
+    elif name in ("S", "n", "conv", "c", "h", "m"):
+        # recurrent states: shard the largest non-batch dim over model
+        order = sorted(range(nd), key=lambda i: -leaf.shape[i])
+        for i in order:
+            if i == bdim:
+                continue
+            if put(i, "model"):
+                break
+    return P(*spec)
+
+
+# --------------------------------------------------------------------------
+# batch (input) specs
+# --------------------------------------------------------------------------
+def input_pspec(leaf, mesh: Mesh, batch: int) -> P:
+    baxes = batch_axes(mesh, batch)
+    if leaf.ndim == 0 or baxes is None or leaf.shape[0] != batch:
+        return P()
+    return P(baxes, *([None] * (leaf.ndim - 1)))
+
+
+# --------------------------------------------------------------------------
+# activation-constraint policy (sequence parallelism + vocab sharding)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class ShardingPolicy:
+    mesh: Mesh
+    batch: int
+    seq_parallel: bool = True
+    vocab_shard: bool = True
+
+    def _ns(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def residual(self, x: jax.Array) -> jax.Array:
+        """(B,S,d) residual between blocks -> sequence-parallel."""
+        if not self.seq_parallel or x.ndim != 3 or x.shape[1] < 2:
+            return x
+        baxes = batch_axes(self.mesh, x.shape[0])
+        if not _fits(x.shape[1], self.mesh, "model"):
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, self._ns(P(baxes, "model", None)))
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        """(B,S,V) logits -> vocab-sharded over model."""
+        if not self.vocab_shard or x.ndim != 3:
+            return x
+        if not _fits(x.shape[-1], self.mesh, "model"):
+            return x
+        baxes = batch_axes(self.mesh, x.shape[0])
+        return jax.lax.with_sharding_constraint(
+            x, self._ns(P(baxes, None, "model")))
+
+
+_ACTIVE: Optional[ShardingPolicy] = None
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    global _ACTIVE
+    prev, _ACTIVE = _ACTIVE, policy
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _ACTIVE
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    return _ACTIVE.residual(x) if _ACTIVE is not None else x
+
+
+def constrain_logits(x: jax.Array) -> jax.Array:
+    return _ACTIVE.logits(x) if _ACTIVE is not None else x
+
+
+# --------------------------------------------------------------------------
+# pytree -> NamedSharding trees
+# --------------------------------------------------------------------------
+def params_shardings(specs: Pytree, mesh: Mesh, *, fsdp: bool) -> Pytree:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, param_pspec(p, l, mesh, fsdp=fsdp)),
+        specs)
+
+
+def cache_shardings(specs: Pytree, mesh: Mesh, *, batch: int) -> Pytree:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: NamedSharding(mesh, cache_pspec(p, l, mesh, batch=batch)),
+        specs)
+
+
+def batch_shardings(specs: Pytree, mesh: Mesh, *, batch: int) -> Pytree:
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, input_pspec(l, mesh, batch)), specs)
+
+
+def replicated(specs: Pytree, mesh: Mesh) -> Pytree:
+    return jax.tree.map(lambda l: NamedSharding(mesh, P()), specs)
+
+
+def estimate_param_bytes_per_device(specs: Pytree, mesh: Mesh,
+                                    fsdp: bool) -> float:
+    total = 0.0
+    def visit(path, leaf):
+        nonlocal total
+        spec = param_pspec(path, leaf, mesh, fsdp=fsdp)
+        shards = 1
+        for s in spec:
+            if s:
+                shards *= _axis_size(mesh, s)
+        total += leaf.size * leaf.dtype.itemsize / shards
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, specs)
+    return total

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch xlstm-350m --smoke \
+        --steps 50 --batch 4 --seq 64 --ckpt artifacts/ckpt/xlstm
+
+``--smoke`` trains the reduced config on the local device; without it the
+full config is used (requires a real TPU mesh — on CPU use --smoke)."""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke_config
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models.registry import build_model
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optim import AdamWConfig, init_adamw
+from repro.training.train_step import make_train_step
+
+
+def add_modality(batch, cfg, rng):
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(
+            rng, (batch["tokens"].shape[0], cfg.encoder_seq, cfg.d_model)) * 0.1
+    if cfg.vision_tokens:
+        batch["patches"] = jax.random.normal(
+            rng, (batch["tokens"].shape[0], cfg.vision_tokens,
+                  cfg.d_model)) * 0.1
+    return batch
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="ee-llm-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    print(f"training {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"exits={cfg.exit_layers}")
+    model = build_model(cfg)
+    rng = jax.random.PRNGKey(0)
+    params = model.init(rng)
+    n_params = sum(l.size for l in jax.tree.leaves(params))
+    print(f"params: {n_params/1e6:.1f}M")
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    opt = init_adamw(params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    data = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      batch_size=args.batch, kind="mixed"))
+    t0 = time.time()
+    for i, b in enumerate(data.batches(args.steps)):
+        batch = add_modality({k: jnp.asarray(v) for k, v in b.items()},
+                             cfg, rng)
+        params, opt, mets = step(params, opt, batch)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            exits = {k: round(float(v), 3) for k, v in mets.items()
+                     if k.startswith("exit")}
+            print(f"step {i:4d} loss={float(mets['loss']):.4f} "
+                  f"main={float(mets['main_loss']):.4f} {exits} "
+                  f"lr={float(mets['lr']):.2e} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, extra={"arch": cfg.name,
+                                                  "steps": args.steps})
+        print(f"saved checkpoint to {args.ckpt}.npz")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,363 @@
+"""Multi-head attention: GQA, optional bias, RoPE, sliding window,
+prefix-LM masks, cross-attention, chunked (flash-style) long-sequence path,
+banded path for sliding windows, and single-token decode with ring caches.
+
+Pure functions over explicit parameter pytrees.  The Pallas flash-decode
+kernel in ``repro.kernels.decode_attn`` mirrors ``decode_attention`` and is
+validated against it.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import apply_rope, dense_init, split_rngs
+
+Params = Dict[str, Any]
+
+_DIRECT_LIMIT = 1 << 22   # Sq*Sk above this -> chunked path
+_Q_CHUNK = 512
+_KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_attention(rng: jax.Array, cfg: ModelConfig, *, cross: bool = False,
+                   dtype=jnp.float32) -> Params:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    rngs = split_rngs(rng, 4)
+    p: Params = {
+        "wq": dense_init(rngs[0], d, h * hd, dtype),
+        "wk": dense_init(rngs[1], d, kv * hd, dtype),
+        "wv": dense_init(rngs[2], d, kv * hd, dtype),
+        "wo": dense_init(rngs[3], h * hd, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    del cross  # same parameter structure; kv source differs at call time
+    return p
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 kv_src: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    hd, h, kv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", kv_src, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", kv_src, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(*q.shape[:2], h, hd)
+    k = k.reshape(*k.shape[:2], kv, hd)
+    v = v.reshape(*v.shape[:2], kv, hd)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Masked softmax attention cores
+# ---------------------------------------------------------------------------
+def _mask_logits(logits: jax.Array, qpos: jax.Array, kpos: jax.Array,
+                 causal: bool, window: int, prefix_len: int) -> jax.Array:
+    """logits: (..., Sq, Sk); qpos: (Sq,), kpos: (Sk,)."""
+    ok = jnp.ones(logits.shape[-2:], bool)
+    if causal:
+        allowed = kpos[None, :] <= qpos[:, None]
+        if prefix_len:
+            allowed = allowed | (kpos[None, :] < prefix_len)
+        ok &= allowed
+    if window:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    return jnp.where(ok, logits, -jnp.inf)
+
+
+def _direct_attention(q, k, v, qpos, kpos, *, causal, window, prefix_len,
+                      scale) -> jax.Array:
+    """q: (B,Sq,H,D), k/v: (B,Sk,KV,D) -> (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = _mask_logits(logits, qpos, kpos, causal, window, prefix_len)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)          # fully-masked rows
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, d).astype(q.dtype)
+
+
+def _chunked_attention(q, k, v, qpos, kpos, *, causal, window, prefix_len,
+                       scale, q_chunk=_Q_CHUNK, kv_chunk=_KV_CHUNK) -> jax.Array:
+    """Two-level online-softmax scan; memory O(q_chunk * kv_chunk)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    q_chunk = math.gcd(sq, q_chunk)
+    kv_chunk = math.gcd(sk, kv_chunk)
+    nq, nk = sq // q_chunk, sk // kv_chunk
+
+    qg = q.reshape(b, nq, q_chunk, kvh, g, d)
+    qpos_c = qpos.reshape(nq, q_chunk)
+    kc = k.reshape(b, nk, kv_chunk, kvh, d)
+    vc = v.reshape(b, nk, kv_chunk, kvh, d)
+    kpos_c = kpos.reshape(nk, kv_chunk)
+
+    # flash-style memory discipline: checkpoint both scan bodies so the
+    # backward pass RECOMPUTES the per-chunk probability tiles instead of
+    # saving the full O(S^2) f32 attention matrix (measured 16 GB/device
+    # per layer for command-r train_4k — EXPERIMENTS.md §Perf iteration 2).
+    @jax.checkpoint
+    def q_body(_, qi):
+        qblk, qp = qi                             # (b,qc,kvh,g,d), (qc,)
+        acc0 = jnp.zeros((b, kvh, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, kvh, g, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+
+        @jax.checkpoint
+        def kv_body(carry, ki):
+            acc, m, l = carry
+            kblk, vblk, kp = ki
+            logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kblk,
+                                preferred_element_type=jnp.float32) * scale
+            logits = _mask_logits(logits, qp, kp, causal, window, prefix_len)
+            m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(logits - m_safe[..., None])
+            p = jnp.where(jnp.isfinite(logits), p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            l = l * corr + jnp.sum(p, axis=-1)
+            return (acc, m_new, l), None
+
+        (acc, _, l), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0),
+            (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), kpos_c))
+        out = acc / jnp.maximum(l[..., None], 1e-30)   # (b,kvh,g,qc,d)
+        return None, out
+
+    _, outs = jax.lax.scan(q_body, None,
+                           (jnp.moveaxis(qg, 1, 0), qpos_c))
+    # outs: (nq, b, kvh, g, qc, d)
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def _banded_attention(q, k, v, qpos, kpos, *, window, scale,
+                      q_chunk=_Q_CHUNK) -> jax.Array:
+    """Sliding-window causal attention with exact O(S*window) cost: each query
+    chunk attends only to the kv band [chunk_start - window, chunk_end)."""
+    b, sq, h, d = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q_chunk = math.gcd(sq, q_chunk)
+    nq = sq // q_chunk
+    band = window + q_chunk
+    # pad kv on the left so every band slice is in range
+    pad = band
+    kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+    kpos_p = jnp.pad(kpos, (pad, 0), constant_values=-10 ** 9)
+
+    qg = q.reshape(b, nq, q_chunk, kvh, g, d)
+    qpos_c = qpos.reshape(nq, q_chunk)
+    starts = jnp.arange(nq) * q_chunk          # band end = start + q_chunk
+
+    @jax.checkpoint
+    def body(_, xs):
+        qblk, qp, start = xs
+        kb = jax.lax.dynamic_slice_in_dim(kp, start + pad + q_chunk - band, band, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start + pad + q_chunk - band, band, 1)
+        kpb = jax.lax.dynamic_slice_in_dim(kpos_p, start + pad + q_chunk - band,
+                                           band, 0)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qblk, kb,
+                            preferred_element_type=jnp.float32) * scale
+        logits = _mask_logits(logits, qp, kpb, True, window, 0)
+        w = jax.nn.softmax(logits, axis=-1)
+        w = jnp.where(jnp.isnan(w), 0.0, w)
+        out = jnp.einsum("bkgqs,bskd->bkgqd", w.astype(vb.dtype), vb,
+                         preferred_element_type=jnp.float32)
+        return None, out
+
+    _, outs = jax.lax.scan(body, None,
+                           (jnp.moveaxis(qg, 1, 0), qpos_c, starts))
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+def init_attn_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+                    window: int = 0, kv_len: Optional[int] = None,
+                    dtype=jnp.float32) -> Params:
+    s = kv_len if kv_len is not None else (min(max_seq, window) if window
+                                           else max_seq)
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, s, kvh, hd), dtype),
+        "v": jnp.zeros((batch, s, kvh, hd), dtype),
+        "pos": jnp.full((batch, s), -1, jnp.int32),
+    }
+
+
+def _cache_write(cache: Params, k: jax.Array, v: jax.Array,
+                 positions: jax.Array, offset) -> Params:
+    """Write S new kv entries at ring positions (offset..offset+S-1) % size."""
+    size = cache["k"].shape[1]
+    s = k.shape[1]
+    if s == size and isinstance(offset, int) and offset == 0:
+        pos = jnp.broadcast_to(positions[None, :], cache["pos"].shape)
+        return {"k": k.astype(cache["k"].dtype),
+                "v": v.astype(cache["v"].dtype), "pos": pos.astype(jnp.int32)}
+    if s > size:
+        # only the last `size` entries survive in the ring
+        k, v, positions = k[:, s - size:], v[:, s - size:], positions[s - size:]
+        s = size
+    idx = (positions % size).astype(jnp.int32)
+    ck = cache["k"].at[:, idx].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))
+    cp = cache["pos"].at[:, idx].set(
+        jnp.broadcast_to(positions[None, :], (k.shape[0], s)).astype(jnp.int32))
+    return {"k": ck, "v": cv, "pos": cp}
+
+
+# ---------------------------------------------------------------------------
+# Public forwards
+# ---------------------------------------------------------------------------
+def attention_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                      positions: Optional[jax.Array] = None,
+                      enc_out: Optional[jax.Array] = None,
+                      causal: bool = True,
+                      window: int = 0,
+                      prefix_len: int = 0,
+                      use_rope: bool = True,
+                      cache: Optional[Params] = None,
+                      cache_offset: int = 0) -> Tuple[jax.Array, Optional[Params]]:
+    """Full-sequence attention (training / prefill).
+
+    ``enc_out`` switches to cross-attention (no mask, no rope on kv).
+    Returns (output, updated_cache_or_None)."""
+    b, s, _ = x.shape
+    kv_src = enc_out if enc_out is not None else x
+    sk = kv_src.shape[1]
+    q, k, v = _project_qkv(params, cfg, x, kv_src)
+    if positions is None:
+        positions = jnp.arange(s)
+    kpos = jnp.arange(sk) if enc_out is not None else positions
+    if use_rope and enc_out is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(cfg.resolved_head_dim)
+    cross = enc_out is not None
+
+    if cross:
+        out = (_direct_attention if s * sk <= _DIRECT_LIMIT else
+               _chunked_attention)(q, k, v, positions, kpos, causal=False,
+                                   window=0, prefix_len=0, scale=scale)
+    elif window and s > window:
+        out = _banded_attention(q, k, v, positions, kpos, window=window,
+                                scale=scale)
+    elif s * sk <= _DIRECT_LIMIT:
+        out = _direct_attention(q, k, v, positions, kpos, causal=causal,
+                                window=window, prefix_len=prefix_len,
+                                scale=scale)
+    else:
+        out = _chunked_attention(q, k, v, positions, kpos, causal=causal,
+                                 window=window, prefix_len=prefix_len,
+                                 scale=scale)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = _cache_write(cache, k, v, kpos, cache_offset)
+    y = jnp.einsum("bse,ed->bsd", out.reshape(b, s, -1),
+                   params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def decode_attention(params: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Params, pos: jax.Array, *,
+                     window: int = 0, use_rope: bool = True,
+                     cross: bool = False,
+                     update_cache: bool = True) -> Tuple[jax.Array, Params]:
+    """Single-token decode.  x: (B,1,d); pos: scalar int32 current position.
+    For ``cross=True`` the cache holds precomputed encoder kv (no update)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(b, 1, h, hd)
+    if use_rope and not cross:
+        q = apply_rope(q, jnp.full((1,), pos), cfg.rope_theta)
+
+    if cross:
+        k, v, kpos = cache["k"], cache["v"], cache["pos"]
+        new_cache = cache
+    else:
+        knew = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype))
+        vnew = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype))
+        if "bk" in params:
+            knew = knew + params["bk"].astype(x.dtype)
+            vnew = vnew + params["bv"].astype(x.dtype)
+        knew = knew.reshape(b, 1, kvh, hd)
+        vnew = vnew.reshape(b, 1, kvh, hd)
+        if use_rope:
+            knew = apply_rope(knew, jnp.full((1,), pos), cfg.rope_theta)
+        if update_cache:
+            size = cache["k"].shape[1]
+            slot = (pos % size).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], knew.astype(cache["k"].dtype), slot, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vnew.astype(cache["v"].dtype), slot, axis=1)
+            cp = jax.lax.dynamic_update_slice_in_dim(
+                cache["pos"], jnp.full((b, 1), pos, jnp.int32), slot, axis=1)
+            cache = {"k": ck, "v": cv, "pos": cp}
+        k, v, kpos = cache["k"], cache["v"], cache["pos"]
+        new_cache = cache
+
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = kpos >= 0
+    if not cross:
+        valid &= kpos <= pos
+        if window:
+            valid &= (pos - kpos) < window
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def build_cross_cache(params: Params, cfg: ModelConfig,
+                      enc_out: jax.Array, dtype=None) -> Params:
+    """Precompute encoder kv for cross-attention decode."""
+    b, sk, _ = enc_out.shape
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    k = jnp.einsum("bsd,de->bse", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,de->bse", enc_out, params["wv"].astype(enc_out.dtype))
+    if "bk" in params:
+        k = k + params["bk"].astype(enc_out.dtype)
+        v = v + params["bv"].astype(enc_out.dtype)
+    dt = dtype or enc_out.dtype
+    return {"k": k.reshape(b, sk, kvh, hd).astype(dt),
+            "v": v.reshape(b, sk, kvh, hd).astype(dt),
+            "pos": jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32)[None], (b, sk))}

@@ -1,0 +1,231 @@
+"""Per-layer blocks with a uniform interface used by the stack assembler.
+
+Interface (kind in {dense, moe, mlstm, slstm, mamba2, shared_attn}):
+
+    init_block(rng, cfg, kind)                     -> params for ONE layer
+    block_forward(params, cfg, kind, x, ctx)       -> (x, aux, new_cache)
+    block_decode(params, cfg, kind, x, cache, ctx) -> (x, new_cache)
+    init_block_cache(cfg, kind, batch, meta)       -> cache for ONE layer
+
+``ctx`` carries positions / encoder output / layer meta (window, cross-attn)
+so stacked-scan callers can slice per-layer values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (DENSE, MAMBA2, MLSTM, MOE, SHARED_ATTN, SLSTM,
+                                ModelConfig)
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import xlstm
+from repro.models.attention import (attention_forward, build_cross_cache,
+                                    decode_attention, init_attn_cache)
+from repro.models.common import dense_init, layer_norm, rms_norm, split_rngs
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class BlockCtx:
+    positions: Optional[jax.Array] = None   # (S,) absolute positions
+    enc_out: Optional[jax.Array] = None     # encoder output (enc-dec only)
+    prefix_len: int = 0                     # VLM prefix-LM boundary
+    window: int = 0                         # sliding window for this layer
+    causal: bool = True
+    pos: Any = None                         # scalar decode position
+    max_seq: int = 0                        # cache capacity (decode)
+    cache_offset: int = 0                   # prefill write offset
+    dtype: Any = jnp.float32
+
+
+def _norm(x, params, cfg, key):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, params[key + "_scale"], params[key + "_bias"],
+                          cfg.norm_eps)
+    return rms_norm(x, params[key + "_scale"], cfg.norm_eps)
+
+
+def _init_norm(cfg, d, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"_scale": jnp.ones((d,), dtype), "_bias": jnp.zeros((d,), dtype)}
+    return {"_scale": jnp.zeros((d,), dtype)}
+
+
+def _mlp_init(rng, cfg, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    r = split_rngs(rng, 3)
+    if cfg.mlp_kind == "gelu":
+        return {"w1": dense_init(r[0], d, f, dtype),
+                "b1": jnp.zeros((f,), dtype),
+                "w2": dense_init(r[1], f, d, dtype),
+                "b2": jnp.zeros((d,), dtype)}
+    return {"w_gate": dense_init(r[0], d, f, dtype),
+            "w_up": dense_init(r[1], d, f, dtype),
+            "w_down": dense_init(r[2], f, d, dtype)}
+
+
+def _mlp(params: Params, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_kind == "gelu":
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, params["w1"].astype(x.dtype))
+                        + params["b1"].astype(x.dtype))
+        return jnp.einsum("bsf,fd->bsd", h, params["w2"].astype(x.dtype)) \
+            + params["b2"].astype(x.dtype)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", g * u, params["w_down"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_block(rng: jax.Array, cfg: ModelConfig, kind: str,
+               dtype=jnp.float32, with_cross: Optional[bool] = None) -> Params:
+    from repro.models.attention import init_attention
+    if with_cross is None:
+        with_cross = cfg.is_encdec
+    r = split_rngs(rng, 4)
+    if kind in (DENSE, SHARED_ATTN):
+        p: Params = {"attn": init_attention(r[0], cfg, dtype=dtype),
+                     "mlp": _mlp_init(r[1], cfg, dtype)}
+        for k, v in _init_norm(cfg, cfg.d_model, dtype).items():
+            p["ln1" + k] = v
+            p["ln2" + k] = v
+        if with_cross:
+            p["cross"] = init_attention(r[2], cfg, cross=True, dtype=dtype)
+            for k, v in _init_norm(cfg, cfg.d_model, dtype).items():
+                p["lnx" + k] = v
+        return p
+    if kind == MOE:
+        p = {"attn": init_attention(r[0], cfg, dtype=dtype),
+             "moe": moe_mod.init_moe(r[1], cfg, dtype)}
+        for k, v in _init_norm(cfg, cfg.d_model, dtype).items():
+            p["ln1" + k] = v
+            p["ln2" + k] = v
+        return p
+    if kind == MLSTM:
+        return xlstm.init_mlstm_block(r[0], cfg, dtype)
+    if kind == SLSTM:
+        return xlstm.init_slstm_block(r[0], cfg, dtype)
+    if kind == MAMBA2:
+        return m2.init_mamba2_block(r[0], cfg, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
+                     window: int, dtype=jnp.float32) -> Params:
+    if kind in (DENSE, SHARED_ATTN, MOE):
+        c: Params = {"self": init_attn_cache(cfg, batch, max_seq,
+                                             window=window, dtype=dtype)}
+        if cfg.is_encdec and kind != MOE:
+            c["cross"] = init_attn_cache(cfg, batch, cfg.encoder_seq,
+                                         kv_len=cfg.encoder_seq, dtype=dtype)
+        return c
+    if kind == MLSTM:
+        return xlstm.init_mlstm_cache(cfg, batch, dtype)
+    if kind == SLSTM:
+        return xlstm.init_slstm_cache(cfg, batch, dtype)
+    if kind == MAMBA2:
+        return m2.init_mamba2_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def block_forward(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
+                  ctx: BlockCtx, cache: Optional[Params] = None
+                  ) -> Tuple[jax.Array, jax.Array, Optional[Params]]:
+    """Returns (x, aux_loss, new_cache)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (DENSE, SHARED_ATTN, MOE):
+        h = _norm(x, params, cfg, "ln1")
+        self_cache = cache.get("self") if cache else None
+        att, new_self = attention_forward(
+            params["attn"], cfg, h, positions=ctx.positions,
+            causal=ctx.causal, window=ctx.window, prefix_len=ctx.prefix_len,
+            use_rope=cfg.use_rope, cache=self_cache,
+            cache_offset=ctx.cache_offset)
+        x = x + att
+        new_cache: Optional[Params] = None
+        if cache is not None:
+            new_cache = dict(cache)
+            new_cache["self"] = new_self
+        if "cross" in params and ctx.enc_out is not None:
+            hx = _norm(x, params, cfg, "lnx")
+            catt, _ = attention_forward(params["cross"], cfg, hx,
+                                        positions=ctx.positions,
+                                        enc_out=ctx.enc_out, causal=False,
+                                        use_rope=False)
+            x = x + catt
+            if cache is not None and "cross" in cache:
+                new_cache["cross"] = build_cross_cache(
+                    params["cross"], cfg, ctx.enc_out,
+                    dtype=cache["cross"]["k"].dtype)
+        h2 = _norm(x, params, cfg, "ln2")
+        if kind == MOE:
+            y, aux = moe_mod.moe_forward(params["moe"], cfg, h2)
+        else:
+            y = _mlp(params["mlp"], cfg, h2)
+        return x + y, aux, new_cache
+    if kind == MLSTM:
+        if cache is not None:
+            out, st = xlstm.mlstm_forward(params, cfg, x, state=cache,
+                                          return_state=True)
+            return out, aux, st
+        return xlstm.mlstm_forward(params, cfg, x), aux, None
+    if kind == SLSTM:
+        if cache is not None:
+            out, st = xlstm.slstm_forward(params, cfg, x, state=cache,
+                                          return_state=True)
+            return out, aux, st
+        return xlstm.slstm_forward(params, cfg, x), aux, None
+    if kind == MAMBA2:
+        if cache is not None:
+            out, st = m2.mamba2_forward(params, cfg, x, state=cache,
+                                        return_state=True)
+            return out, aux, st
+        return m2.mamba2_forward(params, cfg, x), aux, None
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# single-token decode
+# ---------------------------------------------------------------------------
+def block_decode(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
+                 cache: Params, ctx: BlockCtx) -> Tuple[jax.Array, Params]:
+    if kind in (DENSE, SHARED_ATTN, MOE):
+        h = _norm(x, params, cfg, "ln1")
+        att, new_self = decode_attention(params["attn"], cfg, h,
+                                         cache["self"], ctx.pos,
+                                         window=ctx.window,
+                                         use_rope=cfg.use_rope)
+        x = x + att
+        new_cache = dict(cache)
+        new_cache["self"] = new_self
+        if "cross" in params and "cross" in cache:
+            hx = _norm(x, params, cfg, "lnx")
+            catt, _ = decode_attention(params["cross"], cfg, hx,
+                                       cache["cross"], ctx.pos, cross=True,
+                                       use_rope=False)
+            x = x + catt
+        h2 = _norm(x, params, cfg, "ln2")
+        if kind == MOE:
+            y = moe_mod.moe_forward_decode(params["moe"], cfg, h2)
+        else:
+            y = _mlp(params["mlp"], cfg, h2)
+        return x + y, new_cache
+    if kind == MLSTM:
+        return xlstm.mlstm_decode(params, cfg, x, cache)
+    if kind == SLSTM:
+        return xlstm.slstm_decode(params, cfg, x, cache)
+    if kind == MAMBA2:
+        return m2.mamba2_decode(params, cfg, x, cache)
+    raise ValueError(kind)

@@ -1,0 +1,177 @@
+"""Gated linear attention core — the shared recurrence engine for the
+xLSTM mLSTM block and the Mamba2 (SSD) block.
+
+State recurrence (per batch, head):
+
+    S_t = exp(lf_t) * S_{t-1} + exp(li_t) * k_t v_t^T        (Dk x Dv matrix)
+    n_t = exp(lf_t) * n_{t-1} + exp(li_t) * k_t              (mLSTM normalizer)
+    y_t = q_t S_t            [/ max(|q_t n_t|, exp(-m_t)) when normalize]
+
+Three equivalent implementations:
+  * ``recurrent_gla``  — step-by-step lax.scan (oracle; also the decode rule)
+  * ``chunked_gla``    — chunk-parallel form: O(S/L) sequential steps with
+                         dense (L x L) intra-chunk attention on the MXU.
+                         This is the TPU adaptation of the paper-pool SSM
+                         kernels: HBM->VMEM chunk streaming, MXU matmuls.
+  * ``gla_decode_step``— single-token state update for serving.
+
+The mLSTM exponential input gate is unbounded, so the xLSTM stabilizer
+``m_t = max(lf_t + m_{t-1}, li_t)`` is threaded through all forms when
+``normalize=True`` (the normalizer cancels the scale).  Mamba2 gates are
+bounded (lf<=0, li=log dt), so the unstabilized path is used.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+State = Dict[str, jax.Array]
+
+
+def init_gla_state(batch: int, heads: int, dk: int, dv: int,
+                   dtype=jnp.float32) -> State:
+    return {
+        "S": jnp.zeros((batch, heads, dk, dv), dtype),
+        "n": jnp.zeros((batch, heads, dk), dtype),
+        "m": jnp.zeros((batch, heads), dtype),
+    }
+
+
+def _finalize(y_raw: jax.Array, n_dot: jax.Array, m_row: jax.Array,
+              normalize: bool) -> jax.Array:
+    if normalize:
+        denom = jnp.maximum(jnp.abs(n_dot), jnp.exp(-m_row))
+        return y_raw / denom[..., None]
+    return y_raw
+
+
+def recurrent_gla(q: jax.Array, k: jax.Array, v: jax.Array,
+                  lf: jax.Array, li: jax.Array, *, normalize: bool,
+                  state: Optional[State] = None) -> Tuple[jax.Array, State]:
+    """Oracle step-scan.  q,k: (B,H,S,Dk); v: (B,H,S,Dv); lf,li: (B,H,S)."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    st = state or init_gla_state(b, h, dk, dv, jnp.float32)
+
+    def step(carry, xs):
+        S, n, m = carry
+        qt, kt, vt, lft, lit = xs
+        if normalize:
+            m_new = jnp.maximum(lft + m, lit)
+            fscale = jnp.exp(lft + m - m_new)
+            iscale = jnp.exp(lit - m_new)
+        else:
+            m_new = m
+            fscale = jnp.exp(lft)
+            iscale = jnp.exp(lit)
+        S = fscale[..., None, None] * S + iscale[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = fscale[..., None] * n + iscale[..., None] * kt
+        y_raw = jnp.einsum("bhd,bhde->bhe", qt, S)
+        n_dot = jnp.einsum("bhd,bhd->bh", qt, n)
+        y = _finalize(y_raw, n_dot, m_new, normalize)
+        return (S, n, m_new), y
+
+    xs = tuple(jnp.moveaxis(a, 2, 0).astype(jnp.float32)
+               for a in (q, k, v)) + tuple(
+        jnp.moveaxis(a, 2, 0).astype(jnp.float32) for a in (lf, li))
+    (S, n, m), ys = jax.lax.scan(step, (st["S"].astype(jnp.float32),
+                                        st["n"].astype(jnp.float32),
+                                        st["m"].astype(jnp.float32)), xs)
+    y = jnp.moveaxis(ys, 0, 2).astype(q.dtype)     # (B,H,S,Dv)
+    return y, {"S": S, "n": n, "m": m}
+
+
+def chunked_gla(q: jax.Array, k: jax.Array, v: jax.Array,
+                lf: jax.Array, li: jax.Array, *, normalize: bool,
+                chunk: int = 256,
+                state: Optional[State] = None) -> Tuple[jax.Array, State]:
+    """Chunk-parallel form; exact (up to fp) match of ``recurrent_gla``."""
+    b, h, s, dk = q.shape
+    dv = v.shape[-1]
+    chunk = math.gcd(s, chunk)
+    nc = s // chunk
+    st = state or init_gla_state(b, h, dk, dv, jnp.float32)
+
+    def resh(a, d_last):
+        return jnp.moveaxis(
+            a.astype(jnp.float32).reshape(b, h, nc, chunk, *d_last), 2, 0)
+
+    qc, kc, vc = resh(q, (dk,)), resh(k, (dk,)), resh(v, (dv,))
+    lfc, lic = resh(lf, ()), resh(li, ())
+
+    neg_inf = jnp.float32(-1e30)
+
+    # backward recomputes the (L x L) intra-chunk gate/score matrices
+    # instead of saving them per chunk (same flash-style discipline as
+    # attention; EXPERIMENTS.md §Perf iteration 5 — zamba2 train).
+    @jax.checkpoint
+    def chunk_step(carry, xs):
+        S, n, m_prev = carry                      # (B,H,Dk,Dv),(B,H,Dk),(B,H)
+        qb, kb, vb, lfb, lib = xs                 # (B,H,L,*)
+        bcum = jnp.cumsum(lfb, axis=-1)           # inclusive: b_t
+        b_last = bcum[..., -1]
+        # --- intra log-weights D[t, s] = b_t - b_s + li_s (s <= t) ---------
+        dmat = bcum[..., :, None] - bcum[..., None, :] + lib[..., None, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        dmat = jnp.where(tri, dmat, neg_inf)
+        w_inter = bcum + m_prev[..., None]        # (B,H,L)
+        if normalize:
+            m_row = jnp.maximum(w_inter, jnp.max(dmat, axis=-1))
+        else:
+            m_row = jnp.zeros_like(w_inter)
+        scores = jnp.einsum("bhtd,bhsd->bhts", qb, kb)
+        wmat = scores * jnp.exp(dmat - m_row[..., None])
+        y_intra = jnp.einsum("bhts,bhse->bhte", wmat, vb)
+        y_inter = jnp.exp(w_inter - m_row)[..., None] * jnp.einsum(
+            "bhtd,bhde->bhte", qb, S)
+        n_dot = (jnp.sum(wmat, axis=-1)
+                 + jnp.exp(w_inter - m_row) * jnp.einsum("bhtd,bhd->bht", qb, n))
+        y = _finalize(y_intra + y_inter, n_dot, m_row, normalize)
+        # --- end-of-chunk state update --------------------------------------
+        g = b_last[..., None] - bcum + lib        # (B,H,L)
+        if normalize:
+            m_new = jnp.maximum(b_last + m_prev, jnp.max(g, axis=-1))
+        else:
+            m_new = m_prev
+        carry_scale = jnp.exp(b_last + m_prev - m_new)
+        gi = jnp.exp(g - m_new[..., None])
+        S_new = carry_scale[..., None, None] * S + jnp.einsum(
+            "bhld,bhle,bhl->bhde", kb, vb, gi)
+        n_new = carry_scale[..., None] * n + jnp.einsum("bhld,bhl->bhd", kb, gi)
+        return (S_new, n_new, m_new), y
+
+    (S, n, m), ys = jax.lax.scan(
+        chunk_step, (st["S"].astype(jnp.float32), st["n"].astype(jnp.float32),
+                     st["m"].astype(jnp.float32)),
+        (qc, kc, vc, lfc, lic))
+    y = jnp.moveaxis(ys, 0, 2).reshape(b, h, s, dv).astype(q.dtype)
+    return y, {"S": S, "n": n, "m": m}
+
+
+def gla_decode_step(q: jax.Array, k: jax.Array, v: jax.Array,
+                    lf: jax.Array, li: jax.Array, state: State, *,
+                    normalize: bool) -> Tuple[jax.Array, State]:
+    """One-token update.  q,k: (B,H,Dk); v: (B,H,Dv); lf,li: (B,H)."""
+    S, n, m = (state["S"].astype(jnp.float32), state["n"].astype(jnp.float32),
+               state["m"].astype(jnp.float32))
+    q, k, v = q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32)
+    lf, li = lf.astype(jnp.float32), li.astype(jnp.float32)
+    if normalize:
+        m_new = jnp.maximum(lf + m, li)
+        fscale = jnp.exp(lf + m - m_new)
+        iscale = jnp.exp(li - m_new)
+    else:
+        m_new = m
+        fscale = jnp.exp(lf)
+        iscale = jnp.exp(li)
+    S = fscale[..., None, None] * S + iscale[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = fscale[..., None] * n + iscale[..., None] * k
+    y_raw = jnp.einsum("bhd,bhde->bhe", q, S)
+    n_dot = jnp.einsum("bhd,bhd->bh", q, n)
+    y = _finalize(y_raw, n_dot, m_new, normalize)
+    return y, {"S": S, "n": n, "m": m_new}

@@ -1,0 +1,135 @@
+"""Mamba2 (SSD, arXiv:2405.21060-style) block built on the chunked GLA core.
+
+State-space duality view: per head, the SSD recurrence
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * (B_t x_t^T)
+    y_t = C_t^T h_t + D * x_t
+
+is gated linear attention with lf = dt*a (a<0), li = log(dt), k=B, q=C, v=x.
+A single group is used (B/C shared across heads), matching Zamba2-1.2B.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import gla
+from repro.models.common import dense_init, rms_norm, split_rngs
+from repro.models.xlstm import causal_conv1d, conv_decode_step
+
+Params = Dict[str, Any]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    ssm = cfg.ssm
+    di = cfg.d_model * ssm.expand
+    n = ssm.state_size
+    headdim = 64 if di % 64 == 0 else di // max(ssm.num_ssm_heads, 1)
+    h = di // headdim
+    return di, n, h, headdim
+
+
+def init_mamba2_block(rng: jax.Array, cfg: ModelConfig,
+                      dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di, n, h, p = _dims(cfg)
+    conv_w = cfg.ssm.conv_width
+    conv_dim = di + 2 * n
+    r = split_rngs(rng, 6)
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        # in-proj -> [z (di), x (di), B (n), C (n), dt (h)]
+        "w_in": dense_init(r[0], d, 2 * di + 2 * n + h, dtype),
+        "conv": (jax.random.normal(r[1], (conv_w, conv_dim)) * 0.1).astype(dtype),
+        "conv_bias": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus^-1-ish small dt
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.zeros((di,), dtype),
+        "w_out": dense_init(r[2], di, d, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jax.Array):
+    di, n, h, p = _dims(cfg)
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt_pre = proj[..., di + di + 2 * n:]
+    return z, xbc, dt_pre
+
+
+def _ssd_inputs(cfg: ModelConfig, params: Params, xbc: jax.Array,
+                dt_pre: jax.Array):
+    """xbc: (B,S,di+2n) post-conv; returns q,k,v,lf,li shaped for GLA."""
+    di, n, h, p = _dims(cfg)
+    bsz, s, _ = xbc.shape
+    x = xbc[..., :di].reshape(bsz, s, h, p).transpose(0, 2, 1, 3)   # v
+    bmat = xbc[..., di:di + n]
+    cmat = xbc[..., di + n:]
+    k = jnp.broadcast_to(bmat[:, None], (bsz, h, s, n))
+    q = jnp.broadcast_to(cmat[:, None], (bsz, h, s, n))
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32)
+                         + params["dt_bias"]).transpose(0, 2, 1)     # (B,H,S)
+    a = -jnp.exp(params["a_log"])                                    # (H,)
+    lf = dt * a[None, :, None]
+    li = jnp.log(jnp.maximum(dt, 1e-9))
+    return q, k, x, lf, li, dt
+
+
+def mamba2_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                   state: Optional[Params] = None, return_state: bool = False):
+    di, n, h, p = _dims(cfg)
+    bsz, s, d = x.shape
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, params["w_in"].astype(x.dtype))
+    z, xbc, dt_pre = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(causal_conv1d(xbc, params["conv"])
+                      + params["conv_bias"].astype(x.dtype))
+    q, k, v, lf, li, _ = _ssd_inputs(cfg, params, xbc, dt_pre)
+    gstate = state["gla"] if state is not None else None
+    y, gnew = gla.chunked_gla(q, k, v, lf, li, normalize=False,
+                              chunk=cfg.ssm.chunk_size, state=gstate)
+    y = y + params["d_skip"][None, :, None, None] * v.astype(jnp.float32)
+    y = y.transpose(0, 2, 1, 3).reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    if return_state:
+        conv_w = params["conv"].shape[0]
+        zc, xbc_raw, _ = _split_proj(cfg, proj)
+        tail = xbc_raw[:, -(conv_w - 1):, :]
+        pad = conv_w - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"gla": gnew, "conv": tail}
+    return out
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, n, h, p = _dims(cfg)
+    conv_w = cfg.ssm.conv_width
+    return {"gla": gla.init_gla_state(batch, h, n, p, jnp.float32),
+            "conv": jnp.zeros((batch, conv_w - 1, di + 2 * n), dtype)}
+
+
+def mamba2_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                  cache: Params) -> Tuple[jax.Array, Params]:
+    di, n, h, p = _dims(cfg)
+    bsz = x.shape[0]
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, params["w_in"].astype(x.dtype))
+    z, xbc, dt_pre = _split_proj(cfg, proj)
+    yc, conv_state = conv_decode_step(xbc, cache["conv"], params["conv"])
+    xbc = jax.nn.silu(yc + params["conv_bias"].astype(x.dtype))
+    q, k, v, lf, li, _ = _ssd_inputs(cfg, params, xbc, dt_pre)
+    y1, gnew = gla.gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   lf[:, :, 0], li[:, :, 0], cache["gla"],
+                                   normalize=False)
+    y1 = y1 + params["d_skip"][None, :, None] * v[:, :, 0].astype(jnp.float32)
+    y = y1.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("bse,ed->bsd", y, params["w_out"].astype(x.dtype))
+    return out, {"gla": gnew, "conv": conv_state}

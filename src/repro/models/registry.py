@@ -1,0 +1,20 @@
+"""Model construction entry point."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config, get_smoke_config
+from repro.models.transformer import Model
+
+
+def build_model(cfg: ModelConfig, *, param_dtype=jnp.float32,
+                compute_dtype=None) -> Model:
+    return Model(cfg, param_dtype=param_dtype, compute_dtype=compute_dtype)
+
+
+def build_by_name(arch: str, *, smoke: bool = False,
+                  param_dtype=jnp.float32, compute_dtype=None) -> Model:
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    return build_model(cfg, param_dtype=param_dtype,
+                       compute_dtype=compute_dtype)

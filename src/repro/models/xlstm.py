@@ -1,0 +1,264 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable via
+the chunked GLA core) and sLSTM (scalar memory, strictly sequential scan).
+
+Block layout follows the xLSTM language-model family: pre-norm residual
+blocks; the mLSTM block is pre-up-projection (factor ``expand``) with a
+causal depthwise conv feeding q/k; the sLSTM block uses block-diagonal
+(per-head) recurrent mixing followed by a small gated FFN.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import gla
+from repro.models.common import dense_init, rms_norm, split_rngs
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d helpers (shared with mamba2)
+# ---------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,S,D); w: (W,D) depthwise causal conv."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + xp[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def conv_decode_step(x1: jax.Array, conv_state: jax.Array,
+                     w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x1: (B,1,D); conv_state: (B,W-1,D) past inputs.  Returns (y1, state)."""
+    width = w.shape[0]
+    window = jnp.concatenate([conv_state, x1], axis=1)        # (B,W,D)
+    y = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                   w.astype(jnp.float32))[:, None, :].astype(x1.dtype)
+    return y, window[:, -(width - 1):, :] if width > 1 else conv_state
+
+
+def _per_head_rmsnorm(y: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """y: (B,H,S,D) per-head norm with per-head scale (H,D)."""
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    out = yf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))[None, :, None, :]
+    return out.astype(y.dtype)
+
+
+# ===========================================================================
+# mLSTM block
+# ===========================================================================
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    expand = cfg.ssm.expand if cfg.ssm else 2
+    di = cfg.d_model * expand
+    h = cfg.ssm.num_ssm_heads or cfg.n_heads
+    return di, h, di // h
+
+
+def init_mlstm_block(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    di, h, hd = _mlstm_dims(cfg)
+    conv_w = cfg.ssm.conv_width if cfg.ssm else 4
+    r = split_rngs(rng, 8)
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        "w_up": dense_init(r[0], d, 2 * di, dtype),
+        "conv": (jax.random.normal(r[1], (conv_w, di)) * 0.1).astype(dtype),
+        "wq": dense_init(r[2], di, di, dtype),
+        "wk": dense_init(r[3], di, di, dtype),
+        "wv": dense_init(r[4], di, di, dtype),
+        "w_if": dense_init(r[5], di, 2 * h, dtype),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]).astype(dtype),
+        "head_norm": jnp.zeros((h, hd), dtype),
+        "w_down": dense_init(r[6], di, d, dtype),
+    }
+
+
+def _mlstm_qkv_gates(params: Params, cfg: ModelConfig, xi: jax.Array,
+                     xc: jax.Array):
+    di, h, hd = _mlstm_dims(cfg)
+    b, s, _ = xi.shape
+    q = jnp.einsum("bsd,de->bse", xc, params["wq"].astype(xi.dtype))
+    k = jnp.einsum("bsd,de->bse", xc, params["wk"].astype(xi.dtype))
+    v = jnp.einsum("bsd,de->bse", xi, params["wv"].astype(xi.dtype))
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3) / math.sqrt(hd)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    gates = (jnp.einsum("bsd,de->bse", xi, params["w_if"].astype(xi.dtype))
+             + params["b_if"].astype(xi.dtype))
+    i_pre, f_pre = jnp.split(gates.astype(jnp.float32), 2, axis=-1)
+    lf = jax.nn.log_sigmoid(f_pre).transpose(0, 2, 1)          # (B,H,S)
+    li = i_pre.transpose(0, 2, 1)
+    return q, k, v, lf, li
+
+
+def mlstm_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                  state: Optional[Params] = None,
+                  return_state: bool = False):
+    """Full-sequence mLSTM block.  x: (B,S,d)."""
+    di, h, hd = _mlstm_dims(cfg)
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", xn, params["w_up"].astype(x.dtype))
+    xi, z = jnp.split(up, 2, axis=-1)
+    xc = jax.nn.silu(causal_conv1d(xi, params["conv"]))
+    q, k, v, lf, li = _mlstm_qkv_gates(params, cfg, xi, xc)
+    chunk = cfg.ssm.chunk_size if cfg.ssm else 256
+    gstate = state["gla"] if state is not None else None
+    y, gnew = gla.chunked_gla(q, k, v, lf, li, normalize=True, chunk=chunk,
+                              state=gstate)
+    y = _per_head_rmsnorm(y, params["head_norm"], cfg.norm_eps)
+    y = y.transpose(0, 2, 1, 3).reshape(x.shape[0], x.shape[1], di)
+    y = y * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(x.dtype))
+    if return_state:
+        conv_w = params["conv"].shape[0]
+        tail = xi[:, -(conv_w - 1):, :]
+        pad = conv_w - 1 - tail.shape[1]
+        if pad > 0:
+            tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"gla": gnew, "conv": tail}
+    return out
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, h, hd = _mlstm_dims(cfg)
+    conv_w = cfg.ssm.conv_width if cfg.ssm else 4
+    return {"gla": gla.init_gla_state(batch, h, hd, hd, jnp.float32),
+            "conv": jnp.zeros((batch, conv_w - 1, di), dtype)}
+
+
+def mlstm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 cache: Params) -> Tuple[jax.Array, Params]:
+    """x: (B,1,d)."""
+    di, h, hd = _mlstm_dims(cfg)
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", xn, params["w_up"].astype(x.dtype))
+    xi, z = jnp.split(up, 2, axis=-1)
+    yc, conv_state = conv_decode_step(xi, cache["conv"], params["conv"])
+    xc = jax.nn.silu(yc)
+    q, k, v, lf, li = _mlstm_qkv_gates(params, cfg, xi, xc)
+    y1, gnew = gla.gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                   lf[:, :, 0], li[:, :, 0], cache["gla"],
+                                   normalize=True)
+    y = _per_head_rmsnorm(y1[:, :, None, :], params["head_norm"], cfg.norm_eps)
+    y = y.transpose(0, 2, 1, 3).reshape(x.shape[0], 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = x + jnp.einsum("bse,ed->bsd", y, params["w_down"].astype(x.dtype))
+    return out, {"gla": gnew, "conv": conv_state}
+
+
+# ===========================================================================
+# sLSTM block
+# ===========================================================================
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    h = cfg.ssm.num_ssm_heads or cfg.n_heads
+    return h, cfg.d_model // h
+
+
+def init_slstm_block(rng: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    d = cfg.d_model
+    h, hd = _slstm_dims(cfg)
+    r = split_rngs(rng, 12)
+    def rec(key):
+        return (jax.random.normal(key, (h, hd, hd)) / math.sqrt(hd)).astype(dtype)
+    f_ff = int(d * 4 / 3)
+    return {
+        "norm": jnp.zeros((d,), dtype),
+        "wz": dense_init(r[0], d, d, dtype), "rz": rec(r[1]),
+        "wi": dense_init(r[2], d, d, dtype), "ri": rec(r[3]),
+        "wf": dense_init(r[4], d, d, dtype), "rf": rec(r[5]),
+        "wo": dense_init(r[6], d, d, dtype), "ro": rec(r[7]),
+        "b_z": jnp.zeros((d,), dtype), "b_i": jnp.zeros((d,), dtype),
+        "b_f": jnp.full((d,), 3.0, dtype), "b_o": jnp.zeros((d,), dtype),
+        "head_norm": jnp.zeros((h, hd), dtype),
+        "norm2": jnp.zeros((d,), dtype),
+        "ffn_up": dense_init(r[8], d, 2 * f_ff, dtype),
+        "ffn_down": dense_init(r[9], f_ff, d, dtype),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    h, hd = _slstm_dims(cfg)
+    z = jnp.zeros((batch, h, hd), jnp.float32)
+    return {"c": z, "n": jnp.zeros((batch, h, hd), jnp.float32),
+            "m": jnp.zeros((batch, h, hd), jnp.float32),
+            "h": jnp.zeros((batch, h, hd), jnp.float32)}
+
+
+def _slstm_cell(params: Params, cfg: ModelConfig, xt: jax.Array,
+                state: Params) -> Tuple[jax.Array, Params]:
+    """xt: (B,d) -> (h_out (B,d), state)."""
+    h, hd = _slstm_dims(cfg)
+    b = xt.shape[0]
+    c, n, m, hprev = state["c"], state["n"], state["m"], state["h"]
+    xf = xt.astype(jnp.float32)
+
+    def lin(w, bias, r):
+        pre = (xf @ w.astype(jnp.float32) + bias.astype(jnp.float32)).reshape(b, h, hd)
+        return pre + jnp.einsum("bhd,hde->bhe", hprev, r.astype(jnp.float32))
+
+    z = jnp.tanh(lin(params["wz"], params["b_z"], params["rz"]))
+    i_pre = lin(params["wi"], params["b_i"], params["ri"])
+    f_pre = lin(params["wf"], params["b_f"], params["rf"])
+    o = jax.nn.sigmoid(lin(params["wo"], params["b_o"], params["ro"]))
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(lf + m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(lf + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_tilde = c_new / jnp.maximum(n_new, 1e-6)
+    h_out = o * h_tilde
+    return h_out, {"c": c_new, "n": n_new, "m": m_new, "h": h_out}
+
+
+def slstm_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
+                  state: Optional[Params] = None, return_state: bool = False):
+    h, hd = _slstm_dims(cfg)
+    b, s, d = x.shape
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    st = state or init_slstm_cache(cfg, b)
+
+    def step(carry, xt):
+        h_out, new = _slstm_cell(params, cfg, xt, carry)
+        return new, h_out
+
+    st_new, hs = jax.lax.scan(step, st, jnp.moveaxis(xn, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1)                                # (B,S,H,hd)
+    hs = _per_head_rmsnorm(hs.transpose(0, 2, 1, 3), params["head_norm"],
+                           cfg.norm_eps).transpose(0, 2, 1, 3)
+    y = hs.reshape(b, s, d).astype(x.dtype)
+    x = x + y
+    # gated ffn
+    xn2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", xn2, params["ffn_up"].astype(x.dtype))
+    u, g = jnp.split(up, 2, axis=-1)
+    y2 = jax.nn.silu(g) * u
+    out = x + jnp.einsum("bse,ed->bsd", y2, params["ffn_down"].astype(x.dtype))
+    if return_state:
+        return out, st_new
+    return out
+
+
+def slstm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 cache: Params) -> Tuple[jax.Array, Params]:
+    b, s, d = x.shape
+    xn = rms_norm(x, params["norm"], cfg.norm_eps)
+    h_out, new = _slstm_cell(params, cfg, xn[:, 0], cache)
+    hs = _per_head_rmsnorm(h_out[:, :, None, :], params["head_norm"],
+                           cfg.norm_eps)[:, :, 0, :]
+    y = hs.reshape(b, 1, d).astype(x.dtype)
+    x = x + y
+    xn2 = rms_norm(x, params["norm2"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", xn2, params["ffn_up"].astype(x.dtype))
+    u, g = jnp.split(up, 2, axis=-1)
+    y2 = jax.nn.silu(g) * u
+    out = x + jnp.einsum("bse,ed->bsd", y2, params["ffn_down"].astype(x.dtype))
+    return out, new

@@ -1,0 +1,132 @@
+"""Three-term roofline model from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs   / (chips * peak_FLOP/s)
+    memory     = HLO_bytes   / (chips * HBM_bw)
+    collective = wire_bytes  / (chips * link_bw)
+
+cost_analysis FLOPs/bytes from XLA are *global* when SPMD-partitioned HLO is
+analyzed per-module (XLA reports the per-device module): we treat them as
+per-device and divide only the collective term (already per-device) by the
+link bandwidth.  MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) gives the
+useful-compute ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    model_flops: float            # 6*N_active*D global
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0
+
+    model_compute_s: float = 0.0   # analytic 6ND-based lower bound
+
+    def finish(self) -> "RooflineTerms":
+        self.compute_s = self.flops_per_device / hw.PEAK_FLOPS_BF16
+        self.memory_s = self.bytes_per_device / hw.HBM_BW
+        self.collective_s = self.wire_bytes_per_device / hw.ICI_LINK_BW
+        # XLA's CPU cost analysis counts while-loop (scan) bodies ONCE, not
+        # x trip-count, so HLO flops/bytes UNDER-count deep scanned stacks.
+        # The analytic term (MODEL_FLOPS per chip / peak) is the reliable
+        # lower bound for compute; useful_ratio >> 1 flags the artifact.
+        self.model_compute_s = (self.model_flops / self.chips
+                                / hw.PEAK_FLOPS_BF16)
+        terms = {"compute": max(self.compute_s, self.model_compute_s),
+                 "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo_flops = self.flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops / total_hlo_flops
+                             if total_hlo_flops else 0.0)
+        return self
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_s": f"{self.compute_s:.3e}",
+            "model_compute_s": f"{self.model_compute_s:.3e}",
+            "memory_s": f"{self.memory_s:.3e}",
+            "collective_s": f"{self.collective_s:.3e}",
+            "bottleneck": self.bottleneck,
+            "useful_ratio": f"{self.useful_ratio:.3f}",
+        }
+
+
+def count_params(cfg) -> float:
+    """Total (rough) and active parameter counts for MODEL_FLOPS."""
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads + 2 * cfg.n_kv_heads) + cfg.n_heads * hd * d
+    total = active = v * d  # embedding
+    kinds = cfg.block_kinds()
+    for k in kinds:
+        if k in ("dense", "shared_attn"):
+            mlp = d * cfg.d_ff * (2 if cfg.mlp_kind == "gelu" else 3)
+            total += attn + mlp
+            active += attn + mlp
+        elif k == "moe":
+            e = cfg.moe.num_experts
+            per = d * cfg.moe.expert_d_ff * 3
+            total += attn + e * per
+            active += attn + cfg.moe.top_k * per
+        elif k in ("mlstm",):
+            di = d * (cfg.ssm.expand if cfg.ssm else 2)
+            blk = d * 2 * di + 3 * di * di + di * d
+            total += blk
+            active += blk
+        elif k == "slstm":
+            blk = 8 * d * d + d * int(d * 4 / 3) * 3
+            total += blk
+            active += blk
+        elif k == "mamba2":
+            di = d * cfg.ssm.expand
+            n = cfg.ssm.state_size
+            blk = d * (2 * di + 2 * n + di // 64) + di * d
+            total += blk
+            active += blk
+    if cfg.is_encdec:
+        mlp = d * cfg.d_ff * 2
+        total += cfg.encoder_layers * (attn + mlp) + L * attn  # cross attn
+        active += cfg.encoder_layers * (attn + mlp) + L * attn
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training; 2*N_active*D per generated/processed
+    token for inference."""
+    total, active = count_params(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * active * tokens
+
+
+def analyze(record: Dict, cfg, shape) -> Optional[RooflineTerms]:
+    """record: one dryrun JSON entry."""
+    cost = record.get("cost_analysis") or {}
+    coll = record.get("collectives") or {}
+    wire = sum(v.get("wire_bytes", 0.0) for v in coll.values())
+    chips = record["n_devices"]
+    return RooflineTerms(
+        arch=record["arch"], shape=record["shape"], mesh=record["mesh"],
+        chips=chips,
+        flops_per_device=float(cost.get("flops", 0.0)),
+        bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        wire_bytes_per_device=wire,
+        model_flops=model_flops(cfg, shape),
+    ).finish()

@@ -1,0 +1,91 @@
+"""Parse collective ops (and their wire bytes) out of compiled/lowered HLO.
+
+``cost_analysis`` does not expose collective traffic, so we scan the HLO
+text for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, read each op's result shape, and convert to
+estimated per-device wire bytes with the standard ring factors:
+
+    all-gather          (N-1)/N * result_bytes
+    reduce-scatter      (N-1)/N * operand_bytes (~ result * N -> (N-1)*res)
+    all-reduce          2 (N-1)/N * operand_bytes
+    all-to-all          (N-1)/N * operand_bytes
+    collective-permute  operand_bytes
+
+N is taken from the op's replica_groups when present (group size), else
+the mesh size.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_OP_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:pred|[suf]\d+|bf16)\[[\d,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> Dict[str, Dict]:
+    """Returns {op_kind: {count, result_bytes, wire_bytes_per_device}}."""
+    out: Dict[str, Dict] = defaultdict(lambda: {"count": 0, "result_bytes": 0,
+                                                "wire_bytes": 0.0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3)
+        if "-done(" in line:
+            continue    # count each async collective once (at -start)
+        shape_text = m.group(1) or m.group(2) or ""
+        rb = _shape_bytes(shape_text)
+        # group size
+        n = n_devices
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = max(2, g.group(1).count(",") + 1)
+        else:
+            g2 = _GROUPS2_RE.search(line)
+            if g2:
+                n = max(2, int(g2.group(2)))
+        frac = (n - 1) / n
+        if kind == "all-gather":
+            wire = frac * rb
+        elif kind == "reduce-scatter":
+            wire = frac * rb * n  # operand = result * n
+        elif kind == "all-reduce":
+            wire = 2 * frac * rb
+        elif kind == "all-to-all":
+            wire = frac * rb
+        else:  # collective-permute
+            wire = rb
+        rec = out[kind]
+        rec["count"] += 1
+        rec["result_bytes"] += rb
+        rec["wire_bytes"] += wire
+    return dict(out)
+
+
+def total_wire_bytes(coll: Dict[str, Dict]) -> float:
+    return sum(v["wire_bytes"] for v in coll.values())

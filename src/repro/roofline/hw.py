@@ -1,0 +1,9 @@
+"""TPU v5e hardware constants (per chip) for the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_LINK_BW = 50e9            # bytes/s per link
+CHIP_HBM_BYTES = 16 << 30     # 16 GiB
+
+MESH_CHIPS_SINGLE = 256
+MESH_CHIPS_MULTI = 512

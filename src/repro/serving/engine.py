@@ -1,0 +1,272 @@
+"""Host-level multi-client serving engine — the faithful CE-CoLLM system.
+
+Topology (paper fig 2/3): N edge clients, each running the edge LLM
+partition with exits at l_ee1/l_ee2; one cloud server running the cloud
+partition behind a ContentManager.  Per generated token (Algorithm 1):
+
+  1. edge computes layers 1..l_ee1, evaluates exit 1, and dispatches the
+     quantized l_ee1 hidden to the cloud (parallel upload);
+  2. if conf1 < θ, edge continues to l_ee2, evaluates exit 2;
+  3. if conf2 < θ, the edge requests cloud inference; the cloud pops the
+     uploaded state from the content manager and completes layers
+     l_ee1+1..L, returning one token (single-token response);
+  4. the content manager releases unused uploads (paper) or backfills them
+     through the cloud partition (beyond-paper exact-KV mode).
+
+Everything is measured: per-token exit level, cloud request rate, wire
+bytes, partition wall-times (feeds the netsim), and agreement vs. the
+undivided model (the paper's ROUGE-L proxy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collm import CoLLM, CollmConfig
+from repro.core.content_manager import ContentManager
+from repro.core.transport import StatePacket, dequantize, packet_bytes
+from repro.models.transformer import Model
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class GenStats:
+    tokens: int = 0
+    exits_l1: int = 0
+    exits_l2: int = 0
+    cloud_requests: int = 0
+    upload_bytes: int = 0
+    edge_time: float = 0.0
+    cloud_time: float = 0.0
+    confidences: List[tuple] = dataclasses.field(default_factory=list)
+
+    @property
+    def request_rate(self) -> float:
+        return self.cloud_requests / max(self.tokens, 1)
+
+
+class CloudServer:
+    """Cloud partition + content manager (one per deployment)."""
+
+    def __init__(self, collm: CoLLM, params: Pytree, max_clients_pending: int = 8):
+        self.collm = collm
+        self.params = params
+        self.cm = ContentManager(max_pending_per_client=max_clients_pending)
+        self._cloud_step = jax.jit(collm.cloud_step)
+
+    def register(self, device_id: str, batch: int, max_seq: int,
+                 h1_prompt: Optional[jax.Array] = None,
+                 enc_out: Optional[jax.Array] = None):
+        caches = self.collm.init_cloud_cache(batch, max_seq)
+        logits = None
+        if h1_prompt is not None:
+            logits, caches = self.collm.cloud_prefill(self.params, h1_prompt,
+                                                      caches, enc_out=enc_out)
+        self.cm.put_cache(device_id, caches)
+        return logits
+
+    def receive_upload(self, device_id: str, pos: int,
+                       packet: StatePacket) -> None:
+        self.cm.upload(device_id, pos, packet)
+
+    def infer(self, device_id: str, pos: int, *, backfill: bool) -> jax.Array:
+        """Single-token response (paper §4.2)."""
+        caches = self.cm.get_cache(device_id)
+        if backfill:
+            pending = self.cm.take_uploads_upto(device_id, pos)
+        else:
+            pkt = self.cm.take_upload(device_id, pos)
+            pending = [(pos, pkt)]
+        logits = None
+        for p, pkt in pending:
+            logits, caches = self._cloud_step(
+                self.params, pkt.hidden, caches, jnp.asarray(p, jnp.int32))
+        self.cm.put_cache(device_id, caches)
+        return logits
+
+    def finish(self, device_id: str) -> None:
+        self.cm.end_of_sequence(device_id)
+
+
+class EdgeClient:
+    """Edge partition runtime for one device."""
+
+    def __init__(self, collm: CoLLM, params: Pytree, device_id: str,
+                 batch: int, max_seq: int):
+        self.collm = collm
+        self.params = params
+        self.device_id = device_id
+        self.caches = collm.init_edge_cache(batch, max_seq)
+        self._edge_step = jax.jit(collm.edge_step)
+        self.pos = 0
+
+    def prefill(self, batch: Dict[str, jax.Array]):
+        decisions, h1_seq, self.caches = self.collm.edge_prefill(
+            self.params, batch, self.caches)
+        self.pos = h1_seq.shape[1]
+        return decisions, h1_seq
+
+    def step(self, token: jax.Array):
+        out = self._edge_step(self.params, token, self.caches,
+                              jnp.asarray(self.pos, jnp.int32))
+        self.caches = out.caches
+        self.pos += 1
+        return out
+
+
+class ServingSystem:
+    """End-to-end multi-client co-inference."""
+
+    def __init__(self, model: Model, params: Pytree,
+                 ccfg: CollmConfig = CollmConfig()):
+        self.model = model
+        self.params = params
+        self.ccfg = ccfg
+        self.collm = CoLLM(model, ccfg)
+        self.cloud = CloudServer(self.collm, params)
+
+    # ------------------------------------------------------------------
+    def generate(self, prompts: Sequence[np.ndarray], max_new: int,
+                 mode: str = "collm", max_seq: Optional[int] = None
+                 ) -> Dict[str, Any]:
+        """mode: collm | standalone | cloud.  One client per prompt; each
+        client decodes its own stream (paper's per-client loops)."""
+        max_seq = max_seq or (max(len(p) for p in prompts) + max_new + 8)
+        results, stats = [], []
+        for i, prompt in enumerate(prompts):
+            toks, st = self._generate_one(f"edge-{i}", np.asarray(prompt),
+                                          max_new, mode, max_seq)
+            results.append(toks)
+            stats.append(st)
+        agg = GenStats()
+        for st in stats:
+            agg.tokens += st.tokens
+            agg.exits_l1 += st.exits_l1
+            agg.exits_l2 += st.exits_l2
+            agg.cloud_requests += st.cloud_requests
+            agg.upload_bytes += st.upload_bytes
+            agg.edge_time += st.edge_time
+            agg.cloud_time += st.cloud_time
+            agg.confidences.extend(st.confidences)
+        return {"tokens": results, "stats": agg, "per_client": stats,
+                "cm_stats": self.cloud.cm.stats()}
+
+    # ------------------------------------------------------------------
+    def _generate_one(self, device_id: str, prompt: np.ndarray, max_new: int,
+                      mode: str, max_seq: int):
+        model, collm, params = self.model, self.collm, self.params
+        st = GenStats()
+        batch = {"tokens": jnp.asarray(prompt[None, :])}
+
+        if mode == "cloud":
+            caches = model.init_cache(1, max_seq)
+            t0 = time.perf_counter()
+            x, _, caches, _ = model.prefill(params, batch, caches)
+            tok = jnp.argmax(model.logits(params, x[:, -1:])[:, 0], -1)
+            toks = [int(tok[0])]
+            pos = len(prompt)
+            for _ in range(max_new - 1):
+                tok, _, caches = collm.full_step(
+                    params, tok[:, None].astype(jnp.int32), caches,
+                    jnp.asarray(pos, jnp.int32))
+                toks.append(int(tok[0]))
+                pos += 1
+            st.cloud_time += time.perf_counter() - t0
+            st.tokens = len(toks)
+            return toks, st
+
+        client = EdgeClient(collm, params, device_id, 1, max_seq)
+        t0 = time.perf_counter()
+        decisions, h1_seq = client.prefill(batch)
+        st.edge_time += time.perf_counter() - t0
+
+        prefill_logits = None
+        if mode == "collm":
+            enc = None  # enc-dec handled by uploading enc_out once (DESIGN)
+            t0 = time.perf_counter()
+            prefill_logits = self.cloud.register(device_id, 1, max_seq,
+                                                 h1_prompt=h1_seq, enc_out=enc)
+            st.cloud_time += time.perf_counter() - t0
+            st.upload_bytes += int(h1_seq.size * 2)   # fp16 prompt upload
+
+        # first token from the prompt's last position
+        from repro.core.exits import first_confident_exit
+        tok_arr, exited, _ = first_confident_exit(decisions, collm.ccfg.theta)
+        if mode == "standalone":
+            tok = int(decisions[collm.l_ee2].token[0])
+        elif bool(exited[0]) or mode != "collm":
+            tok = int(tok_arr[0])
+        else:
+            # cloud already prefilled through the prompt: its last-position
+            # logits ARE the cloud answer for the first token
+            st.cloud_requests += 1
+            tok = int(jnp.argmax(prefill_logits[0, 0]))
+        toks = [tok]
+        st.tokens += 1
+
+        for _ in range(max_new - 1):
+            t0 = time.perf_counter()
+            out = client.step(jnp.asarray([[tok]], jnp.int32))
+            st.edge_time += time.perf_counter() - t0
+            st.tokens += 1
+            confs = {l: float(d.confidence[0])
+                     for l, d in out.decisions.items()}
+            st.confidences.append((confs.get(collm.l_ee1, 0.0),
+                                   confs.get(collm.l_ee2, 0.0)))
+
+            if mode == "standalone":
+                tok = int(out.decisions[collm.l_ee2].token[0])
+                if confs.get(collm.l_ee1, 0.0) >= collm.ccfg.theta:
+                    st.exits_l1 += 1
+                else:
+                    st.exits_l2 += 1
+                toks.append(tok)
+                continue
+
+            # parallel upload (always dispatched at l_ee1)
+            pkt = StatePacket(hidden=out.upload,
+                              pos=jnp.asarray(client.pos - 1))
+            self.cloud.receive_upload(device_id, client.pos - 1, pkt)
+            st.upload_bytes += pkt.nbytes()
+
+            if bool(out.exited[0]):
+                if confs.get(collm.l_ee1, 0.0) >= collm.ccfg.theta:
+                    st.exits_l1 += 1
+                else:
+                    st.exits_l2 += 1
+                tok = int(out.token[0])
+            else:
+                t0 = time.perf_counter()
+                logits = self.cloud.infer(device_id, client.pos - 1,
+                                          backfill=self.ccfg.backfill)
+                st.cloud_time += time.perf_counter() - t0
+                st.cloud_requests += 1
+                tok = int(jnp.argmax(logits[0]))
+            toks.append(tok)
+
+        if mode == "collm":
+            self.cloud.finish(device_id)
+        return toks, st
+
+
+def token_agreement(a: Sequence[int], b: Sequence[int]) -> float:
+    """Longest-common-subsequence F1 — the ROUGE-L proxy used in
+    EXPERIMENTS.md to compare strategies' generations."""
+    a, b = list(a), list(b)
+    if not a or not b:
+        return 0.0
+    m, n = len(a), len(b)
+    dp = np.zeros((m + 1, n + 1), np.int32)
+    for i in range(m):
+        for j in range(n):
+            dp[i + 1, j + 1] = (dp[i, j] + 1 if a[i] == b[j]
+                                else max(dp[i, j + 1], dp[i + 1, j]))
+    lcs = dp[m, n]
+    prec, rec = lcs / m, lcs / n
+    return 0.0 if lcs == 0 else 2 * prec * rec / (prec + rec)

@@ -1,0 +1,19 @@
+"""Token samplers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(rng: jax.Array, logits: jax.Array,
+                       temperature: float = 1.0, top_k: int = 0) -> jax.Array:
+    lf = logits.astype(jnp.float32) / max(temperature, 1e-6)
+    if top_k:
+        vals, _ = jax.lax.top_k(lf, top_k)
+        cutoff = vals[..., -1:]
+        lf = jnp.where(lf < cutoff, -jnp.inf, lf)
+    return jax.random.categorical(rng, lf).astype(jnp.int32)

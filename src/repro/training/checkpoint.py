@@ -1,0 +1,42 @@
+"""Minimal dependency-free checkpointing: pytree <-> npz with a structure
+manifest (no orbax on the box)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(path: str, params: Pytree, extra: dict = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = jax.tree.flatten(params)
+    arrays = {f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    manifest = {"n_leaves": len(leaves), "treedef": str(treedef),
+                "extra": extra or {}}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, template: Pytree) -> Tuple[Pytree, dict]:
+    """Template supplies the pytree structure (e.g. model.init output or
+    param_specs)."""
+    data = np.load(path + ".npz")
+    leaves, treedef = jax.tree.flatten(template)
+    if len(leaves) != len(data.files):
+        raise ValueError(f"checkpoint has {len(data.files)} leaves, "
+                         f"template has {len(leaves)}")
+    new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    return jax.tree.unflatten(treedef, new_leaves), manifest.get("extra", {})

@@ -1,0 +1,116 @@
+"""Multi-exit training loss (EE-LLM style).
+
+total = CE(final) + sum_i w_i * CE(exit_i) + moe aux.  Exit weights follow
+EE-LLM's constant weighting (all exits weighted equally at ``exit_weight``).
+
+``fused_unembed_ce`` is the production path: it streams the unembedding
+over sequence chunks under ``jax.checkpoint`` so the (B,S,V) logits — f32,
+three read-out heads, forward AND backward — are never materialized
+(measured ~12 GB/device at command-r train_4k; EXPERIMENTS.md §Perf
+iteration 3)."""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array) -> jax.Array:
+    """logits: (B,S,V); labels: (B,S) int; mask: (B,S) float."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - ll) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def fused_unembed_ce(hidden: jax.Array, norm_scale: jax.Array,
+                     weight: jax.Array, labels: jax.Array, mask: jax.Array,
+                     *, eps: float = 1e-5, chunk: int = 512) -> jax.Array:
+    """CE of ``rms_norm(hidden) @ weight.T`` without full logits.
+
+    hidden: (B,S,d); weight: (V,d); labels/mask: (B,S).  Scans seq chunks;
+    each chunk's logits are recomputed in the backward pass."""
+    from repro.models.common import rms_norm
+    b, s, d = hidden.shape
+    chunk = math.gcd(s, chunk)
+    n = s // chunk
+
+    hc = jnp.moveaxis(hidden.reshape(b, n, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, n, chunk), 1, 0)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        h, lab, m = xs
+        hn = rms_norm(h, norm_scale, eps)
+        logits = jnp.einsum("bcd,vd->bcv", hn,
+                            weight.astype(hn.dtype)).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum((lse - ll) * m), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, mc))
+    return total / jnp.maximum(mask.sum(), 1.0)
+
+
+def multi_exit_loss_fused(model, params, hiddens: Dict[str, Any],
+                          labels: jax.Array, mask: jax.Array, *,
+                          exit_weight: float = 0.3) -> Dict[str, jax.Array]:
+    """Fused-CE variant of ``multi_exit_loss`` working on hidden states.
+
+    ``hiddens``: {"final": (B,S,d), "exits": {layer: (B,S,d)},
+    "aux_loss": scalar, "prefix_len": int}."""
+    cfg = model.cfg
+    w = model.unembed_weight(params)
+    prefix = hiddens.get("prefix_len", 0) or 0
+
+    def trim(x):
+        return x[:, prefix:] if prefix else x
+
+    if cfg.norm_type == "layernorm":
+        # layernorm read-out models (whisper) use the plain path for the
+        # final head; exits are rms read-outs everywhere.
+        final_logits = model.logits(params, trim(hiddens["final"]))
+        main = cross_entropy(final_logits, labels, mask)
+    else:
+        main = fused_unembed_ce(trim(hiddens["final"]), params["final_norm"],
+                                w, labels, mask, eps=cfg.norm_eps)
+    total = main
+    exit_losses = {}
+    for l, h in sorted(hiddens["exits"].items()):
+        el = fused_unembed_ce(trim(h), params["exit_norms"][str(l)], w,
+                              labels, mask, eps=cfg.norm_eps)
+        exit_losses[l] = el
+        total = total + exit_weight * el
+    total = total + hiddens.get("aux_loss", 0.0)
+    return {"loss": total, "main_loss": main,
+            "aux_loss": hiddens.get("aux_loss", jnp.zeros(())),
+            **{f"exit{l}_loss": v for l, v in exit_losses.items()}}
+
+
+def multi_exit_loss(outputs: Dict[str, Any], labels: jax.Array,
+                    mask: jax.Array, *, exit_weight: float = 0.3
+                    ) -> Dict[str, jax.Array]:
+    """``outputs`` is Model.forward_train output.  For VLM models the logits
+    cover [vision prefix + text]; labels align with the text tail."""
+    logits = outputs["logits"]
+    prefix = outputs.get("prefix_len", 0) or 0
+    if prefix:
+        logits = logits[:, prefix:]
+    main = cross_entropy(logits, labels, mask)
+    exit_losses = {}
+    total = main
+    for l, xl in sorted(outputs["exit_logits"].items()):
+        if prefix:
+            xl = xl[:, prefix:]
+        el = cross_entropy(xl, labels, mask)
+        exit_losses[l] = el
+        total = total + exit_weight * el
+    total = total + outputs.get("aux_loss", 0.0)
+    return {"loss": total, "main_loss": main,
+            "aux_loss": outputs.get("aux_loss", jnp.zeros(())),
+            **{f"exit{l}_loss": v for l, v in exit_losses.items()}}

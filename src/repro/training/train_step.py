@@ -1,0 +1,75 @@
+"""jit-able train step: multi-exit LM loss + AdamW."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import Model
+from repro.training.loss import multi_exit_loss, multi_exit_loss_fused
+from repro.training.optim import AdamWConfig, AdamWState, adamw_update
+
+Pytree = Any
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    exit_weight: float = 0.3, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    batch: {"tokens": (B,S), "labels": (B,S), "mask": (B,S)} plus modality
+    extras ("frames" / "patches").  Uses the fused chunked unembed+CE
+    (never materializes (B,S,V) logits).  ``microbatches>1`` runs gradient
+    accumulation over batch slices — activation memory scales 1/M at the
+    cost of M sequential passes."""
+
+    def loss_fn(params, batch):
+        hiddens = model.forward_train_hiddens(params, batch)
+        losses = multi_exit_loss_fused(model, params, hiddens,
+                                       batch["labels"], batch["mask"],
+                                       exit_weight=exit_weight)
+        return losses["loss"], losses
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params: Pytree, opt_state: AdamWState,
+                   batch: Dict[str, jax.Array]
+                   ) -> Tuple[Pytree, AdamWState, Dict[str, jax.Array]]:
+        if microbatches <= 1:
+            (_, losses), grads = grads_of(params, batch)
+        else:
+            b = batch["tokens"].shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            mb = {k: v.reshape(microbatches, b // microbatches, *v.shape[1:])
+                  for k, v in batch.items()}
+
+            def body(carry, mbatch):
+                acc, loss_acc = carry
+                (_, losses), g = grads_of(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32) / microbatches,
+                    acc, g)
+                return (acc, loss_acc + losses["loss"] / microbatches), losses
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), all_losses = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mb)
+            losses = jax.tree.map(lambda x: x.mean(), all_losses)
+            losses["loss"] = loss
+        params, opt_state, opt_info = adamw_update(opt_cfg, grads, opt_state,
+                                                   params)
+        metrics = {**losses, **opt_info}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model: Model, exit_weight: float = 0.3):
+    def eval_step(params, batch):
+        out = model.forward_train(params, batch)
+        return multi_exit_loss(out, batch["labels"], batch["mask"],
+                               exit_weight=exit_weight)
+    return eval_step

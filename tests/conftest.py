@@ -1,0 +1,41 @@
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import ModelConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_ee_cfg() -> ModelConfig:
+    return ModelConfig(name="tiny-ee", arch_type="dense", n_layers=4,
+                       d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                       vocab_size=256, tie_embeddings=True,
+                       exit_layers=(1, 2)).validate()
+
+
+@pytest.fixture(scope="session")
+def tiny_trained(tiny_ee_cfg):
+    """A briefly-trained tiny EE model shared across serving tests."""
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+    from repro.models.registry import build_model
+    from repro.training.optim import AdamWConfig, init_adamw
+    from repro.training.train_step import make_train_step
+
+    model = build_model(tiny_ee_cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=300)
+    opt = init_adamw(params)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    data = SyntheticCorpus(DataConfig(vocab_size=256, seq_len=64,
+                                      batch_size=8, kind="markov"))
+    first = last = None
+    for b in data.batches(80):
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        params, opt, mets = step(params, opt, batch)
+        if first is None:
+            first = float(mets["loss"])
+        last = float(mets["loss"])
+    return {"model": model, "params": params, "data": data,
+            "first_loss": first, "last_loss": last}

@@ -1,0 +1,120 @@
+"""CE-CoLLM system invariants (the paper's correctness claims).
+
+Key invariant (Table 2 θ=1.0 rows): with the threshold never met, fused
+co-inference reproduces the undivided model EXACTLY (fp32 wire)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.collm import CoLLM, CollmConfig
+from repro.core.exits import evaluate_exit, first_confident_exit
+
+
+def _greedy_full(co, model, params, prompt, steps):
+    caches = model.init_cache(prompt.shape[0], 64)
+    x, _, caches, _ = model.prefill(params, {"tokens": prompt}, caches)
+    tok = jnp.argmax(model.logits(params, x[:, -1:])[:, 0], -1).astype(jnp.int32)
+    toks = [tok]
+    s = prompt.shape[1]
+    for t in range(steps):
+        tok, _, caches = co.full_step(params, tok[:, None], caches,
+                                      jnp.asarray(s + t, jnp.int32))
+        toks.append(tok)
+    return jnp.stack(toks, 1)
+
+
+def _fused_decode(co, model, params, prompt, steps):
+    st = co.init_fused_state(prompt.shape[0], 64)
+    _, h1, st["edge"] = co.edge_prefill(params, {"tokens": prompt},
+                                        st["edge"])
+    logits, st["cloud"] = co.cloud_prefill(params, h1, st["cloud"])
+    tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+    toks = [tok]
+    infos = []
+    s = prompt.shape[1]
+    for t in range(steps):
+        tok, info, st = co.fused_step(params, tok[:, None], st,
+                                      jnp.asarray(s + t, jnp.int32))
+        toks.append(tok)
+        infos.append(info)
+    return jnp.stack(toks, 1), infos
+
+
+@pytest.mark.parametrize("backfill", [False, True])
+def test_theta1_exact_equivalence(tiny_trained, backfill):
+    model, params = tiny_trained["model"], tiny_trained["params"]
+    prompt = jnp.asarray(tiny_trained["data"].prompts(2, 10))
+    co = CoLLM(model, CollmConfig(theta=1.1, wire_format="float32",
+                                  backfill=backfill))
+    base = _greedy_full(co, model, params, prompt, 12)
+    got, infos = _fused_decode(co, model, params, prompt, 12)
+    assert bool(jnp.all(got == base))
+    assert all(bool(i["need_cloud"]) for i in infos)
+
+
+def test_fp16_wire_close(tiny_trained):
+    model, params = tiny_trained["model"], tiny_trained["params"]
+    prompt = jnp.asarray(tiny_trained["data"].prompts(2, 10))
+    co32 = CoLLM(model, CollmConfig(theta=1.1, wire_format="float32"))
+    co16 = CoLLM(model, CollmConfig(theta=1.1, wire_format="float16"))
+    a, _ = _fused_decode(co32, model, params, prompt, 12)
+    b, _ = _fused_decode(co16, model, params, prompt, 12)
+    # paper Table 3: fp16 transport does not change predictions
+    assert float((a == b).mean()) > 0.9
+
+
+def test_adaptive_exits_reduce_cloud(tiny_trained):
+    model, params = tiny_trained["model"], tiny_trained["params"]
+    prompt = jnp.asarray(tiny_trained["data"].prompts(2, 10))
+    co = CoLLM(model, CollmConfig(theta=0.5))
+    toks, infos = _fused_decode(co, model, params, prompt, 16)
+    n_cloud = sum(bool(i["need_cloud"]) for i in infos)
+    n_exits = sum(int(i["exited"].sum()) for i in infos)
+    assert n_exits > 0, "trained tiny model should exit sometimes at θ=0.5"
+    assert n_cloud < len(infos)
+    assert bool(jnp.all(toks >= 0))
+
+
+def test_standalone_is_last_exit_greedy(tiny_trained):
+    model, params = tiny_trained["model"], tiny_trained["params"]
+    prompt = jnp.asarray(tiny_trained["data"].prompts(1, 10))
+    co = CoLLM(model, CollmConfig(theta=0.8))
+    caches = co.init_edge_cache(1, 64)
+    _, _, caches = co.edge_prefill(params, {"tokens": prompt}, caches)
+    tok, d, caches = co.standalone_step(params, prompt[:, -1:], caches,
+                                        jnp.asarray(9, jnp.int32))
+    assert tok.shape == (1,)
+    assert bool(jnp.all(d.confidence > 0))
+
+
+def test_exit_selection_logic():
+    d1 = evaluate_exit(jnp.asarray([[0.0, 5.0, 0.0], [1.0, 1.0, 1.0]]))
+    d2 = evaluate_exit(jnp.asarray([[9.0, 0.0, 0.0], [9.0, 0.0, 0.0]]))
+    tok, exited, idx = first_confident_exit({1: d1, 2: d2}, theta=0.9)
+    # row 0: exit 1 confident (softmax ~0.986) -> token 1 at exit 0
+    assert int(tok[0]) == 1 and bool(exited[0]) and int(idx[0]) == 0
+    # row 1: exit1 uniform (conf 1/3) -> falls to exit 2 (conf ~0.9998)
+    assert int(tok[1]) == 0 and bool(exited[1]) and int(idx[1]) == 1
+    tok2, exited2, idx2 = first_confident_exit({1: d1, 2: d2}, theta=1.01)
+    assert not bool(exited2.any()) and bool(jnp.all(idx2 == 2))
+
+
+def test_edge_cloud_partition_covers_model(tiny_trained):
+    model = tiny_trained["model"]
+    co = CoLLM(model, CollmConfig())
+    edge_layers = set()
+    for si in co.edge_segs:
+        s = model.segments[si]
+        edge_layers.update(range(s.start, s.end))
+    cloud_layers = set()
+    for si in co.cloud_segs:
+        s = model.segments[si]
+        cloud_layers.update(range(s.start, s.end))
+    n = model.cfg.n_layers
+    assert edge_layers == set(range(co.l_ee2))
+    assert cloud_layers == set(range(co.l_ee1, n))
+    # overlap region (paper: "remaining LLM with some overlap")
+    assert edge_layers & cloud_layers == set(range(co.l_ee1, co.l_ee2))

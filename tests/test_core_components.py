@@ -1,0 +1,164 @@
+"""Content manager, transport, workload, netsim invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.content_manager import ContentManager
+from repro.core.netsim import (CaseTrace, ComputeParams, ModelSplit,
+                               NetworkParams, TokenTrace, simulate)
+from repro.core.transport import (StatePacket, dequantize, make_packet,
+                                  open_packet, packet_bytes, quantize)
+from repro.core.workload import (ALPACA, XSUM, paper_calibrated_cases,
+                                 split_clients)
+
+
+# ---------------------------------------------------------------------------
+# content manager
+# ---------------------------------------------------------------------------
+def _pkt(pos=0):
+    return StatePacket(hidden={"data": jnp.ones((1, 1, 8), jnp.float16)},
+                       pos=jnp.asarray(pos))
+
+
+def test_cm_upload_take_release():
+    cm = ContentManager(max_pending_per_client=3)
+    for p in range(5):
+        cm.upload("dev0", p, _pkt(p))
+    st = cm.stats()["dev0"]
+    assert st["pending"] == 3 and st["uploads_released"] == 2
+    pkt = cm.take_upload("dev0", 4)
+    assert pkt is not None
+    st = cm.stats()["dev0"]
+    # taking pos 4 releases stale 2,3
+    assert st["pending"] == 0
+    with pytest.raises(KeyError):
+        cm.take_upload("dev0", 4)
+
+
+def test_cm_backfill_take_upto():
+    cm = ContentManager(max_pending_per_client=8)
+    for p in range(4):
+        cm.upload("d", p, _pkt(p))
+    got = cm.take_uploads_upto("d", 2)
+    assert [p for p, _ in got] == [0, 1, 2]
+    assert cm.stats()["d"]["pending"] == 1
+
+
+def test_cm_eos_clears():
+    cm = ContentManager()
+    cm.upload("d", 0, _pkt())
+    cm.put_cache("d", {"x": 1})
+    cm.end_of_sequence("d")
+    assert cm.get_cache("d") is None
+    assert cm.stats()["d"]["pending"] == 0
+
+
+def test_cm_multi_client_isolation():
+    cm = ContentManager()
+    cm.upload("a", 0, _pkt())
+    cm.upload("b", 0, _pkt())
+    cm.take_upload("a", 0)
+    assert cm.has_upload("b", 0) and not cm.has_upload("a", 0)
+
+
+# ---------------------------------------------------------------------------
+# transport
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fmt,bytes_per", [("float32", 4), ("float16", 2),
+                                           ("int8", 1)])
+def test_transport_bytes(fmt, bytes_per):
+    x = jnp.ones((4, 1, 64))
+    pkt = make_packet(x, fmt)
+    base = 4 * 64 * bytes_per
+    assert pkt.nbytes() >= base
+    if fmt != "int8":
+        assert packet_bytes(pkt.hidden) == base
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(0.01, 1000.0), seed=st.integers(0, 999))
+def test_transport_roundtrip_property(scale, seed):
+    import jax
+    x = jax.random.normal(jax.random.PRNGKey(seed), (2, 1, 32)) * scale
+    # float formats: relative error bounds
+    for fmt, tol in (("float32", 0.0), ("float16", 2e-3)):
+        back = dequantize(quantize(x, fmt))
+        rel = float(jnp.max(jnp.abs(back - x))) / (float(jnp.max(jnp.abs(x)))
+                                                   + 1e-9)
+        assert rel <= tol + 1e-7, (fmt, rel)
+    # int8: exact per-row bound — half a quantization step
+    pkt = quantize(x, "int8")
+    back = dequantize(pkt)
+    bound = jnp.broadcast_to(pkt["scale"] * 0.5 + 1e-7, x.shape)
+    assert bool(jnp.all(jnp.abs(back - x) <= bound))
+
+
+def test_state_packet_with_states():
+    x = jnp.ones((1, 1, 16))
+    states = {"S": jnp.ones((1, 4, 8, 8)), "m": jnp.zeros((1, 4))}
+    pkt = make_packet(x, "float16", states=states)
+    h, s = open_packet(pkt)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(x), atol=1e-3)
+    assert s["S"].shape == (1, 4, 8, 8)
+
+
+# ---------------------------------------------------------------------------
+# netsim qualitative invariants (the paper's claims)
+# ---------------------------------------------------------------------------
+def _sim(strategy, n_clients=1, theta=0.8, **kw):
+    comp = ComputeParams(edge_layer_time=1.28e-3, cloud_layer_time=1.28e-3,
+                         exit_head_time=1e-3)
+    net = NetworkParams(up_bw=3.8e6, rtt=0.003)
+    split = ModelSplit(n_layers=32, l_ee1=8, l_ee2=16, d_model=4096,
+                       backfill=kw.pop("backfill", False))
+    cases = paper_calibrated_cases(ALPACA, 40, seed=3)
+    # paper Fig 4 semantics: every client runs the full workload
+    clients = [list(cases) for _ in range(n_clients)]
+    return simulate(strategy, clients, net, comp, split, theta=theta, **kw)
+
+
+def test_naive_dominated_by_comm():
+    r = _sim("naive", half_precision=False)
+    assert r.comm_time > 5 * r.cloud_time
+    assert r.total_time > _sim("cloud_llm").total_time * 3
+
+
+def test_collm_beats_cloud_at_low_theta():
+    assert _sim("ce_collm", theta=0.8).total_time < _sim("cloud_llm").total_time * 1.05
+
+
+def test_theta_monotonicity():
+    t08 = _sim("ce_collm", theta=0.8)
+    t09 = _sim("ce_collm", theta=0.9)
+    t10 = _sim("ce_collm", theta=1.0)
+    assert t08.cloud_time < t09.cloud_time < t10.cloud_time
+    assert t08.request_cloud_rate < t09.request_cloud_rate <= 1.0
+
+
+def test_ablation_orderings():
+    base = _sim("ce_collm", theta=0.8)
+    no_fp16 = _sim("ce_collm", theta=0.8, half_precision=False)
+    no_ee = _sim("ce_collm", theta=0.8, early_exit=False)
+    no_cm = _sim("ce_collm", theta=0.8, content_manager=False)
+    assert no_fp16.total_time > base.total_time
+    assert no_fp16.transmitted_mb > base.transmitted_mb * 1.5
+    assert no_ee.cloud_time > base.cloud_time * 1.5
+    assert no_cm.comm_time > base.comm_time * 5
+
+
+def test_multi_client_scaling():
+    """Fig 4: cloud-based grows ~linearly; collm grows slower."""
+    c1 = _sim("cloud_llm", n_clients=1).total_time
+    c5 = _sim("cloud_llm", n_clients=5).total_time
+    m1 = _sim("ce_collm", n_clients=1, theta=0.8).total_time
+    m5 = _sim("ce_collm", n_clients=5, theta=0.8).total_time
+    assert c5 / c1 > 3.0              # near-linear cloud scaling
+    assert m5 / m1 < c5 / c1          # collm scales better
+    assert m5 < c5                    # and wins under load
+
+
+def test_standalone_cheapest_edge_only():
+    r = _sim("standalone")
+    assert r.cloud_time == 0 and r.transmitted_mb == 0
+    assert r.total_time < _sim("cloud_llm").total_time

@@ -1,0 +1,31 @@
+"""Dry-run integration: one real lower+compile on the production mesh via a
+subprocess (XLA_FLAGS must be set before jax import, so in-process is not
+an option).  Uses the cheapest (arch, shape) combo to stay fast."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.timeout(600)
+def test_dryrun_single_combo(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "xlstm-350m",
+         "--shape", "decode_32k", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=590)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    path = tmp_path / "xlstm-350m_decode_32k_16x16.json"
+    rec = json.loads(path.read_text())
+    assert rec["status"] == "ok"
+    assert rec["n_devices"] == 256
+    assert rec["cost_analysis"]["flops"] > 0
+    ma = rec["memory_analysis"]
+    per_dev = ma["argument_size_in_bytes"] + ma["temp_size_in_bytes"]
+    assert per_dev < 16 << 30       # fits v5e HBM

@@ -1,0 +1,89 @@
+"""GLA core invariants: chunked == recurrent == step-chain, both gate
+families (mLSTM exponential-gate stabilized; Mamba2 bounded gates)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.gla import (chunked_gla, gla_decode_step, init_gla_state,
+                              recurrent_gla)
+
+
+def _inputs(seed, b=2, h=2, s=32, dk=8, dv=4, mlstm=True):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, h, s, dk))
+    k = jax.random.normal(ks[1], (b, h, s, dk))
+    v = jax.random.normal(ks[2], (b, h, s, dv))
+    lf = jax.nn.log_sigmoid(jax.random.normal(ks[3], (b, h, s)) + 1.0)
+    li = jax.random.normal(ks[4], (b, h, s)) * (3.0 if mlstm else 1.0)
+    if not mlstm:
+        li = jnp.minimum(li, 0.0)
+    return q, k, v, lf, li
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_chunked_equals_recurrent(normalize, chunk):
+    q, k, v, lf, li = _inputs(0, mlstm=normalize)
+    y1, s1 = recurrent_gla(q, k, v, lf, li, normalize=normalize)
+    y2, s2 = chunked_gla(q, k, v, lf, li, normalize=normalize, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s1["S"]), np.asarray(s2["S"]),
+                               atol=5e-4)
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+def test_decode_chain_equals_recurrent(normalize):
+    q, k, v, lf, li = _inputs(1, mlstm=normalize)
+    st = init_gla_state(2, 2, 8, 4)
+    ys = []
+    for t in range(q.shape[2]):
+        y, st = gla_decode_step(q[:, :, t], k[:, :, t], v[:, :, t],
+                                lf[:, :, t], li[:, :, t], st,
+                                normalize=normalize)
+        ys.append(y)
+    yd = jnp.stack(ys, axis=2)
+    y1, s1 = recurrent_gla(q, k, v, lf, li, normalize=normalize)
+    np.testing.assert_allclose(np.asarray(yd), np.asarray(y1), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(st["S"]), np.asarray(s1["S"]),
+                               atol=5e-4)
+
+
+def test_streaming_state_continuation():
+    """Running two halves with carried state == running the whole sequence
+    (this is exactly what the edge->cloud SSM state upload relies on)."""
+    q, k, v, lf, li = _inputs(2, s=32)
+    y_full, s_full = chunked_gla(q, k, v, lf, li, normalize=True, chunk=8)
+    y_a, s_a = chunked_gla(q[:, :, :16], k[:, :, :16], v[:, :, :16],
+                           lf[:, :, :16], li[:, :, :16], normalize=True,
+                           chunk=8)
+    y_b, s_b = chunked_gla(q[:, :, 16:], k[:, :, 16:], v[:, :, 16:],
+                           lf[:, :, 16:], li[:, :, 16:], normalize=True,
+                           chunk=8, state=s_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 2)),
+                               np.asarray(y_full), atol=5e-4)
+    np.testing.assert_allclose(np.asarray(s_b["S"]), np.asarray(s_full["S"]),
+                               atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), chunk=st.sampled_from([4, 8, 16]),
+       normalize=st.booleans())
+def test_gla_property_chunk_invariance(seed, chunk, normalize):
+    q, k, v, lf, li = _inputs(seed, s=16, mlstm=normalize)
+    y1, _ = chunked_gla(q, k, v, lf, li, normalize=normalize, chunk=chunk)
+    y2, _ = chunked_gla(q, k, v, lf, li, normalize=normalize, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-3)
+
+
+def test_mlstm_no_nan_extreme_gates():
+    """Stabilizer keeps exponential input gates finite."""
+    q, k, v, lf, li = _inputs(3)
+    li = li * 20.0   # huge input gates
+    y, s = chunked_gla(q, k, v, lf, li, normalize=True, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    y2, _ = recurrent_gla(q, k, v, lf, li, normalize=True)
+    # gates at 20x scale: the normalizer cancels the huge exponents, but
+    # fusion order differs between forms — allow a few ulps more
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y2), atol=5e-3)

@@ -1,0 +1,121 @@
+"""Pallas kernels vs. pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.decode_attn.ops import flash_decode
+from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.exit_head.ops import exit_confidence
+from repro.kernels.exit_head.ref import exit_head_ref
+from repro.kernels.quantize.ops import quantize_int8
+from repro.kernels.quantize.ref import dequantize_int8_ref, quantize_int8_ref
+
+
+# ---------------------------------------------------------------------------
+# exit_head
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,d,v,bb,bv", [
+    (8, 64, 512, 8, 128), (16, 128, 1024, 4, 256), (8, 256, 2048, 8, 512),
+    (4, 128, 640, 4, 128), (32, 64, 4096, 16, 1024),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_exit_head_sweep(b, d, v, bb, bv, dtype):
+    rng = jax.random.PRNGKey(b * d % 7)
+    h = jax.random.normal(rng, (b, d)).astype(dtype)
+    w = (jax.random.normal(jax.random.PRNGKey(1), (v, d)) * 0.05).astype(dtype)
+    ns = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 0.1
+    c1, t1, l1 = exit_confidence(h, w, ns, block_b=bb, block_v=bv)
+    c2, t2, l2 = exit_head_ref(h, w, ns)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=tol)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=tol, atol=tol)
+    assert bool(jnp.all(t1 == t2))
+
+
+def test_exit_head_confidence_bounds():
+    # confidence is a probability
+    rng = jax.random.PRNGKey(3)
+    h = jax.random.normal(rng, (8, 64)) * 10
+    w = jax.random.normal(jax.random.PRNGKey(4), (512, 64))
+    c, t, l = exit_confidence(h, w, jnp.zeros(64))
+    assert bool(jnp.all((c > 0) & (c <= 1.0 + 1e-6)))
+    assert bool(jnp.all((t >= 0) & (t < 512)))
+
+
+# ---------------------------------------------------------------------------
+# decode_attn
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,kv,d,s,bs,fill,window", [
+    (2, 8, 2, 64, 1024, 256, 1000, 0),
+    (1, 4, 4, 32, 512, 128, 512, 0),
+    (2, 16, 2, 64, 2048, 512, 700, 256),
+    (3, 6, 2, 128, 768, 256, 100, 0),
+    (2, 8, 8, 64, 512, 512, 512, 64),
+])
+def test_decode_attn_sweep(b, h, kv, d, s, bs, fill, window):
+    rng = jax.random.PRNGKey(fill % 11)
+    q = jax.random.normal(rng, (b, h, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, s, kv, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, s, kv, d))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    pos = jnp.where(pos < fill, pos, -1)
+    cur = jnp.asarray(fill - 1, jnp.int32)
+    o1 = flash_decode(q, k, v, pos, cur, window=window, block_s=bs)
+    o2 = decode_attn_ref(q, k, v, pos, cur, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_decode_attn_dtypes(dtype):
+    rng = jax.random.PRNGKey(0)
+    q = jax.random.normal(rng, (2, 4, 64)).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 256, 2, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 256, 2, 64)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(256)[None], (2, 256))
+    o1 = flash_decode(q, k, v, pos, jnp.asarray(255), block_s=128)
+    o2 = decode_attn_ref(q, k, v, pos, jnp.asarray(255))
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# quantize
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,d,bn", [(256, 128, 64), (128, 512, 128),
+                                    (512, 64, 256)])
+def test_quantize_sweep(n, d, bn):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, d)) * 5
+    qa, sa = quantize_int8(x, block_n=bn)
+    qb, sb = quantize_int8_ref(x)
+    assert bool(jnp.all(qa == qb))
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([8, 32, 64]), d=st.sampled_from([16, 64, 128]),
+       scale=st.floats(0.01, 100.0), seed=st.integers(0, 2 ** 16))
+def test_quantize_roundtrip_property(n, d, scale, seed):
+    """Property: int8 roundtrip error bounded by scale/127 per element."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, d)) * scale
+    q, s = quantize_int8(x)
+    back = dequantize_int8_ref(q, s)
+    bound = np.asarray(s) * 0.5 + 1e-9
+    assert np.all(np.abs(np.asarray(back - x)) <= bound + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.sampled_from([4, 8]), v=st.sampled_from([256, 512]),
+       seed=st.integers(0, 2 ** 16))
+def test_exit_head_property(b, v, seed):
+    """Property: kernel and oracle agree on confidence/argmax for random
+    inputs; confidence equals softmax max prob."""
+    d = 64
+    h = jax.random.normal(jax.random.PRNGKey(seed), (b, d))
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (v, d)) * 0.1
+    c1, t1, _ = exit_confidence(h, w, jnp.zeros(d), block_b=b, block_v=v // 2)
+    c2, t2, _ = exit_head_ref(h, w, jnp.zeros(d))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+    assert bool(jnp.all(t1 == t2))

@@ -1,0 +1,102 @@
+"""Sharding policy unit tests (no production mesh — uses the real device)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.configs.shapes import SHAPES_BY_NAME
+from repro.launch import sharding as shardlib
+from repro.launch.specs import input_specs, arg_shardings
+from repro.models.registry import build_model
+
+
+class FakeMesh:
+    """Shape-only stand-in so specs can be tested without 512 devices."""
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self._shape = shape
+        import numpy as _np
+        self.devices = _np.empty(shape, dtype=object)
+
+    @property
+    def shape(self):
+        return dict(zip(self.axis_names, self._shape))
+
+
+MESH1 = FakeMesh((16, 16), ("data", "model"))
+MESH2 = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _specs_ok(tree_specs, mesh, pspec_fn, **kw):
+    """Every pspec must divide its dim evenly."""
+    def visit(path, leaf):
+        spec = pspec_fn(path, leaf, mesh, **kw)
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            n = shardlib._axis_size(mesh, axes)
+            assert leaf.shape[dim] % n == 0, (path, leaf.shape, spec)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, tree_specs)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "granite-moe-3b-a800m",
+                                  "xlstm-350m", "zamba2-1.2b",
+                                  "whisper-medium", "gemma3-12b"])
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_param_specs_divisible(arch, mesh):
+    model = build_model(get_config(arch), param_dtype=jnp.bfloat16)
+    specs = model.param_specs()
+    _specs_ok(specs, mesh, shardlib.param_pspec, fsdp=True)
+    _specs_ok(specs, mesh, shardlib.param_pspec, fsdp=False)
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen1.5-110b", "decode_32k"), ("gemma3-12b", "long_500k"),
+    ("zamba2-1.2b", "long_500k"), ("xlstm-350m", "decode_32k"),
+    ("whisper-medium", "decode_32k")])
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_cache_specs_divisible(arch, shape, mesh):
+    shp = SHAPES_BY_NAME[shape]
+    model = build_model(get_config(arch), param_dtype=jnp.bfloat16)
+    caches = model.cache_specs(shp.global_batch, shp.seq_len)
+    _specs_ok(caches, mesh, shardlib.cache_pspec, batch=shp.global_batch)
+
+
+def test_kv_cache_seq_sharded_when_batch_one():
+    model = build_model(get_config("gemma3-12b"), param_dtype=jnp.bfloat16)
+    shp = SHAPES_BY_NAME["long_500k"]
+    caches = model.cache_specs(1, shp.seq_len)
+    found_seq_shard = []
+
+    def visit(path, leaf):
+        name = shardlib._path_names(path)[-1]
+        if name == "k" and leaf.shape[-3] > 4096:   # a global-attn cache
+            spec = shardlib.cache_pspec(path, leaf, MESH1, batch=1)
+            found_seq_shard.append(spec[leaf.ndim - 3])
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, caches)
+    assert found_seq_shard and all(s is not None for s in found_seq_shard)
+
+
+def test_param_bytes_estimate_sane():
+    model = build_model(get_config("qwen1.5-110b"), param_dtype=jnp.bfloat16)
+    specs = model.param_specs()
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(specs))
+    per_tp = shardlib.estimate_param_bytes_per_device(specs, MESH1,
+                                                      fsdp=False)
+    per_fsdp = shardlib.estimate_param_bytes_per_device(specs, MESH1,
+                                                        fsdp=True)
+    assert total > 180e9            # ~110B params bf16
+    assert per_tp < total / 8       # TP sharding is effective
+    assert per_fsdp < per_tp / 8    # FSDP on top
+
+
+def test_batch_axes_divisibility():
+    assert shardlib.batch_axes(MESH2, 256) == ("pod", "data")
+    assert shardlib.batch_axes(MESH2, 32) == ("pod", "data")
+    assert shardlib.batch_axes(MESH2, 16) == ("data",)
+    assert shardlib.batch_axes(MESH2, 1) is None
+    assert shardlib.batch_axes(MESH1, 128) == ("data",)
