@@ -11,7 +11,7 @@ import traceback
 def main() -> None:
     from benchmarks import (fig4_scaling, kernels_bench, roofline_table,
                             table2_deployment, table3_precision,
-                            table4_ablation)
+                            table4_ablation, throughput_bench)
     benches = [
         ("table2", table2_deployment.run),
         ("table4", table4_ablation.run),
@@ -19,6 +19,7 @@ def main() -> None:
         ("table3", table3_precision.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline_table.run),
+        ("throughput", throughput_bench.run),
     ]
     failures = []
     for name, fn in benches:

@@ -10,11 +10,16 @@ Building blocks:
   * ``standalone_step``  — paper's low-latency edge standalone mode (last
                            exit is the output head; no threshold).
   * ``full_step``        — undivided model (cloud-deployment baseline).
-  * ``fused_step``       — single-graph adaptive step with a bounded upload
-                           ring and ``lax.cond``-gated cloud compute: the
+  * ``fused_step``       — single-graph adaptive step with per-row upload
+                           rings and ``lax.cond``-gated cloud compute: the
                            TPU-native expression of "request cloud only on
                            low confidence".  θ=1.0 reproduces the full model
                            exactly (unit-tested invariant).
+
+All decode steps accept ``pos`` as a scalar or a per-row (B,) vector, and
+cloud compute is gated per row (``cloud_step_masked`` merges cache updates
+only for below-θ rows) — the primitives behind the continuous-batching
+scheduler in ``repro.serving.engine``.
 
 Host-level multi-client serving (with the ContentManager and the network
 simulator) lives in ``repro.serving.engine``; this module is pure JAX.
@@ -58,8 +63,12 @@ class EdgeStepOut(NamedTuple):
     caches: Dict[int, Pytree]
 
 
-def _tree_where(pred: jax.Array, a: Pytree, b: Pytree) -> Pytree:
-    return jax.tree.map(lambda x, y: jnp.where(pred, x, y), a, b)
+def _where_rows(pred: jax.Array, a: jax.Array, b: jax.Array,
+                axis: int) -> jax.Array:
+    """Row-wise select: pred is (B,) and ``axis`` is the batch axis of a/b."""
+    shape = [1] * a.ndim
+    shape[axis] = pred.shape[0]
+    return jnp.where(pred.reshape(shape), a, b)
 
 
 class CoLLM:
@@ -119,6 +128,55 @@ class CoLLM:
         return logits, new_caches
 
     # ------------------------------------------------------------------
+    # right-padded prefill (shape-stable admission for the batch scheduler)
+    # ------------------------------------------------------------------
+    def edge_prefill_padded(self, params: Params, tokens: jax.Array,
+                            true_len: jax.Array, caches: Dict[int, Pytree]):
+        """Edge prefill over a right-padded prompt (tokens: (1, Lb)).
+
+        Pad positions are causally invisible to real tokens, so the real
+        activations are bit-identical to an unpadded prefill; pad cache slots
+        are invalidated afterwards.  Exit decisions are evaluated at the TRUE
+        last position.  Compiles once per length bucket, never per prompt."""
+        x, exit_h, new_caches, _ = self.model.prefill(
+            params, {"tokens": tokens}, caches, self.edge_segs)
+        last = jnp.asarray(true_len, jnp.int32) - 1
+        decisions = {l: evaluate_exit(self.model.exit_logits(
+            params, l, jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1)))
+            for l, h in exit_h.items()}
+        new_caches = self.model.invalidate_cache_after(new_caches, true_len)
+        return decisions, exit_h[self.l_ee1], new_caches
+
+    def cloud_prefill_padded(self, params: Params, h1_seq: jax.Array,
+                             true_len: jax.Array, caches: Dict[int, Pytree],
+                             enc_out: Optional[jax.Array] = None):
+        """Cloud prefill over a right-padded prompt upload; logits taken at
+        the true last position, pad cache slots invalidated."""
+        from repro.models.blocks import BlockCtx
+        ctx = BlockCtx(positions=jnp.arange(h1_seq.shape[1]), enc_out=enc_out,
+                       dtype=self.model.compute_dtype)
+        x, _, _, new_caches = self.model.run_segments(
+            params, h1_seq, ctx, self.cloud_segs, caches=caches,
+            collect_exits=False)
+        last = jnp.asarray(true_len, jnp.int32) - 1
+        logits = self.model.logits(
+            params, jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1))
+        new_caches = self.model.invalidate_cache_after(new_caches, true_len)
+        return logits, new_caches
+
+    def full_prefill_padded(self, params: Params, tokens: jax.Array,
+                            true_len: jax.Array, caches: Dict[int, Pytree]):
+        """Undivided-model prefill over a right-padded prompt (cloud
+        baseline rows of the batch scheduler)."""
+        x, _, new_caches, _ = self.model.prefill(
+            params, {"tokens": tokens}, caches)
+        last = jnp.asarray(true_len, jnp.int32) - 1
+        logits = self.model.logits(
+            params, jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1))
+        new_caches = self.model.invalidate_cache_after(new_caches, true_len)
+        return logits, new_caches
+
+    # ------------------------------------------------------------------
     # decode steps
     # ------------------------------------------------------------------
     def edge_step(self, params: Params, token: jax.Array,
@@ -135,11 +193,65 @@ class CoLLM:
                    caches: Dict[int, Pytree], pos: jax.Array
                    ) -> Tuple[jax.Array, Dict[int, Pytree]]:
         """One uploaded hidden -> final logits (paper Algorithm 1 lines 29-37).
-        Also used for KV backfill of early-exited positions."""
+        Also used for KV backfill of early-exited positions.  ``pos`` may be
+        a scalar or a per-row (B,) position vector."""
         hidden = dequantize(upload, self.model.compute_dtype)
         x, _, new_caches = self.model.decode_from_hidden(
             params, hidden, caches, pos, self.cloud_segs)
         return self.model.logits(params, x)[:, 0], new_caches
+
+    def _caches_where_rows(self, mask: jax.Array, new: Dict[int, Pytree],
+                           old: Dict[int, Pytree]) -> Dict[int, Pytree]:
+        """Per-row cache merge: rows with mask=True take ``new``, others keep
+        ``old``.  Stacked segments carry batch at axis 1, shared at axis 0."""
+        out: Dict[int, Pytree] = {}
+        for si in new:
+            axis = 0 if self.model.segments[si].shared else 1
+            out[si] = jax.tree.map(
+                lambda a, b, ax=axis: _where_rows(mask, a, b, ax),
+                new[si], old[si])
+        return out
+
+    def cloud_step_masked(self, params: Params, upload: Dict[str, jax.Array],
+                          caches: Dict[int, Pytree], pos: jax.Array,
+                          mask: jax.Array
+                          ) -> Tuple[jax.Array, Dict[int, Pytree]]:
+        """Batched cloud step serving only the below-θ rows: rows with
+        mask=False keep their caches untouched (their upload was not
+        consumed), preserving the per-client release/gap semantics of the
+        sequential path.  One call serves every needy row of a step."""
+        logits, new_caches = self.cloud_step(params, upload, caches, pos)
+        return logits, self._caches_where_rows(mask, new_caches, caches)
+
+    def ring_cloud_steps(self, params: Params, ring: Dict[str, jax.Array],
+                         ring_pos: jax.Array, ring_valid: jax.Array,
+                         caches: Dict[int, Pytree]
+                         ) -> Tuple[jax.Array, Dict[int, Pytree]]:
+        """Drain a per-row upload ring through the cloud partition in order.
+
+        ring:       packet dict of stacked leaves, leading ring axis —
+                    e.g. {"data": (k, B, 1, d)}.
+        ring_pos:   (k, B) per-entry positions.
+        ring_valid: (k, B) bool; invalid entries leave the row's cache and
+                    logits untouched.
+        Returns (per-row logits of each row's LAST valid entry (B, V) f32,
+        new caches)."""
+        b = ring_pos.shape[1]
+        vocab = self.model.cfg.vocab_size
+
+        def body(carry, xs):
+            c, final = carry
+            pkt_i, pos_i, valid_i = xs
+            logits_i, c = self.cloud_step_masked(params, pkt_i, c, pos_i,
+                                                 valid_i)
+            final = jnp.where(valid_i[:, None],
+                              logits_i.astype(jnp.float32), final)
+            return (c, final), None
+
+        (caches, final), _ = jax.lax.scan(
+            body, (caches, jnp.zeros((b, vocab), jnp.float32)),
+            (ring, ring_pos, ring_valid))
+        return final, caches
 
     def standalone_step(self, params: Params, token: jax.Array,
                         caches: Dict[int, Pytree], pos: jax.Array):
@@ -169,58 +281,55 @@ class CoLLM:
             "edge": self.init_edge_cache(batch, max_seq, dtype),
             "cloud": self.init_cloud_cache(batch, max_seq, dtype),
             "ring_h": jnp.zeros((k, batch, 1, d), dt),
-            "ring_pos": jnp.zeros((k,), jnp.int32),
-            "count": jnp.zeros((), jnp.int32),
+            "ring_pos": jnp.zeros((k, batch), jnp.int32),
+            "count": jnp.zeros((batch,), jnp.int32),
         }
 
     def fused_step(self, params: Params, token: jax.Array, state: Pytree,
                    pos: jax.Array):
-        """token: (B,1).  Returns (next_token (B,), info, new_state).
+        """token: (B,1); pos: scalar or per-row (B,) position vector.
+        Returns (next_token (B,), info, new_state).
 
-        Semantics: every step the l_ee1 hidden is pushed into the upload
-        ring (paper's parallel upload).  Cloud compute fires only when some
-        row is below θ or the ring is full; it then *backfills* the KV of
-        all ringed positions in order — so the cloud cache is always exact.
-        """
+        Semantics: every step each row pushes its l_ee1 hidden into its own
+        upload ring (paper's parallel upload; per-row ring slots).  Cloud
+        compute fires only when some row is below θ or its ring is full; it
+        then drains the rings of exactly the needy rows in order —
+        *backfilling* their cloud KV (beyond-paper exact-KV mode) while
+        leaving confident rows' rings accumulating.  Without backfill each
+        ring holds only the newest upload (paper's release semantics: the
+        cloud KV keeps gaps at early-exited positions)."""
         model, ccfg = self.model, self.ccfg
+        b = token.shape[0]
         k = ccfg.max_pending if ccfg.backfill else 1
-        out = self.edge_step(params, token, state["edge"], pos)
+        pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+        out = self.edge_step(params, token, state["edge"], pos_b)
 
         # simulate the wire: quantize -> dequantize
         h1 = dequantize(out.upload, model.compute_dtype)
         # paper-faithful (no backfill): only the newest upload is retained —
         # the content manager releases the rest (gapped cloud KV).
-        idx = state["count"] if ccfg.backfill else jnp.zeros((), jnp.int32)
-        ring_h = jax.lax.dynamic_update_index_in_dim(
-            state["ring_h"], h1.astype(state["ring_h"].dtype), idx, 0)
-        ring_pos = jax.lax.dynamic_update_index_in_dim(
-            state["ring_pos"], jnp.asarray(pos, jnp.int32), idx, 0)
+        idx = state["count"] if ccfg.backfill else jnp.zeros((b,), jnp.int32)
+        bidx = jnp.arange(b)
+        ring_h = state["ring_h"].at[idx, bidx].set(
+            h1.astype(state["ring_h"].dtype))
+        ring_pos = state["ring_pos"].at[idx, bidx].set(pos_b)
         count = idx + 1
 
-        need_cloud = ~jnp.all(out.exited)
+        need_rows = ~out.exited
         if ccfg.backfill:
-            need_cloud = need_cloud | (count >= k)   # ring full -> flush
+            need_rows = need_rows | (count >= k)     # ring full -> flush
         if ccfg.speculative:
-            need_cloud = jnp.ones((), bool)
+            need_rows = jnp.ones((b,), bool)
+        need_cloud = jnp.any(need_rows)
 
-        b = token.shape[0]
         vocab = model.cfg.vocab_size
 
         def run_cloud(operand):
             caches, rh, rp, cnt = operand
-
-            def body(carry, i):
-                c = carry
-                logits_i, c_new = self.cloud_step(
-                    params, {"data": rh[i]}, c, rp[i])
-                valid = i < cnt
-                c = _tree_where(valid, c_new, c)
-                return c, jnp.where(valid, logits_i,
-                                    jnp.zeros((b, vocab), logits_i.dtype))
-
-            caches, all_logits = jax.lax.scan(body, caches, jnp.arange(k))
-            final_logits = all_logits[jnp.maximum(cnt - 1, 0)]
-            return caches, final_logits, jnp.zeros((), jnp.int32)
+            valid = (jnp.arange(k)[:, None] < cnt[None, :]) & need_rows[None]
+            logits, caches = self.ring_cloud_steps(
+                params, {"data": rh[:k]}, rp[:k], valid, caches)
+            return caches, logits, jnp.where(need_rows, 0, cnt)
 
         def skip_cloud(operand):
             caches, rh, rp, cnt = operand
@@ -237,6 +346,7 @@ class CoLLM:
                      "ring_h": ring_h, "ring_pos": ring_pos,
                      "count": new_count}
         info = {"exited": out.exited, "need_cloud": need_cloud,
+                "need_rows": need_rows, "cloud_logits": cloud_logits,
                 "confidences": {l: d.confidence
                                 for l, d in out.decisions.items()}}
         return next_token, info, new_state

@@ -88,6 +88,25 @@ class ContentManager:
         c.last_active = self._clock()
         return out
 
+    # -- batched APIs (continuous-batching scheduler) -----------------------
+    # One scheduler tick touches every below-θ slot at once; these keep the
+    # per-client accounting identical to the sequential API while letting the
+    # engine build a single dense cloud call out of the returned packets.
+    def upload_batch(self, items) -> None:
+        """items: iterable of (device_id, pos, StatePacket)."""
+        for device_id, pos, packet in items:
+            self.upload(device_id, pos, packet)
+
+    def take_upload_batch(self, items):
+        """items: iterable of (device_id, pos) -> [StatePacket, ...] in order.
+        Per-entry semantics match ``take_upload`` (stale invalidation)."""
+        return [self.take_upload(d, p) for d, p in items]
+
+    def take_uploads_upto_batch(self, items):
+        """Backfill variant: items (device_id, pos) -> list of per-client
+        [(pos, StatePacket), ...] pending rings, oldest first."""
+        return [self.take_uploads_upto(d, p) for d, p in items]
+
     def has_upload(self, device_id: str, pos: int) -> bool:
         c = self._clients.get(device_id)
         return bool(c and pos in c.pending_uploads)

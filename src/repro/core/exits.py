@@ -32,6 +32,22 @@ def evaluate_exit(logits: jax.Array) -> ExitDecision:
     return ExitDecision(token=token, confidence=conf, logits=lf)
 
 
+def select_exit_logits(decisions: Dict[int, ExitDecision], theta: float
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-row logits of the first confident exit (sampling-capable variant
+    of ``first_confident_exit``).
+
+    Returns (logits (B,V), exited (B,), exit_idx (B,)).  Rows that exit
+    nowhere get the LAST exit's logits — callers overwrite those rows with
+    cloud logits via the ``exited`` mask before sampling."""
+    layers = sorted(decisions)
+    _, exited, exit_idx = first_confident_exit(decisions, theta)
+    stack = jnp.stack([decisions[l].logits for l in layers])     # (E, B, V)
+    row = jnp.clip(exit_idx, 0, len(layers) - 1)
+    sel = stack[row, jnp.arange(row.shape[0])]
+    return sel, exited, exit_idx
+
+
 def first_confident_exit(decisions: Dict[int, ExitDecision], theta: float
                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Combine per-exit decisions (ordered by layer).

@@ -291,17 +291,20 @@ def decode_attention(params: Params, cfg: ModelConfig, x: jax.Array,
                      window: int = 0, use_rope: bool = True,
                      cross: bool = False,
                      update_cache: bool = True) -> Tuple[jax.Array, Params]:
-    """Single-token decode.  x: (B,1,d); pos: scalar int32 current position.
-    For ``cross=True`` the cache holds precomputed encoder kv (no update)."""
+    """Single-token decode.  x: (B,1,d); pos: scalar int32 position or a
+    per-row (B,) position vector (continuous batching: every row decodes at
+    its own sequence offset).  For ``cross=True`` the cache holds precomputed
+    encoder kv (no update)."""
     b = x.shape[0]
     hd = cfg.resolved_head_dim
     h, kvh = cfg.n_heads, cfg.n_kv_heads
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
     q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
     if "bq" in params:
         q = q + params["bq"].astype(x.dtype)
     q = q.reshape(b, 1, h, hd)
     if use_rope and not cross:
-        q = apply_rope(q, jnp.full((1,), pos), cfg.rope_theta)
+        q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
 
     if cross:
         k, v, kpos = cache["k"], cache["v"], cache["pos"]
@@ -315,16 +318,16 @@ def decode_attention(params: Params, cfg: ModelConfig, x: jax.Array,
         knew = knew.reshape(b, 1, kvh, hd)
         vnew = vnew.reshape(b, 1, kvh, hd)
         if use_rope:
-            knew = apply_rope(knew, jnp.full((1,), pos), cfg.rope_theta)
+            knew = apply_rope(knew, pos_b[:, None], cfg.rope_theta)
         if update_cache:
             size = cache["k"].shape[1]
-            slot = (pos % size).astype(jnp.int32)
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], knew.astype(cache["k"].dtype), slot, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], vnew.astype(cache["v"].dtype), slot, axis=1)
-            cp = jax.lax.dynamic_update_slice_in_dim(
-                cache["pos"], jnp.full((b, 1), pos, jnp.int32), slot, axis=1)
+            slot = (pos_b % size).astype(jnp.int32)
+            bidx = jnp.arange(b)
+            ck = cache["k"].at[bidx, slot].set(
+                knew[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[bidx, slot].set(
+                vnew[:, 0].astype(cache["v"].dtype))
+            cp = cache["pos"].at[bidx, slot].set(pos_b)
             cache = {"k": ck, "v": cv, "pos": cp}
         k, v, kpos = cache["k"], cache["v"], cache["pos"]
         new_cache = cache
@@ -335,9 +338,9 @@ def decode_attention(params: Params, cfg: ModelConfig, x: jax.Array,
                         k.astype(jnp.float32)) / math.sqrt(hd)
     valid = kpos >= 0
     if not cross:
-        valid &= kpos <= pos
+        valid &= kpos <= pos_b[:, None]
         if window:
-            valid &= (pos - kpos) < window
+            valid &= (pos_b[:, None] - kpos) < window
     logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
     w = jax.nn.softmax(logits, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)

@@ -37,7 +37,7 @@ class BlockCtx:
     prefix_len: int = 0                     # VLM prefix-LM boundary
     window: int = 0                         # sliding window for this layer
     causal: bool = True
-    pos: Any = None                         # scalar decode position
+    pos: Any = None                         # decode position: scalar or (B,)
     max_seq: int = 0                        # cache capacity (decode)
     cache_offset: int = 0                   # prefill write offset
     dtype: Any = jnp.float32

@@ -20,7 +20,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import DENSE, SHARED_ATTN, ModelConfig
+from repro.configs.base import DENSE, MOE, SHARED_ATTN, ModelConfig
 from repro.launch import sharding as shardlib
 from repro.models.blocks import (BlockCtx, block_decode, block_forward,
                                  init_block, init_block_cache)
@@ -166,10 +166,16 @@ class Model:
     # ------------------------------------------------------------------
     def embed_tokens(self, params: Params, tokens: jax.Array,
                      pos_offset: Any = 0) -> jax.Array:
+        """``pos_offset`` may be a scalar or a per-row (B,) position vector
+        (continuous batching: rows decode at independent offsets)."""
         x = params["embed"][tokens].astype(self.compute_dtype)
         if not self.cfg.use_rope:
             s = tokens.shape[1]
-            idx = pos_offset + jnp.arange(s)
+            off = jnp.asarray(pos_offset)
+            if off.ndim == 1:                      # (B,) -> (B,S) positions
+                idx = off[:, None] + jnp.arange(s)
+            else:
+                idx = off + jnp.arange(s)
             x = x + sinusoidal_positions(idx, self.cfg.d_model).astype(x.dtype)
         return x
 
@@ -308,6 +314,35 @@ class Model:
             caches[si] = _stack(per_layer) if not seg.shared else per_layer[0]
         return caches
 
+    def attention_only(self, seg_indices: Optional[Sequence[int]] = None
+                       ) -> bool:
+        """True when every segment is attention-style (KV-cached).  Such
+        partitions tolerate right-padded prefill: pad positions are causally
+        invisible to real tokens and their cache entries can be invalidated
+        afterwards.  Recurrent (SSM/xLSTM) segments cannot — their state
+        advances through pad tokens irreversibly."""
+        seg_indices = (range(len(self.segments)) if seg_indices is None
+                       else seg_indices)
+        return all(self.segments[si].kind in (DENSE, SHARED_ATTN, MOE)
+                   for si in seg_indices)
+
+    def invalidate_cache_after(self, caches: Dict[int, Params],
+                               true_len: Any) -> Dict[int, Params]:
+        """Mark self-attention cache entries at ring slots >= true_len as
+        invalid (pos = -1).  Used after a right-padded prefill so the pad
+        positions never participate in decode attention; decode overwrites
+        each slot before reading it, so the row stays correct as generation
+        advances past ``true_len``."""
+        def fix(c: Params) -> Params:
+            if not isinstance(c, dict):
+                return c
+            if "pos" in c and "k" in c:            # self-attn ring cache
+                s = c["pos"].shape[-1]
+                keep = jnp.arange(s) < true_len
+                return {**c, "pos": jnp.where(keep, c["pos"], -1)}
+            return {k: (fix(v) if k != "cross" else v) for k, v in c.items()}
+        return {si: fix(c) for si, c in caches.items()}
+
     def cache_specs(self, batch: int, max_seq: int,
                     seg_indices: Optional[Sequence[int]] = None,
                     dtype=None):
@@ -372,7 +407,8 @@ class Model:
                     caches: Dict[int, Params], pos: jax.Array,
                     seg_indices: Optional[Sequence[int]] = None,
                     collect_exits: bool = True):
-        """token: (B,1) -> (final hidden (B,1,d), exit_hiddens, caches)."""
+        """token: (B,1) -> (final hidden (B,1,d), exit_hiddens, caches).
+        ``pos`` is a scalar or a per-row (B,) position vector."""
         seg_indices = seg_indices or self.all_segments()
         x = self.embed_tokens(params, token, pos_offset=pos)
         ctx = BlockCtx(pos=pos, dtype=self.compute_dtype)

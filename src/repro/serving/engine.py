@@ -1,4 +1,4 @@
-"""Host-level multi-client serving engine — the faithful CE-CoLLM system.
+"""Host-level multi-client serving — the CE-CoLLM system at scale.
 
 Topology (paper fig 2/3): N edge clients, each running the edge LLM
 partition with exits at l_ee1/l_ee2; one cloud server running the cloud
@@ -13,12 +13,28 @@ partition behind a ContentManager.  Per generated token (Algorithm 1):
   4. the content manager releases unused uploads (paper) or backfills them
      through the cloud partition (beyond-paper exact-KV mode).
 
+Two execution engines implement that contract:
+
+  * ``BatchScheduler`` (default) — a continuous-batching engine.  A fixed
+    pool of B slots, each holding one client's stream, is stepped by a
+    single jitted batched edge step with per-row positions and per-row exit
+    gating; one masked cloud call serves every below-θ row of a step.
+    Finished slots are recycled and refilled from the request queue without
+    recompiling (prompt lengths are bucketed; the decode graph is compiled
+    once per pool size).  See docs/serving.md for the slot lifecycle.
+  * ``ServingSystem.generate_sequential`` — the seed's per-client loop
+    (batch=1, one Python iteration per token).  Kept as the reference
+    implementation: the batched engine is token-for-token equivalent to it
+    under greedy decoding, and the throughput bench measures one against
+    the other.
+
 Everything is measured: per-token exit level, cloud request rate, wire
 bytes, partition wall-times (feeds the netsim), and agreement vs. the
 undivided model (the paper's ROUGE-L proxy).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Any, Dict, List, Optional, Sequence
@@ -29,8 +45,10 @@ import numpy as np
 
 from repro.core.collm import CoLLM, CollmConfig
 from repro.core.content_manager import ContentManager
-from repro.core.transport import StatePacket, dequantize, packet_bytes
+from repro.core.exits import select_exit_logits
+from repro.core.transport import StatePacket, packet_bytes, quantize
 from repro.models.transformer import Model
+from repro.serving import sampler as samplerlib
 
 Pytree = Any
 
@@ -49,6 +67,29 @@ class GenStats:
     @property
     def request_rate(self) -> float:
         return self.cloud_requests / max(self.tokens, 1)
+
+
+def _aggregate(stats: Sequence[GenStats]) -> GenStats:
+    agg = GenStats()
+    for st in stats:
+        agg.tokens += st.tokens
+        agg.exits_l1 += st.exits_l1
+        agg.exits_l2 += st.exits_l2
+        agg.cloud_requests += st.cloud_requests
+        agg.upload_bytes += st.upload_bytes
+        agg.edge_time += st.edge_time
+        agg.cloud_time += st.cloud_time
+        agg.confidences.extend(st.confidences)
+    return agg
+
+
+def _prompt_wire_bytes(shape, compute_dtype, wire_format: str) -> int:
+    """Wire size of the prompt's h1 upload in the configured format —
+    computed from the quantized packet ABSTRACTLY (eval_shape: no device
+    work), so int8 runs report int8 bytes, not hardcoded fp16."""
+    spec = jax.eval_shape(
+        lambda: quantize(jnp.zeros(shape, compute_dtype), wire_format))
+    return packet_bytes(spec)
 
 
 class CloudServer:
@@ -120,6 +161,396 @@ class EdgeClient:
         return out
 
 
+# ---------------------------------------------------------------------------
+# continuous-batching engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    """One client stream queued for the scheduler."""
+    device_id: str
+    prompt: np.ndarray
+    max_new: int
+    eos_id: Optional[int] = None
+    index: int = 0                   # submission order (result slot)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """One row of the batched pool.  Lifecycle:
+    FREE -> (admit: prefill + scatter row caches) ACTIVE
+         -> (decode ticks) ... -> (EOS / max_new) FINISHED -> FREE."""
+    index: int
+    req: Optional[Request] = None
+    stats: Optional[GenStats] = None
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0
+    last_token: int = 0
+    active: bool = False
+
+
+def _bucket(n: int, floor: int = 8) -> int:
+    """Next power-of-two length bucket >= n (bounds prefill recompiles)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _scatter_row(full: Pytree, row: Pytree, j) -> Pytree:
+    """Insert a single-row cache pytree into a batched pool at row j.
+    The batch axis of each leaf is located by shape mismatch (stacked
+    segments carry batch at axis 1, shared segments at axis 0)."""
+    def put(f, r):
+        if f.shape == r.shape:                      # pool of size 1
+            return r.astype(f.dtype)
+        axis = next(i for i, (a, b) in enumerate(zip(f.shape, r.shape))
+                    if a != b)
+        return jax.lax.dynamic_update_slice_in_dim(
+            f, r.astype(f.dtype), j, axis)
+    return jax.tree.map(put, full, row)
+
+
+class BatchScheduler:
+    """Continuous-batching multi-slot decode engine.
+
+    Replaces the seed's per-client Python loops: B client streams advance
+    together under one jitted edge step with per-row positions; exits are
+    gated per row; one masked cloud call serves all below-θ rows of a tick;
+    finished slots are refilled from the queue without recompiling.
+    """
+
+    def __init__(self, collm: CoLLM, params: Pytree, cm: ContentManager,
+                 num_slots: int, max_seq: int, mode: str = "collm",
+                 sampler: str = "greedy", temperature: float = 1.0,
+                 top_k: int = 0, seed: int = 0):
+        if mode not in ("collm", "standalone", "cloud"):
+            raise ValueError(mode)
+        self.collm = collm
+        self.model = collm.model
+        self.ccfg = collm.ccfg
+        self.params = params
+        self.cm = cm
+        self.B = num_slots
+        self.max_seq = max_seq
+        self.mode = mode
+        self.sampler = sampler
+        self.temperature = temperature
+        self.top_k = top_k
+        self._rng = jax.random.PRNGKey(seed)
+        self.slots = [_Slot(index=i) for i in range(num_slots)]
+
+        # pooled caches (compiled once per pool size; refills only scatter)
+        if mode == "cloud":
+            self.main_caches = self.model.init_cache(num_slots, max_seq)
+            self._full_row0 = self.model.init_cache(1, max_seq)
+        else:
+            self.edge_caches = collm.init_edge_cache(num_slots, max_seq)
+            self._edge_row0 = collm.init_edge_cache(1, max_seq)
+            if mode == "collm":
+                self.cloud_caches = collm.init_cloud_cache(num_slots, max_seq)
+                self._cloud_row0 = collm.init_cloud_cache(1, max_seq)
+
+        self._edge_step = jax.jit(collm.edge_step)
+        self._full_step = jax.jit(collm.full_step)
+        self._cloud_masked = jax.jit(collm.cloud_step_masked)
+        self._ring_cloud = jax.jit(collm.ring_cloud_steps)
+        self._scatter = jax.jit(_scatter_row)
+        self._edge_prefill = jax.jit(collm.edge_prefill_padded)
+        self._cloud_prefill = jax.jit(collm.cloud_prefill_padded)
+        self._full_prefill = jax.jit(collm.full_prefill_padded)
+        # recurrent segments can't absorb right-padding (their state would
+        # advance through pad tokens) -> exact-length prefill for them
+        self._pad_ok = self.model.attention_only()
+
+    # -- sampling -----------------------------------------------------------
+    def _pick(self, logits: np.ndarray) -> np.ndarray:
+        """logits (B, V) -> tokens (B,) under the configured sampler."""
+        if self.sampler == "greedy":
+            return np.argmax(logits, axis=-1).astype(np.int32)
+        self._rng, sub = jax.random.split(self._rng)
+        return np.asarray(samplerlib.sample(
+            jnp.asarray(logits), method=self.sampler, rng=sub,
+            temperature=self.temperature, top_k=self.top_k))
+
+    # -- admission ----------------------------------------------------------
+    def _admit(self, queue) -> None:
+        for slot in self.slots:
+            if slot.active or not queue:
+                continue
+            req: Request = queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32)
+            p_len = len(prompt)
+            pad = _bucket(p_len) if self._pad_ok else p_len
+            if p_len + req.max_new > self.max_seq or pad > self.max_seq:
+                raise ValueError(
+                    f"request {req.device_id}: prompt {p_len} + max_new "
+                    f"{req.max_new} exceeds max_seq {self.max_seq}")
+            tokens = np.zeros((1, pad), np.int32)
+            tokens[0, :p_len] = prompt
+            st = GenStats()
+            if self.mode == "cloud":
+                t0 = time.perf_counter()
+                logits, row = self._full_prefill(self.params, tokens, p_len,
+                                                 self._full_row0)
+                self.main_caches = self._scatter(self.main_caches, row,
+                                                 slot.index)
+                first = self._pick(np.asarray(logits)[:, 0])
+                st.cloud_time += time.perf_counter() - t0
+                tok = int(first[0])
+            else:
+                t0 = time.perf_counter()
+                decisions, h1_seq, row = self._edge_prefill(
+                    self.params, tokens, p_len, self._edge_row0)
+                self.edge_caches = self._scatter(self.edge_caches, row,
+                                                 slot.index)
+                fetched = jax.device_get(
+                    {l: (d.token, d.confidence, d.logits)
+                     for l, d in decisions.items()})
+                st.edge_time += time.perf_counter() - t0
+
+                prefill_logits = None
+                if self.mode == "collm":
+                    t0 = time.perf_counter()
+                    logits, crow = self._cloud_prefill(
+                        self.params, h1_seq, p_len, self._cloud_row0)
+                    self.cloud_caches = self._scatter(self.cloud_caches,
+                                                      crow, slot.index)
+                    prefill_logits = np.asarray(logits)[:, 0]
+                    st.cloud_time += time.perf_counter() - t0
+                    st.upload_bytes += _prompt_wire_bytes(
+                        (1, p_len, self.model.cfg.d_model),
+                        self.model.compute_dtype, self.ccfg.wire_format)
+
+                tok = self._first_token(fetched, prefill_logits, st)
+            st.tokens = 1
+            slot.req, slot.stats = req, st
+            slot.tokens = [tok]
+            slot.last_token = tok
+            slot.pos = p_len
+            slot.active = True
+            self._maybe_finish(slot)
+
+    def _first_token(self, fetched: Dict, prefill_logits, st: GenStats) -> int:
+        """First token from the prompt's last position — same decision tree
+        as the sequential path."""
+        layers = sorted(fetched)
+        if self.mode == "standalone":
+            l2 = layers[-1]
+            if self.sampler == "greedy":
+                return int(fetched[l2][0][0])
+            return int(self._pick(np.asarray(fetched[l2][2]))[0])
+        for l in layers:
+            tok_l, conf_l, logits_l = fetched[l]
+            if float(conf_l[0]) >= self.ccfg.theta:
+                if self.sampler == "greedy":
+                    return int(tok_l[0])
+                return int(self._pick(np.asarray(logits_l))[0])
+        # cloud already prefilled through the prompt: its last-position
+        # logits ARE the cloud answer for the first token
+        st.cloud_requests += 1
+        return int(self._pick(prefill_logits)[0])
+
+    # -- slot retirement ----------------------------------------------------
+    def _maybe_finish(self, slot: _Slot) -> bool:
+        req = slot.req
+        done = (len(slot.tokens) >= req.max_new
+                or (req.eos_id is not None
+                    and slot.tokens[-1] == req.eos_id))
+        if done:
+            if self.mode == "collm":
+                self.cm.end_of_sequence(req.device_id)
+            slot.active = False
+        return done
+
+    # -- one decode tick ----------------------------------------------------
+    def tick(self) -> None:
+        active = [s for s in self.slots if s.active]
+        if not active:
+            return
+        tokens = np.zeros((self.B, 1), np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        for s in active:
+            tokens[s.index, 0] = s.last_token
+            pos[s.index] = s.pos
+
+        if self.mode == "cloud":
+            self._tick_cloud(active, tokens, pos)
+        else:
+            self._tick_edge(active, tokens, pos)
+
+        for s in active:
+            s.pos += 1
+            self._maybe_finish(s)
+
+    def _tick_cloud(self, active, tokens, pos) -> None:
+        t0 = time.perf_counter()
+        tok, logits, self.main_caches = self._full_step(
+            self.params, jnp.asarray(tokens), self.main_caches,
+            jnp.asarray(pos))
+        if self.sampler == "greedy":
+            next_tok = np.asarray(tok)
+        else:
+            next_tok = self._pick(np.asarray(logits))
+        dt = (time.perf_counter() - t0) / len(active)
+        for s in active:
+            s.stats.cloud_time += dt
+            self._emit(s, int(next_tok[s.index]))
+
+    def _tick_edge(self, active, tokens, pos) -> None:
+        collm, ccfg = self.collm, self.ccfg
+        t0 = time.perf_counter()
+        out = self._edge_step(self.params, jnp.asarray(tokens),
+                              self.edge_caches, jnp.asarray(pos))
+        self.edge_caches = out.caches
+        want_logits = self.sampler != "greedy"
+        get = {
+            "token": out.token, "exited": out.exited,
+            "conf": {l: d.confidence for l, d in out.decisions.items()},
+            "tok2": out.decisions[collm.l_ee2].token,
+            "upload": out.upload,
+        }
+        if want_logits:
+            if self.mode == "standalone":
+                get["logits_l2"] = out.decisions[collm.l_ee2].logits
+            else:
+                # per-row logits of the chosen exit (sampling path)
+                get["sel_logits"] = select_exit_logits(
+                    out.decisions, ccfg.theta)[0]
+        fetched = jax.device_get(get)
+        edge_dt = (time.perf_counter() - t0) / len(active)
+        exited = fetched["exited"]
+        confs = fetched["conf"]
+
+        for s in active:
+            s.stats.edge_time += edge_dt
+            s.stats.tokens += 1
+            c1 = float(confs.get(collm.l_ee1, np.zeros(self.B))[s.index])
+            c2 = float(confs.get(collm.l_ee2, np.zeros(self.B))[s.index])
+            s.stats.confidences.append((c1, c2))
+
+        if self.mode == "standalone":
+            toks = (fetched["tok2"] if self.sampler == "greedy"
+                    else self._pick(fetched["logits_l2"]))
+            for s in active:
+                c1 = s.stats.confidences[-1][0]
+                if c1 >= ccfg.theta:
+                    s.stats.exits_l1 += 1
+                else:
+                    s.stats.exits_l2 += 1
+                self._emit(s, int(toks[s.index]))
+            return
+
+        # parallel upload (always dispatched at l_ee1) — batched receive
+        up = fetched["upload"]
+        pkts = {s.index: StatePacket(
+            hidden={k: v[s.index:s.index + 1] for k, v in up.items()},
+            pos=s.pos) for s in active}
+        self.cm.upload_batch((s.req.device_id, s.pos, pkts[s.index])
+                             for s in active)
+        for s in active:
+            s.stats.upload_bytes += pkts[s.index].nbytes()
+
+        needy = [s for s in active if not bool(exited[s.index])]
+        cloud_np = None
+        if needy:
+            cloud_np = self._serve_cloud(needy, pos)
+        exit_toks = (fetched["token"] if self.sampler == "greedy"
+                     else self._pick(fetched["sel_logits"]))
+
+        for s in active:
+            if bool(exited[s.index]):
+                if s.stats.confidences[-1][0] >= ccfg.theta:
+                    s.stats.exits_l1 += 1
+                else:
+                    s.stats.exits_l2 += 1
+                tok = int(exit_toks[s.index])
+            else:
+                tok = int(cloud_np[s.index])
+            self._emit(s, tok)
+
+    def _serve_cloud(self, needy: List[_Slot], pos: np.ndarray) -> np.ndarray:
+        """One masked cloud call serves every below-θ slot of the tick."""
+        ccfg = self.ccfg
+        mask = np.zeros((self.B,), bool)
+        for s in needy:
+            mask[s.index] = True
+            s.stats.cloud_requests += 1
+
+        t0 = time.perf_counter()
+        if ccfg.backfill:
+            rings = self.cm.take_uploads_upto_batch(
+                [(s.req.device_id, s.pos) for s in needy])
+            depth = _bucket(max(len(r) for r in rings), floor=1)
+            keys = rings[0][0][1].hidden.keys() if rings[0] else ()
+            ring = {k: np.zeros((depth, self.B) + np.shape(
+                rings[0][0][1].hidden[k])[1:],
+                np.asarray(rings[0][0][1].hidden[k]).dtype) for k in keys}
+            ring_pos = np.zeros((depth, self.B), np.int32)
+            valid = np.zeros((depth, self.B), bool)
+            for s, pend in zip(needy, rings):
+                for i, (p, pkt) in enumerate(pend):
+                    for k in keys:
+                        ring[k][i, s.index] = np.asarray(pkt.hidden[k])[0]
+                    ring_pos[i, s.index] = p
+                    valid[i, s.index] = True
+            logits, self.cloud_caches = self._ring_cloud(
+                self.params, {k: jnp.asarray(v) for k, v in ring.items()},
+                jnp.asarray(ring_pos), jnp.asarray(valid), self.cloud_caches)
+        else:
+            pkts = self.cm.take_upload_batch(
+                [(s.req.device_id, s.pos) for s in needy])
+            keys = pkts[0].hidden.keys()
+            dense = {k: np.zeros((self.B,) + np.shape(pkts[0].hidden[k])[1:],
+                                 np.asarray(pkts[0].hidden[k]).dtype)
+                     for k in keys}
+            for s, pkt in zip(needy, pkts):
+                for k in keys:
+                    dense[k][s.index] = np.asarray(pkt.hidden[k])[0]
+            logits, self.cloud_caches = self._cloud_masked(
+                self.params, {k: jnp.asarray(v) for k, v in dense.items()},
+                self.cloud_caches, jnp.asarray(pos), jnp.asarray(mask))
+
+        if self.sampler == "greedy":
+            cloud_tok = np.argmax(np.asarray(logits), axis=-1)
+        else:
+            cloud_tok = self._pick(np.asarray(logits))
+        dt = (time.perf_counter() - t0) / len(needy)
+        for s in needy:
+            s.stats.cloud_time += dt
+        return cloud_tok
+
+    def _emit(self, slot: _Slot, tok: int) -> None:
+        slot.tokens.append(tok)
+        slot.last_token = tok
+        if self.mode == "cloud":
+            slot.stats.tokens += 1
+
+    # -- driver -------------------------------------------------------------
+    def _collect(self, results, stats) -> None:
+        """Retire finished slots (frees them for the next admission)."""
+        for s in self.slots:
+            if s.req is not None and not s.active:
+                results[s.req.index] = s.tokens
+                stats[s.req.index] = s.stats
+                s.req = None
+
+    def run(self, requests: Sequence[Request]):
+        """Drain a request list through the slot pool; returns
+        (token lists, per-request GenStats) in submission order."""
+        for i, r in enumerate(requests):
+            r.index = i
+        queue = collections.deque(requests)
+        results: List[Optional[List[int]]] = [None] * len(requests)
+        stats: List[Optional[GenStats]] = [None] * len(requests)
+        while queue or any(s.active for s in self.slots):
+            self._admit(queue)
+            self._collect(results, stats)     # finished at admission
+            if any(s.active for s in self.slots):
+                self.tick()
+                self._collect(results, stats)
+        return results, stats
+
+
 class ServingSystem:
     """End-to-end multi-client co-inference."""
 
@@ -130,13 +561,48 @@ class ServingSystem:
         self.ccfg = ccfg
         self.collm = CoLLM(model, ccfg)
         self.cloud = CloudServer(self.collm, params)
+        self._schedulers: Dict[tuple, BatchScheduler] = {}
 
     # ------------------------------------------------------------------
     def generate(self, prompts: Sequence[np.ndarray], max_new: int,
-                 mode: str = "collm", max_seq: Optional[int] = None
-                 ) -> Dict[str, Any]:
-        """mode: collm | standalone | cloud.  One client per prompt; each
-        client decodes its own stream (paper's per-client loops)."""
+                 mode: str = "collm", max_seq: Optional[int] = None,
+                 *, num_slots: Optional[int] = None,
+                 sampler: str = "greedy", temperature: float = 1.0,
+                 top_k: int = 0, eos_id: Optional[int] = None,
+                 seed: int = 0) -> Dict[str, Any]:
+        """mode: collm | standalone | cloud.  One client per prompt, decoded
+        by the continuous-batching ``BatchScheduler`` (num_slots streams in
+        flight; defaults to min(len(prompts), 8))."""
+        slots = num_slots or max(1, min(len(prompts), 8))
+        longest = max(len(p) for p in prompts)
+        max_seq = max_seq or (longest + max_new + 8)
+        max_seq = max(max_seq, _bucket(longest))
+        key = (mode, slots, max_seq, sampler, temperature, top_k, seed)
+        sched = self._schedulers.get(key)
+        if sched is None:
+            # bounded cache: each scheduler owns pooled device caches
+            # (slots x max_seq x layers), so evict oldest beyond a few
+            while len(self._schedulers) >= 4:
+                self._schedulers.pop(next(iter(self._schedulers)))
+            sched = BatchScheduler(
+                self.collm, self.params, self.cloud.cm, slots, max_seq,
+                mode=mode, sampler=sampler, temperature=temperature,
+                top_k=top_k, seed=seed)
+            self._schedulers[key] = sched
+        reqs = [Request(device_id=f"edge-{i}", prompt=np.asarray(p),
+                        max_new=max_new, eos_id=eos_id)
+                for i, p in enumerate(prompts)]
+        results, stats = sched.run(reqs)
+        return {"tokens": results, "stats": _aggregate(stats),
+                "per_client": stats, "cm_stats": self.cloud.cm.stats(),
+                "num_slots": slots}
+
+    # ------------------------------------------------------------------
+    def generate_sequential(self, prompts: Sequence[np.ndarray], max_new: int,
+                            mode: str = "collm",
+                            max_seq: Optional[int] = None) -> Dict[str, Any]:
+        """The seed's per-client loops (batch=1, one Python iteration per
+        token) — reference implementation and throughput baseline."""
         max_seq = max_seq or (max(len(p) for p in prompts) + max_new + 8)
         results, stats = [], []
         for i, prompt in enumerate(prompts):
@@ -144,18 +610,8 @@ class ServingSystem:
                                           max_new, mode, max_seq)
             results.append(toks)
             stats.append(st)
-        agg = GenStats()
-        for st in stats:
-            agg.tokens += st.tokens
-            agg.exits_l1 += st.exits_l1
-            agg.exits_l2 += st.exits_l2
-            agg.cloud_requests += st.cloud_requests
-            agg.upload_bytes += st.upload_bytes
-            agg.edge_time += st.edge_time
-            agg.cloud_time += st.cloud_time
-            agg.confidences.extend(st.confidences)
-        return {"tokens": results, "stats": agg, "per_client": stats,
-                "cm_stats": self.cloud.cm.stats()}
+        return {"tokens": results, "stats": _aggregate(stats),
+                "per_client": stats, "cm_stats": self.cloud.cm.stats()}
 
     # ------------------------------------------------------------------
     def _generate_one(self, device_id: str, prompt: np.ndarray, max_new: int,
@@ -193,7 +649,9 @@ class ServingSystem:
             prefill_logits = self.cloud.register(device_id, 1, max_seq,
                                                  h1_prompt=h1_seq, enc_out=enc)
             st.cloud_time += time.perf_counter() - t0
-            st.upload_bytes += int(h1_seq.size * 2)   # fp16 prompt upload
+            # prompt upload crosses the wire in the configured format
+            st.upload_bytes += _prompt_wire_bytes(
+                h1_seq.shape, model.compute_dtype, self.ccfg.wire_format)
 
         # first token from the prompt's last position
         from repro.core.exits import first_confident_exit

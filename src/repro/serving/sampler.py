@@ -1,5 +1,11 @@
-"""Token samplers."""
+"""Token samplers.
+
+``greedy`` / ``temperature_sample`` are the primitives; ``sample`` is the
+dispatch the batch scheduler wires into its jitted step (one call samples
+every slot of the batch at once)."""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,3 +23,16 @@ def temperature_sample(rng: jax.Array, logits: jax.Array,
         cutoff = vals[..., -1:]
         lf = jnp.where(lf < cutoff, -jnp.inf, lf)
     return jax.random.categorical(rng, lf).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, *, method: str = "greedy",
+           rng: Optional[jax.Array] = None, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    """Batched sampling dispatch: logits (B, V) -> tokens (B,)."""
+    if method == "greedy":
+        return greedy(logits)
+    if method == "temperature":
+        if rng is None:
+            raise ValueError("temperature sampling requires an rng key")
+        return temperature_sample(rng, logits, temperature, top_k)
+    raise ValueError(f"unknown sampler {method!r}")
