@@ -20,6 +20,7 @@ def main() -> None:
         ("kernels", kernels_bench.run),
         ("roofline", roofline_table.run),
         ("throughput", throughput_bench.run),
+        ("paged_kv", throughput_bench.run_paged),
     ]
     failures = []
     for name, fn in benches:

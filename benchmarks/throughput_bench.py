@@ -1,12 +1,15 @@
 """Serving throughput: continuous-batching scheduler vs. the seed's
-sequential per-client loop.
+sequential per-client loop, and dense vs. block-paged KV layouts.
 
 Measures aggregate decode tokens/s on the tiny trained EE model for slot
 counts 1/4/8/16 against the sequential baseline (same request set), in
 co-inference mode at θ=0.8.  The acceptance bar for the batching PR is
->= 3x aggregate tokens/s at 8 slots.
+>= 3x aggregate tokens/s at 8 slots.  ``--kv-layout paged`` (or ``both``)
+additionally reports tokens/s and pooled-KV bytes per layout at 8/16
+slots (see docs/kv_paging.md).
 
     PYTHONPATH=src:. python benchmarks/throughput_bench.py [--check]
+    PYTHONPATH=src:. python benchmarks/throughput_bench.py --kv-layout both
 """
 from __future__ import annotations
 
@@ -77,6 +80,37 @@ def run(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
     return out
 
 
+PAGED_SLOT_COUNTS = (8, 16)
+
+
+def run_paged(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
+              theta: float = 0.8, repeats: int = 1) -> dict:
+    """Dense vs. block-paged KV at 8/16 slots: aggregate decode tokens/s
+    and pooled-KV device bytes per layout (the paged pool is sized to the
+    dense-equivalent page count, so the bytes column isolates layout
+    overhead; shrinking ``num_pages`` below that is the memory win)."""
+    tiny = tiny_trained_model()
+    model, params, data = tiny["model"], tiny["params"], tiny["data"]
+    prompts = _requests(data, n_clients)
+    total = n_clients * max_new
+    out: dict = {}
+    print("layout,slots,clients,max_new,tokens_per_s,kv_bytes")
+    for layout in ("dense", "paged"):
+        ccfg = CollmConfig(theta=theta, kv_layout=layout)
+        for slots in PAGED_SLOT_COUNTS:
+            sys_b = ServingSystem(model, params, ccfg)
+            sys_b.generate(prompts[:slots], max_new, num_slots=slots)  # warm
+            tps = _tokens_per_s(
+                lambda: sys_b.generate(prompts, max_new, mode="collm",
+                                       num_slots=slots), total, repeats)
+            kv_bytes = max(s.kv_cache_bytes()
+                           for s in sys_b._schedulers.values())
+            out[(layout, slots)] = {"tokens_per_s": tps, "kv_bytes": kv_bytes}
+            print(f"{layout},{slots},{n_clients},{max_new},{tps:.1f},"
+                  f"{kv_bytes}")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=16)
@@ -85,9 +119,16 @@ def main() -> None:
     ap.add_argument("--repeats", type=int, default=1)
     ap.add_argument("--check", action="store_true",
                     help="assert >=3x speedup at 8 slots")
+    ap.add_argument("--kv-layout", choices=("dense", "paged", "both"),
+                    default="dense",
+                    help="paged/both: compare KV layouts at 8/16 slots")
     args = ap.parse_args()
-    run(n_clients=args.clients, max_new=args.max_new, theta=args.theta,
-        repeats=args.repeats, check=args.check)
+    if args.kv_layout in ("dense", "both"):
+        run(n_clients=args.clients, max_new=args.max_new, theta=args.theta,
+            repeats=args.repeats, check=args.check)
+    if args.kv_layout in ("paged", "both"):
+        run_paged(n_clients=args.clients, max_new=args.max_new,
+                  theta=args.theta, repeats=args.repeats)
 
 
 if __name__ == "__main__":

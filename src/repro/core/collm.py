@@ -19,7 +19,11 @@ Building blocks:
 All decode steps accept ``pos`` as a scalar or a per-row (B,) vector, and
 cloud compute is gated per row (``cloud_step_masked`` merges cache updates
 only for below-θ rows) — the primitives behind the continuous-batching
-scheduler in ``repro.serving.engine``.
+scheduler in ``repro.serving.engine``.  Every step also takes an optional
+``block_tbl`` for the block-paged KV layout
+(``CollmConfig.kv_layout="paged"``): K/V then lives in a page pool shared
+across rows and masked rows write to the trash page instead of being
+merged (see docs/kv_paging.md).
 
 Host-level multi-client serving (with the ContentManager and the network
 simulator) lives in ``repro.serving.engine``; this module is pure JAX.
@@ -53,6 +57,13 @@ class CollmConfig:
     # beyond-paper fix: ringed uploads are run through the cloud partition on
     # the next request, keeping cloud KV exact at modest extra cloud compute.
     backfill: bool = False
+    # KV layout of the batched serving engine: "dense" pins each slot to a
+    # max_seq ring (memory B x max_seq); "paged" shares a block-paged pool
+    # across slots (memory num_pages x page_size; see docs/kv_paging.md).
+    # Release-mode gaps survive either way: a gapped position is simply a
+    # page slot whose pos marker was never written.
+    kv_layout: str = "dense"
+    page_size: int = 16               # tokens per KV page (paged layout)
 
 
 class EdgeStepOut(NamedTuple):
@@ -98,6 +109,16 @@ class CoLLM:
     def init_cloud_cache(self, batch: int, max_seq: int, dtype=None):
         return self.model.init_cache(batch, max_seq, self.cloud_segs,
                                      dtype=dtype)
+
+    def init_edge_cache_paged(self, batch: int, num_pages: int,
+                              page_size: int, dtype=None):
+        return self.model.init_paged_cache(batch, num_pages, page_size,
+                                           self.edge_segs, dtype=dtype)
+
+    def init_cloud_cache_paged(self, batch: int, num_pages: int,
+                               page_size: int, dtype=None):
+        return self.model.init_paged_cache(batch, num_pages, page_size,
+                                           self.cloud_segs, dtype=dtype)
 
     # ------------------------------------------------------------------
     # prefill (prompt processing)
@@ -180,9 +201,10 @@ class CoLLM:
     # decode steps
     # ------------------------------------------------------------------
     def edge_step(self, params: Params, token: jax.Array,
-                  caches: Dict[int, Pytree], pos: jax.Array) -> EdgeStepOut:
+                  caches: Dict[int, Pytree], pos: jax.Array,
+                  block_tbl: Optional[jax.Array] = None) -> EdgeStepOut:
         x, exit_h, new_caches = self.model.decode_step(
-            params, token, caches, pos, self.edge_segs)
+            params, token, caches, pos, self.edge_segs, block_tbl=block_tbl)
         decisions = {l: evaluate_exit(self.model.exit_logits(params, l, h))
                      for l, h in exit_h.items()}
         tok, exited, _ = first_confident_exit(decisions, self.ccfg.theta)
@@ -190,42 +212,59 @@ class CoLLM:
         return EdgeStepOut(decisions, tok, exited, upload, new_caches)
 
     def cloud_step(self, params: Params, upload: Dict[str, jax.Array],
-                   caches: Dict[int, Pytree], pos: jax.Array
+                   caches: Dict[int, Pytree], pos: jax.Array,
+                   block_tbl: Optional[jax.Array] = None,
+                   write_mask: Optional[jax.Array] = None
                    ) -> Tuple[jax.Array, Dict[int, Pytree]]:
         """One uploaded hidden -> final logits (paper Algorithm 1 lines 29-37).
         Also used for KV backfill of early-exited positions.  ``pos`` may be
         a scalar or a per-row (B,) position vector."""
         hidden = dequantize(upload, self.model.compute_dtype)
         x, _, new_caches = self.model.decode_from_hidden(
-            params, hidden, caches, pos, self.cloud_segs)
+            params, hidden, caches, pos, self.cloud_segs,
+            block_tbl=block_tbl, write_mask=write_mask)
         return self.model.logits(params, x)[:, 0], new_caches
 
     def _caches_where_rows(self, mask: jax.Array, new: Dict[int, Pytree],
                            old: Dict[int, Pytree]) -> Dict[int, Pytree]:
         """Per-row cache merge: rows with mask=True take ``new``, others keep
-        ``old``.  Stacked segments carry batch at axis 1, shared at axis 0."""
+        ``old``.  Stacked segments carry batch at axis 1, shared at axis 0.
+        Paged self-attention nodes are passed through untouched: their
+        masked rows already wrote to the trash page, so ``new`` is correct
+        for every row without a merge."""
+        def merge(a: Pytree, b: Pytree, axis: int) -> Pytree:
+            if isinstance(a, dict):
+                if "kp" in a:
+                    return a
+                return {k: merge(a[k], b[k], axis) for k in a}
+            return _where_rows(mask, a, b, axis)
+
         out: Dict[int, Pytree] = {}
         for si in new:
             axis = 0 if self.model.segments[si].shared else 1
-            out[si] = jax.tree.map(
-                lambda a, b, ax=axis: _where_rows(mask, a, b, ax),
-                new[si], old[si])
+            out[si] = merge(new[si], old[si], axis)
         return out
 
     def cloud_step_masked(self, params: Params, upload: Dict[str, jax.Array],
                           caches: Dict[int, Pytree], pos: jax.Array,
-                          mask: jax.Array
+                          mask: jax.Array,
+                          block_tbl: Optional[jax.Array] = None
                           ) -> Tuple[jax.Array, Dict[int, Pytree]]:
         """Batched cloud step serving only the below-θ rows: rows with
         mask=False keep their caches untouched (their upload was not
         consumed), preserving the per-client release/gap semantics of the
-        sequential path.  One call serves every needy row of a step."""
-        logits, new_caches = self.cloud_step(params, upload, caches, pos)
+        sequential path.  One call serves every needy row of a step.  With
+        paged caches the mask becomes the KV ``write_mask`` (masked rows
+        write to the trash page) and only non-paged state is merged."""
+        logits, new_caches = self.cloud_step(params, upload, caches, pos,
+                                             block_tbl=block_tbl,
+                                             write_mask=mask)
         return logits, self._caches_where_rows(mask, new_caches, caches)
 
     def ring_cloud_steps(self, params: Params, ring: Dict[str, jax.Array],
                          ring_pos: jax.Array, ring_valid: jax.Array,
-                         caches: Dict[int, Pytree]
+                         caches: Dict[int, Pytree],
+                         block_tbl: Optional[jax.Array] = None
                          ) -> Tuple[jax.Array, Dict[int, Pytree]]:
         """Drain a per-row upload ring through the cloud partition in order.
 
@@ -243,7 +282,7 @@ class CoLLM:
             c, final = carry
             pkt_i, pos_i, valid_i = xs
             logits_i, c = self.cloud_step_masked(params, pkt_i, c, pos_i,
-                                                 valid_i)
+                                                 valid_i, block_tbl=block_tbl)
             final = jnp.where(valid_i[:, None],
                               logits_i.astype(jnp.float32), final)
             return (c, final), None
@@ -254,19 +293,22 @@ class CoLLM:
         return final, caches
 
     def standalone_step(self, params: Params, token: jax.Array,
-                        caches: Dict[int, Pytree], pos: jax.Array):
+                        caches: Dict[int, Pytree], pos: jax.Array,
+                        block_tbl: Optional[jax.Array] = None):
         """Edge standalone (low-latency) mode: last exit is the output."""
         x, exit_h, new_caches = self.model.decode_step(
-            params, token, caches, pos, self.edge_segs)
+            params, token, caches, pos, self.edge_segs, block_tbl=block_tbl)
         d = evaluate_exit(self.model.exit_logits(params, self.l_ee2,
                                                  exit_h[self.l_ee2]))
         return d.token, d, new_caches
 
     def full_step(self, params: Params, token: jax.Array,
-                  caches: Dict[int, Pytree], pos: jax.Array):
+                  caches: Dict[int, Pytree], pos: jax.Array,
+                  block_tbl: Optional[jax.Array] = None):
         """Undivided model — the cloud-deployment baseline."""
         x, _, new_caches = self.model.decode_step(
-            params, token, caches, pos, collect_exits=False)
+            params, token, caches, pos, collect_exits=False,
+            block_tbl=block_tbl)
         logits = self.model.logits(params, x)[:, 0]
         return jnp.argmax(logits, -1).astype(jnp.int32), logits, new_caches
 
@@ -277,13 +319,28 @@ class CoLLM:
         d = self.model.cfg.d_model
         k = self.ccfg.max_pending
         dt = dtype or self.model.compute_dtype
-        return {
-            "edge": self.init_edge_cache(batch, max_seq, dtype),
-            "cloud": self.init_cloud_cache(batch, max_seq, dtype),
+        state = {
             "ring_h": jnp.zeros((k, batch, 1, d), dt),
             "ring_pos": jnp.zeros((k, batch), jnp.int32),
             "count": jnp.zeros((batch,), jnp.int32),
         }
+        if self.ccfg.kv_layout == "paged":
+            # single-graph mode cannot consult a host allocator, so every
+            # row gets a statically identity-mapped run of pages covering
+            # max_seq — same memory as dense, but the whole step runs
+            # through the paged write/gather path.
+            ps = self.ccfg.page_size
+            n_lp = -(-max_seq // ps)
+            state["block_tbl"] = (1 + jnp.arange(batch * n_lp, dtype=jnp.int32)
+                                  ).reshape(batch, n_lp)
+            state["edge"] = self.init_edge_cache_paged(batch, batch * n_lp,
+                                                       ps, dtype)
+            state["cloud"] = self.init_cloud_cache_paged(batch, batch * n_lp,
+                                                         ps, dtype)
+        else:
+            state["edge"] = self.init_edge_cache(batch, max_seq, dtype)
+            state["cloud"] = self.init_cloud_cache(batch, max_seq, dtype)
+        return state
 
     def fused_step(self, params: Params, token: jax.Array, state: Pytree,
                    pos: jax.Array):
@@ -302,7 +359,8 @@ class CoLLM:
         b = token.shape[0]
         k = ccfg.max_pending if ccfg.backfill else 1
         pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-        out = self.edge_step(params, token, state["edge"], pos_b)
+        tbl = state.get("block_tbl")
+        out = self.edge_step(params, token, state["edge"], pos_b, tbl)
 
         # simulate the wire: quantize -> dequantize
         h1 = dequantize(out.upload, model.compute_dtype)
@@ -328,7 +386,8 @@ class CoLLM:
             caches, rh, rp, cnt = operand
             valid = (jnp.arange(k)[:, None] < cnt[None, :]) & need_rows[None]
             logits, caches = self.ring_cloud_steps(
-                params, {"data": rh[:k]}, rp[:k], valid, caches)
+                params, {"data": rh[:k]}, rp[:k], valid, caches,
+                block_tbl=tbl)
             return caches, logits, jnp.where(need_rows, 0, cnt)
 
         def skip_cloud(operand):
@@ -345,6 +404,8 @@ class CoLLM:
         new_state = {"edge": out.caches, "cloud": cloud_caches,
                      "ring_h": ring_h, "ring_pos": ring_pos,
                      "count": new_count}
+        if tbl is not None:
+            new_state["block_tbl"] = tbl
         info = {"exited": out.exited, "need_cloud": need_cloud,
                 "need_rows": need_rows, "cloud_logits": cloud_logits,
                 "confidences": {l: d.confidence

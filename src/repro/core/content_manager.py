@@ -3,14 +3,20 @@
 Host-level component that coordinates per-client state on the cloud tier:
 
   * uploaded hidden-state packets (parallel upload lands here *before* the
-    matching inference request arrives — paper fig 3 step 4);
-  * per-client KV / recurrent caches for the cloud LLM partition, preserved
-    across token steps to avoid recomputation;
+    matching inference request arrives — paper fig 3 step 4); the batched
+    scheduler uses the ``*_batch`` variants so one tick touches every
+    below-θ client with per-client accounting intact;
+  * per-client KV / recurrent caches for the cloud LLM partition on the
+    sequential path (``get_cache``/``put_cache``).  The batched
+    ``BatchScheduler`` does NOT park caches here: it owns pooled
+    device caches (one row — or one set of KV pages under
+    ``kv_layout="paged"`` — per slot) and only uses the upload and
+    end-of-sequence APIs;
   * release of consumed hidden states and end-of-sequence cleanup
     (paper fig 3 step 6).
 
 It deliberately mirrors the paper's dual-API split: ``upload`` is the data
-receive API, ``request_inference`` is the inference API.
+receive API, ``take_upload``/``take_uploads_upto`` back the inference API.
 """
 from __future__ import annotations
 

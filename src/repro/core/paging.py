@@ -1,0 +1,132 @@
+"""Block-paged KV allocation (vLLM-style) for the batched serving engine.
+
+The dense layout pins every scheduler slot to a ``max_seq`` ring, so pool
+memory is ``B x max_seq`` regardless of how long each stream actually is.
+The paged layout instead carves KV storage into fixed-size *pages* of
+``page_size`` tokens shared by all slots:
+
+  * each slot owns a **block table** row mapping logical page index
+    (``position // page_size``) to a physical page id, ``-1`` = unallocated;
+  * a host-side **free list** hands out physical pages on demand
+    (alloc-on-write: prefill scatter takes the prompt's pages, each decode
+    tick takes a page only when a row crosses a page boundary);
+  * retiring a slot returns all its pages in bulk and the engine
+    invalidates their ``pos`` markers on device, so a reallocated page can
+    never leak stale K/V into another stream's attention.
+
+Physical page 0 is reserved as the **trash page**: rows without a mapping
+(inactive slots, masked cloud rows) have their writes redirected there with
+``pos = -1``, which keeps the jitted step shape-stable without a cache
+merge.  Admission *reserves* the worst-case page count for a request
+(``ceil((prompt + max_new) / page_size)``) so a stream admitted under
+backpressure can always finish; the lazy physical allocation still means
+short streams touch few pages.
+
+This module is pure host-side bookkeeping (numpy block table + Python free
+list); the device-side paged cache layout lives in
+``repro.models.attention`` and the jitted gather/scatter in the decode
+steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+def pages_needed(tokens: int, page_size: int) -> int:
+    return -(-tokens // page_size)
+
+
+@dataclasses.dataclass
+class PagePoolStats:
+    allocs: int = 0
+    frees: int = 0
+    high_water: int = 0          # max pages simultaneously in use
+
+
+class PagePool:
+    """Free-list page allocator + per-slot block tables.
+
+    ``num_pages`` counts usable pages (the trash page is extra and never
+    allocated).  ``max_logical`` bounds the logical context of one slot:
+    ``block_table`` is ``(num_slots, max_logical)`` int32.
+    """
+
+    def __init__(self, num_pages: int, page_size: int, num_slots: int,
+                 max_logical: int):
+        if num_pages < 1:
+            raise ValueError("PagePool needs at least one usable page")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.num_slots = num_slots
+        self.max_logical = max_logical
+        # physical ids 1..num_pages; 0 is the trash page
+        self._free: List[int] = list(range(num_pages, 0, -1))
+        self._owned: List[List[int]] = [[] for _ in range(num_slots)]
+        self._reserved = np.zeros((num_slots,), np.int64)
+        self.block_table = np.full((num_slots, max_logical), -1, np.int32)
+        self.stats = PagePoolStats()
+
+    # -- capacity ----------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def reserved_pages(self) -> int:
+        return int(self._reserved.sum())
+
+    @property
+    def available_pages(self) -> int:
+        """Pages not yet allocated and not promised to an admitted slot."""
+        return self.free_pages - self.reserved_pages
+
+    def pages_in_use(self) -> int:
+        return self.num_pages - self.free_pages
+
+    def can_admit(self, tokens: int) -> bool:
+        return pages_needed(tokens, self.page_size) <= self.available_pages
+
+    # -- slot lifecycle ----------------------------------------------------
+    def reserve(self, slot: int, tokens: int) -> int:
+        """Promise the worst-case page count for a request; returns it."""
+        need = pages_needed(tokens, self.page_size)
+        if need > self.max_logical:
+            raise ValueError(
+                f"request needs {need} pages but a slot maps at most "
+                f"{self.max_logical} (page_size={self.page_size})")
+        if need > self.available_pages:
+            raise RuntimeError(
+                f"out of pages: need {need}, available {self.available_pages}")
+        self._reserved[slot] += need
+        return need
+
+    def alloc(self, slot: int, logical: int) -> int:
+        """Map ``block_table[slot, logical]`` to a fresh physical page."""
+        if self.block_table[slot, logical] != -1:
+            return int(self.block_table[slot, logical])
+        if self._reserved[slot] <= 0:
+            raise RuntimeError(f"slot {slot}: allocation beyond reservation")
+        page = self._free.pop()
+        self._reserved[slot] -= 1
+        self._owned[slot].append(page)
+        self.block_table[slot, logical] = page
+        self.stats.allocs += 1
+        self.stats.high_water = max(self.stats.high_water,
+                                    self.pages_in_use())
+        return page
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Bulk-free a retired slot's pages; returns the freed ids (the
+        engine must invalidate their ``pos`` markers on device)."""
+        freed = self._owned[slot]
+        self._free.extend(freed)
+        self.stats.frees += len(freed)
+        self._owned[slot] = []
+        self._reserved[slot] = 0
+        self.block_table[slot, :] = -1
+        return freed

@@ -1,13 +1,23 @@
-"""GQA flash-decode attention — Pallas TPU kernel.
+"""GQA flash-decode attention — Pallas TPU kernels (ring + paged).
 
-One new query token attends over a long (possibly ring-buffered) KV cache:
-the cloud tier's per-token hot loop at decode_32k/long_500k shapes.  KV is
-streamed HBM->VMEM in (block_s, d) tiles; online-softmax statistics live in
-VMEM scratch; the (G, d) output tile is written once at the last S tile.
+One new query token attends over a long KV cache: the cloud tier's
+per-token hot loop at decode_32k/long_500k shapes.  KV is streamed
+HBM->VMEM in (block_s, d) tiles; online-softmax statistics live in VMEM
+scratch; the (G, d) output tile is written once at the last S tile.
 
 Grid: (B, KV_heads, S/block_s) — S minormost (sequential), so scratch
 carries (acc, m, l) across KV tiles.  The G = H/KV query heads of one KV
 group ride together through the MXU: (G, d) @ (d, block_s).
+
+Two cache layouts share that loop:
+
+  * ``decode_attn_pallas`` — dense (possibly ring-buffered) (B, S) cache;
+    the S tile index maps straight into the row's cache.
+  * ``decode_attn_paged_pallas`` — block-paged cache (P, page_size): the
+    per-row block table rides in as a **scalar-prefetch** operand
+    (``pltpu.PrefetchScalarGridSpec``) so the k/v/pos BlockSpec index maps
+    can look up, per (row, logical-page) grid point, WHICH physical page to
+    DMA — the vLLM PagedAttention trick, no gather materialization.
 """
 from __future__ import annotations
 
@@ -100,4 +110,102 @@ def decode_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
         ],
         interpret=interpret,
     )(qg, k, v, pos_ids, cur)
+    return out.reshape(b, h, d)
+
+
+def _decode_attn_paged_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, cur_ref,
+                              o_ref, acc_scr, m_scr, l_scr, *, n_lp: int,
+                              window: int, scale: float):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)      # (ps, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)      # (ps, d)
+    pos = pos_ref[0]                               # (ps,)
+    cur = cur_ref[0]
+    mapped = tbl_ref[bi, pi] >= 0                  # unallocated -> all invalid
+
+    logits = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * scale
+    valid = (pos >= 0) & (pos <= cur) & mapped
+    if window:
+        valid &= (cur - pos) < window
+    logits = jnp.where(valid[None, :], logits, NEG_INF)
+
+    m_old = m_scr[...]
+    m_new = jnp.maximum(m_old, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.exp(m_old - m_new)
+    acc_scr[...] = (acc_scr[...] * corr[:, None]
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32))
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    m_scr[...] = m_new
+
+    @pl.when(pi == n_lp - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def decode_attn_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                             pos_pages: jax.Array, block_tbl: jax.Array,
+                             cur_pos: jax.Array, *, window: int = 0,
+                             interpret: bool = True) -> jax.Array:
+    """q: (B,H,d); kp/vp: (P,page_size,KV,d); pos_pages: (P,page_size);
+    block_tbl: (B,n_lp) int32 (-1 = unallocated); cur_pos: scalar or (B,).
+
+    The KV tile of grid point (b, k, pi) is DMA'd from physical page
+    ``block_tbl[b, pi]`` via scalar-prefetch index maps; unmapped pages
+    read page 0 and are masked out."""
+    b, h, d = q.shape
+    kvh, ps = kp.shape[2], kp.shape[1]
+    n_lp = block_tbl.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d)
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b,))
+    tbl = block_tbl.astype(jnp.int32)
+
+    def page_map(bi, ki, pi, tbl_ref):
+        return (jnp.maximum(tbl_ref[bi, pi], 0), 0, ki, 0)
+
+    def pos_map(bi, ki, pi, tbl_ref):
+        return (jnp.maximum(tbl_ref[bi, pi], 0), 0)
+
+    kernel = functools.partial(_decode_attn_paged_kernel, n_lp=n_lp,
+                               window=window, scale=1.0 / math.sqrt(d))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, kvh, n_lp),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, ki, pi, tbl_ref: (bi, ki, 0, 0)),
+            pl.BlockSpec((1, ps, 1, d), page_map),
+            pl.BlockSpec((1, ps, 1, d), page_map),
+            pl.BlockSpec((1, ps), pos_map),
+            pl.BlockSpec((1,), lambda bi, ki, pi, tbl_ref: (bi,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bi, ki, pi, tbl_ref: (bi, ki, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, d), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
+        interpret=interpret,
+    )(tbl, qg, kp, vp, pos_pages, cur)
     return out.reshape(b, h, d)

@@ -1,10 +1,12 @@
-"""jit'd public wrapper for GQA flash-decode attention."""
+"""jit'd public wrappers for GQA flash-decode attention (ring + paged)."""
 from __future__ import annotations
 
 import jax
 
-from repro.kernels.decode_attn.kernel import decode_attn_pallas
-from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.decode_attn.kernel import (decode_attn_paged_pallas,
+                                              decode_attn_pallas)
+from repro.kernels.decode_attn.ref import (decode_attn_paged_ref,
+                                           decode_attn_ref)
 
 
 def _default_interpret() -> bool:
@@ -24,3 +26,20 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         return decode_attn_ref(q, k, v, pos_ids, cur_pos, window=window)
     return decode_attn_pallas(q, k, v, pos_ids, cur_pos, block_s=bs,
                               window=window, interpret=interpret)
+
+
+def flash_decode_paged(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                       pos_pages: jax.Array, block_tbl: jax.Array, cur_pos,
+                       *, window: int = 0, interpret: bool = None,
+                       use_kernel: bool = True) -> jax.Array:
+    """q: (B,H,d) one new token; kp/vp: (P,page_size,KV,d) page pool;
+    block_tbl: (B,n_lp) per-row physical page ids -> (B,H,d).  The Pallas
+    path DMAs one physical page per grid step through a scalar-prefetched
+    block table (block size = page_size)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    if not use_kernel:
+        return decode_attn_paged_ref(q, kp, vp, pos_pages, block_tbl,
+                                     cur_pos, window=window)
+    return decode_attn_paged_pallas(q, kp, vp, pos_pages, block_tbl, cur_pos,
+                                    window=window, interpret=interpret)

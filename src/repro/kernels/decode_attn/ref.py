@@ -1,4 +1,6 @@
-"""Pure-jnp oracle for GQA flash-decode attention over a ring KV cache."""
+"""Pure-jnp oracles for GQA flash-decode attention: ring KV cache
+(``decode_attn_ref``) and block-paged KV cache (``decode_attn_paged_ref``,
+K/V gathered through a per-row block table)."""
 from __future__ import annotations
 
 import math
@@ -11,18 +13,41 @@ def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                     pos_ids: jax.Array, cur_pos: jax.Array,
                     window: int = 0) -> jax.Array:
     """q: (B,H,d); k/v: (B,S,KV,d); pos_ids: (B,S) (-1 = empty slot);
-    cur_pos: scalar int.  Returns (B,H,d)."""
+    cur_pos: scalar or per-row (B,) int.  Returns (B,H,d)."""
     b, h, d = q.shape
     kvh = k.shape[2]
     g = h // kvh
+    cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b,))[:, None]
     qg = q.reshape(b, kvh, g, d)
     logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
                         k.astype(jnp.float32)) / math.sqrt(d)
-    valid = (pos_ids >= 0) & (pos_ids <= cur_pos)
+    valid = (pos_ids >= 0) & (pos_ids <= cur)
     if window:
-        valid &= (cur_pos - pos_ids) < window
+        valid &= (cur - pos_ids) < window
     logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
     w = jax.nn.softmax(logits, axis=-1)
     w = jnp.where(jnp.isnan(w), 0.0, w)
     out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+def decode_attn_paged_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
+                          pos_pages: jax.Array, block_tbl: jax.Array,
+                          cur_pos: jax.Array, window: int = 0) -> jax.Array:
+    """q: (B,H,d); kp/vp: (P,page,KV,d) physical pages; pos_pages: (P,page)
+    (-1 = empty slot); block_tbl: (B,n_lp) physical page ids (-1 =
+    unallocated); cur_pos: scalar or per-row (B,) int.  Returns (B,H,d).
+
+    Gathers the logical K/V view through the block table (unmapped pages
+    read page 0, masked via pos = -1), then the attention itself IS the
+    ring oracle — one masked-softmax implementation for both layouts."""
+    b = q.shape[0]
+    kvh, ps = kp.shape[2], kp.shape[1]
+    n_lp = block_tbl.shape[1]
+    d = kp.shape[3]
+    phys = jnp.where(block_tbl >= 0, block_tbl, 0)
+    k = kp[phys].reshape(b, n_lp * ps, kvh, d)
+    v = vp[phys].reshape(b, n_lp * ps, kvh, d)
+    pos = jnp.where(block_tbl[:, :, None] >= 0, pos_pages[phys],
+                    -1).reshape(b, n_lp * ps)
+    return decode_attn_ref(q, k, v, pos, cur_pos, window=window)

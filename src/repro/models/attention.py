@@ -1,10 +1,20 @@
 """Multi-head attention: GQA, optional bias, RoPE, sliding window,
 prefix-LM masks, cross-attention, chunked (flash-style) long-sequence path,
-banded path for sliding windows, and single-token decode with ring caches.
+banded path for sliding windows, and single-token decode over two KV cache
+layouts:
+
+  * **dense rings** (``init_attn_cache`` / ``decode_attention``) — one
+    ``(B, S)`` ring per layer, writes at ``pos % S``; memory is
+    ``B x max_seq`` whatever the streams actually use;
+  * **block pages** (``init_paged_attn_cache`` / ``decode_attention_paged``)
+    — K/V live in ``(num_pages, page_size)`` pages shared by all rows and
+    are addressed through a per-row block table (see
+    ``repro.core.paging``); logical slot ``s`` always holds position ``s``
+    (no wrap), unmapped rows write to the trash page.
 
 Pure functions over explicit parameter pytrees.  The Pallas flash-decode
-kernel in ``repro.kernels.decode_attn`` mirrors ``decode_attention`` and is
-validated against it.
+kernels in ``repro.kernels.decode_attn`` mirror ``decode_attention`` (ring)
+and the paged gather (block table) and are validated against them.
 """
 from __future__ import annotations
 
@@ -234,6 +244,78 @@ def _cache_write(cache: Params, k: jax.Array, v: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Paged caches (block tables; see repro.core.paging)
+# ---------------------------------------------------------------------------
+def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
+                          *, dtype=jnp.float32) -> Params:
+    """Page-pool KV storage for ONE layer.  Physical page 0 is the trash
+    page (writes of unmapped rows land there); ``pos = -1`` marks an empty
+    page slot, so a freshly (re)allocated page is invisible to attention
+    until it is written."""
+    kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    p = num_pages + 1                              # + trash page
+    return {
+        "kp": jnp.zeros((p, page_size, kvh, hd), dtype),
+        "vp": jnp.zeros((p, page_size, kvh, hd), dtype),
+        "pos": jnp.full((p, page_size), -1, jnp.int32),
+    }
+
+
+def paged_scatter_prefill(cache: Params, row: Params,
+                          pages: jax.Array) -> Params:
+    """Scatter a single-row dense prefill cache into physical pages.
+
+    ``row``: dense cache {"k": (1, L, KV, d), ...} as produced by prefill
+    on one stream (ring wide enough that slot ``s`` holds position ``s``).
+    ``pages``: (ceil(L / page_size),) physical page ids; entries ``< 0``
+    redirect to the trash page (right-pad positions beyond the pages the
+    allocator actually granted — their ``pos`` is already -1)."""
+    ps = cache["kp"].shape[1]
+    n_lp = pages.shape[0]
+    dest = jnp.where(pages >= 0, pages, 0).astype(jnp.int32)
+
+    def tiles(x, fill):
+        x = x[0][:n_lp * ps]                       # drop batch axis, trim ring
+        pad = n_lp * ps - x.shape[0]
+        if pad:
+            cfgpad = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+            x = jnp.pad(x, cfgpad, constant_values=fill)
+        return x.reshape((n_lp, ps) + x.shape[1:])
+
+    return {
+        "kp": cache["kp"].at[dest].set(tiles(row["k"], 0).astype(
+            cache["kp"].dtype)),
+        "vp": cache["vp"].at[dest].set(tiles(row["v"], 0).astype(
+            cache["vp"].dtype)),
+        "pos": cache["pos"].at[dest].set(tiles(row["pos"], -1).astype(
+            jnp.int32)),
+    }
+
+
+def paged_reset_pages(cache: Params, pages: jax.Array) -> Params:
+    """Invalidate the given physical pages (``pos = -1``) so a page freed
+    from a retired stream never leaks stale K/V once reallocated.  Entries
+    ``< 0`` redirect to the trash page (already invalid)."""
+    dest = jnp.where(pages >= 0, pages, 0).astype(jnp.int32)
+    return {**cache, "pos": cache["pos"].at[dest].set(-1)}
+
+
+def paged_gather(cache: Params, block_tbl: jax.Array
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Materialize the logical (B, max_logical*page_size) K/V view of a
+    paged cache through the block table (unmapped pages read the trash page
+    and are masked via ``pos = -1``)."""
+    b, n_lp = block_tbl.shape
+    ps = cache["kp"].shape[1]
+    phys = jnp.where(block_tbl >= 0, block_tbl, 0)
+    k = cache["kp"][phys].reshape(b, n_lp * ps, *cache["kp"].shape[2:])
+    v = cache["vp"][phys].reshape(b, n_lp * ps, *cache["vp"].shape[2:])
+    kpos = jnp.where(block_tbl[:, :, None] >= 0, cache["pos"][phys],
+                     -1).reshape(b, n_lp * ps)
+    return k, v, kpos
+
+
+# ---------------------------------------------------------------------------
 # Public forwards
 # ---------------------------------------------------------------------------
 def attention_forward(params: Params, cfg: ModelConfig, x: jax.Array, *,
@@ -348,6 +430,72 @@ def decode_attention(params: Params, cfg: ModelConfig, x: jax.Array,
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
     y = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
     return y, new_cache
+
+
+def decode_attention_paged(params: Params, cfg: ModelConfig, x: jax.Array,
+                           cache: Params, pos: jax.Array,
+                           block_tbl: jax.Array, *,
+                           window: int = 0, use_rope: bool = True,
+                           write_mask: Optional[jax.Array] = None
+                           ) -> Tuple[jax.Array, Params]:
+    """Single-token decode over a block-paged KV cache.
+
+    x: (B,1,d); pos: scalar or per-row (B,) positions; block_tbl:
+    (B, max_logical) physical page ids (-1 = unallocated).  Each row writes
+    its new K/V at page ``block_tbl[b, pos // page_size]``, slot
+    ``pos % page_size``; rows without a mapping there — inactive slots, or
+    rows excluded by ``write_mask`` (masked cloud step) — are redirected to
+    the trash page with ``pos = -1``, so no cache merge is needed
+    afterwards.  Attention then gathers the logical K/V view through the
+    table and masks exactly like the dense ring path."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ps = cache["kp"].shape[1]
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    knew = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype))
+    vnew = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        knew = knew + params["bk"].astype(x.dtype)
+        vnew = vnew + params["bv"].astype(x.dtype)
+    q = q.reshape(b, 1, h, hd)
+    knew = knew.reshape(b, 1, kvh, hd)
+    vnew = vnew.reshape(b, 1, kvh, hd)
+    if use_rope:
+        q = apply_rope(q, pos_b[:, None], cfg.rope_theta)
+        knew = apply_rope(knew, pos_b[:, None], cfg.rope_theta)
+
+    page = block_tbl[jnp.arange(b), pos_b // ps]        # (B,)
+    ok = page >= 0
+    if write_mask is not None:
+        ok &= write_mask
+    dest = jnp.where(ok, page, 0)
+    slot = (pos_b % ps).astype(jnp.int32)
+    cache = {
+        "kp": cache["kp"].at[dest, slot].set(
+            knew[:, 0].astype(cache["kp"].dtype)),
+        "vp": cache["vp"].at[dest, slot].set(
+            vnew[:, 0].astype(cache["vp"].dtype)),
+        "pos": cache["pos"].at[dest, slot].set(jnp.where(ok, pos_b, -1)),
+    }
+
+    k, v, kpos = paged_gather(cache, block_tbl)
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (kpos >= 0) & (kpos <= pos_b[:, None])
+    if window:
+        valid &= (pos_b[:, None] - kpos) < window
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return y, cache
 
 
 def build_cross_cache(params: Params, cfg: ModelConfig,

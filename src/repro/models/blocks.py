@@ -24,7 +24,8 @@ from repro.models import mamba2 as m2
 from repro.models import moe as moe_mod
 from repro.models import xlstm
 from repro.models.attention import (attention_forward, build_cross_cache,
-                                    decode_attention, init_attn_cache)
+                                    decode_attention, decode_attention_paged,
+                                    init_attn_cache, init_paged_attn_cache)
 from repro.models.common import dense_init, layer_norm, rms_norm, split_rngs
 
 Params = Dict[str, Any]
@@ -40,6 +41,8 @@ class BlockCtx:
     pos: Any = None                         # decode position: scalar or (B,)
     max_seq: int = 0                        # cache capacity (decode)
     cache_offset: int = 0                   # prefill write offset
+    block_tbl: Optional[jax.Array] = None   # (B, max_logical) paged KV table
+    write_mask: Optional[jax.Array] = None  # (B,) rows allowed to write KV
     dtype: Any = jnp.float32
 
 
@@ -128,6 +131,27 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
             c["cross"] = init_attn_cache(cfg, batch, cfg.encoder_seq,
                                          kv_len=cfg.encoder_seq, dtype=dtype)
         return c
+    return _init_recurrent_cache(cfg, kind, batch, dtype)
+
+
+def init_block_cache_paged(cfg: ModelConfig, kind: str, batch: int,
+                           num_pages: int, page_size: int,
+                           dtype=jnp.float32) -> Params:
+    """Paged variant: self-attention K/V lives in the shared page pool
+    (no batch axis — rows address it through their block table); cross-attn
+    and recurrent state stay dense per-row (fixed size, nothing to page)."""
+    if kind in (DENSE, SHARED_ATTN, MOE):
+        c: Params = {"self": init_paged_attn_cache(cfg, num_pages, page_size,
+                                                   dtype=dtype)}
+        if cfg.is_encdec and kind != MOE:
+            c["cross"] = init_attn_cache(cfg, batch, cfg.encoder_seq,
+                                         kv_len=cfg.encoder_seq, dtype=dtype)
+        return c
+    return _init_recurrent_cache(cfg, kind, batch, dtype)
+
+
+def _init_recurrent_cache(cfg: ModelConfig, kind: str, batch: int,
+                          dtype) -> Params:
     if kind == MLSTM:
         return xlstm.init_mlstm_cache(cfg, batch, dtype)
     if kind == SLSTM:
@@ -203,10 +227,16 @@ def block_decode(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
                  cache: Params, ctx: BlockCtx) -> Tuple[jax.Array, Params]:
     if kind in (DENSE, SHARED_ATTN, MOE):
         h = _norm(x, params, cfg, "ln1")
-        att, new_self = decode_attention(params["attn"], cfg, h,
-                                         cache["self"], ctx.pos,
-                                         window=ctx.window,
-                                         use_rope=cfg.use_rope)
+        if "kp" in cache["self"]:
+            att, new_self = decode_attention_paged(
+                params["attn"], cfg, h, cache["self"], ctx.pos,
+                ctx.block_tbl, window=ctx.window, use_rope=cfg.use_rope,
+                write_mask=ctx.write_mask)
+        else:
+            att, new_self = decode_attention(params["attn"], cfg, h,
+                                             cache["self"], ctx.pos,
+                                             window=ctx.window,
+                                             use_rope=cfg.use_rope)
         x = x + att
         new_cache = dict(cache)
         new_cache["self"] = new_self

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.configs.base import DENSE, MOE, SHARED_ATTN, ModelConfig
 from repro.launch import sharding as shardlib
 from repro.models.blocks import (BlockCtx, block_decode, block_forward,
-                                 init_block, init_block_cache)
+                                 init_block, init_block_cache,
+                                 init_block_cache_paged)
 from repro.models.common import (embed_init, layer_norm, rms_norm,
                                  sinusoidal_positions, split_rngs)
 
@@ -314,6 +315,26 @@ class Model:
             caches[si] = _stack(per_layer) if not seg.shared else per_layer[0]
         return caches
 
+    def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
+                         seg_indices: Optional[Sequence[int]] = None,
+                         dtype=None) -> Dict[int, Params]:
+        """Block-paged caches: self-attention K/V is pooled across rows in
+        ``num_pages`` pages of ``page_size`` tokens (plus a trash page) and
+        addressed through a per-row block table passed to ``decode_step``;
+        cross-attention / recurrent state stays dense per row."""
+        cfg = self.cfg
+        dt = dtype or self.compute_dtype
+        seg_indices = (range(len(self.segments)) if seg_indices is None
+                       else seg_indices)
+        caches: Dict[int, Params] = {}
+        for si in seg_indices:
+            seg = self.segments[si]
+            per_layer = [init_block_cache_paged(cfg, seg.kind, batch,
+                                                num_pages, page_size, dt)
+                         for _ in range(seg.length)]
+            caches[si] = _stack(per_layer) if not seg.shared else per_layer[0]
+        return caches
+
     def attention_only(self, seg_indices: Optional[Sequence[int]] = None
                        ) -> bool:
         """True when every segment is attention-style (KV-cached).  Such
@@ -406,19 +427,27 @@ class Model:
     def decode_step(self, params: Params, token: jax.Array,
                     caches: Dict[int, Params], pos: jax.Array,
                     seg_indices: Optional[Sequence[int]] = None,
-                    collect_exits: bool = True):
+                    collect_exits: bool = True,
+                    block_tbl: Optional[jax.Array] = None,
+                    write_mask: Optional[jax.Array] = None):
         """token: (B,1) -> (final hidden (B,1,d), exit_hiddens, caches).
-        ``pos`` is a scalar or a per-row (B,) position vector."""
+        ``pos`` is a scalar or a per-row (B,) position vector.  Paged caches
+        additionally need ``block_tbl`` (B, max_logical); ``write_mask``
+        (B,) bool redirects masked rows' KV writes to the trash page."""
         seg_indices = seg_indices or self.all_segments()
         x = self.embed_tokens(params, token, pos_offset=pos)
-        ctx = BlockCtx(pos=pos, dtype=self.compute_dtype)
+        ctx = BlockCtx(pos=pos, block_tbl=block_tbl, write_mask=write_mask,
+                       dtype=self.compute_dtype)
         return self.decode_segments(params, x, ctx, seg_indices, caches,
                                     collect_exits=collect_exits)
 
     def decode_from_hidden(self, params: Params, hidden: jax.Array,
                            caches: Dict[int, Params], pos: jax.Array,
-                           seg_indices: Sequence[int]):
+                           seg_indices: Sequence[int],
+                           block_tbl: Optional[jax.Array] = None,
+                           write_mask: Optional[jax.Array] = None):
         """Cloud-partition decode: continue from an uploaded hidden state."""
-        ctx = BlockCtx(pos=pos, dtype=self.compute_dtype)
+        ctx = BlockCtx(pos=pos, block_tbl=block_tbl, write_mask=write_mask,
+                       dtype=self.compute_dtype)
         return self.decode_segments(params, hidden, ctx, seg_indices, caches,
                                     collect_exits=False)

@@ -21,7 +21,13 @@ Two execution engines implement that contract:
     gating; one masked cloud call serves every below-θ row of a step.
     Finished slots are recycled and refilled from the request queue without
     recompiling (prompt lengths are bucketed; the decode graph is compiled
-    once per pool size).  See docs/serving.md for the slot lifecycle.
+    once per pool size).  KV lives either in per-slot dense rings
+    (``kv_layout="dense"``: memory B x max_seq) or in a block-paged pool
+    shared across slots (``kv_layout="paged"``: memory num_pages x
+    page_size, per-slot block tables, admission back-pressure when pages
+    run out, and per-stream context up to max_ctx > max_seq).  See
+    docs/serving.md for the slot lifecycle and docs/kv_paging.md for the
+    paged layout.
   * ``ServingSystem.generate_sequential`` — the seed's per-client loop
     (batch=1, one Python iteration per token).  Kept as the reference
     implementation: the batched engine is token-for-token equivalent to it
@@ -46,7 +52,9 @@ import numpy as np
 from repro.core.collm import CoLLM, CollmConfig
 from repro.core.content_manager import ContentManager
 from repro.core.exits import select_exit_logits
+from repro.core.paging import PagePool, pages_needed
 from repro.core.transport import StatePacket, packet_bytes, quantize
+from repro.models.attention import paged_reset_pages, paged_scatter_prefill
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
 
@@ -196,18 +204,54 @@ def _bucket(n: int, floor: int = 8) -> int:
     return b
 
 
+def _put_row(f: jax.Array, r: jax.Array, j) -> jax.Array:
+    """Insert one cache row into a pooled leaf; the batch axis is located
+    by shape mismatch (stacked segments carry batch at axis 1, shared
+    segments at axis 0)."""
+    if f.shape == r.shape:                          # pool of size 1
+        return r.astype(f.dtype)
+    axis = next(i for i, (a, b) in enumerate(zip(f.shape, r.shape))
+                if a != b)
+    return jax.lax.dynamic_update_slice_in_dim(f, r.astype(f.dtype), j, axis)
+
+
 def _scatter_row(full: Pytree, row: Pytree, j) -> Pytree:
-    """Insert a single-row cache pytree into a batched pool at row j.
-    The batch axis of each leaf is located by shape mismatch (stacked
-    segments carry batch at axis 1, shared segments at axis 0)."""
-    def put(f, r):
-        if f.shape == r.shape:                      # pool of size 1
-            return r.astype(f.dtype)
-        axis = next(i for i, (a, b) in enumerate(zip(f.shape, r.shape))
-                    if a != b)
-        return jax.lax.dynamic_update_slice_in_dim(
-            f, r.astype(f.dtype), j, axis)
-    return jax.tree.map(put, full, row)
+    """Insert a single-row cache pytree into a batched pool at row j."""
+    return jax.tree.map(lambda f, r: _put_row(f, r, j), full, row)
+
+
+def _scatter_row_paged(full: Pytree, row: Pytree, j,
+                       pages: jax.Array) -> Pytree:
+    """Paged admission scatter: self-attention K/V of the prefilled row is
+    written into its allocated physical pages (``pages``: one id per
+    logical prompt page, -1 entries redirect to the trash page); every
+    other cache leaf (cross-attn, recurrent state) is a dense per-row
+    scatter at row j exactly like the dense layout."""
+    def go(f: Pytree, r: Pytree) -> Pytree:
+        if isinstance(f, dict):
+            if "kp" in f:
+                if f["kp"].ndim == 5:       # stacked: (L, P, ps, KV, d)
+                    return jax.vmap(paged_scatter_prefill,
+                                    in_axes=(0, 0, None))(f, r, pages)
+                return paged_scatter_prefill(f, r, pages)
+            return {k: go(f[k], r[k]) for k in f}
+        return _put_row(f, r, j)
+    return {si: go(full[si], row[si]) for si in full}
+
+
+def _reset_pages_tree(caches: Pytree, pages: jax.Array) -> Pytree:
+    """Invalidate freed physical pages across every paged cache node, so a
+    page returned to the free list never leaks a retired stream's K/V."""
+    def go(c: Pytree) -> Pytree:
+        if isinstance(c, dict):
+            if "kp" in c:
+                if c["kp"].ndim == 5:
+                    return jax.vmap(paged_reset_pages,
+                                    in_axes=(0, None))(c, pages)
+                return paged_reset_pages(c, pages)
+            return {k: go(v) for k, v in c.items()}
+        return c
+    return {si: go(c) for si, c in caches.items()}
 
 
 class BatchScheduler:
@@ -217,12 +261,23 @@ class BatchScheduler:
     together under one jitted edge step with per-row positions; exits are
     gated per row; one masked cloud call serves all below-θ rows of a tick;
     finished slots are refilled from the queue without recompiling.
+
+    With ``CollmConfig.kv_layout="paged"`` the scheduler also owns a
+    ``PagePool``: admission reserves the worst-case page count (and
+    back-pressures when the pool is exhausted), prefill scatters the
+    prompt's K/V into freshly allocated pages, each decode tick allocates a
+    page only when a row crosses a page boundary, and retirement bulk-frees
+    the slot's pages and invalidates them on device.  The block table is
+    shared by the edge/cloud/full cache pools (same token positions) and is
+    passed into every jitted step.
     """
 
     def __init__(self, collm: CoLLM, params: Pytree, cm: ContentManager,
                  num_slots: int, max_seq: int, mode: str = "collm",
                  sampler: str = "greedy", temperature: float = 1.0,
-                 top_k: int = 0, seed: int = 0):
+                 top_k: int = 0, seed: int = 0,
+                 max_ctx: Optional[int] = None,
+                 num_pages: Optional[int] = None):
         if mode not in ("collm", "standalone", "cloud"):
             raise ValueError(mode)
         self.collm = collm
@@ -239,28 +294,82 @@ class BatchScheduler:
         self._rng = jax.random.PRNGKey(seed)
         self.slots = [_Slot(index=i) for i in range(num_slots)]
 
+        # KV layout.  dense: every slot owns a max_seq ring (pool memory
+        # B x max_seq; a slot can never hold more than max_seq).  paged:
+        # slots share num_pages x page_size tokens of K/V through per-slot
+        # block tables — one stream may grow to max_ctx (> max_seq) as long
+        # as pages are free, and admission back-pressures on the pool
+        # instead of failing (docs/kv_paging.md).
+        self.layout = self.ccfg.kv_layout
+        if self.layout not in ("dense", "paged"):
+            raise ValueError(f"kv_layout {self.layout!r}")
+        self.pool: Optional[PagePool] = None
+        self._tbl_device: Optional[jax.Array] = None   # cached device table
+        if self.layout == "paged":
+            ps = self.ccfg.page_size
+            self.max_ctx = max_ctx or max_seq
+            n_pages = num_pages or num_slots * pages_needed(max_seq, ps)
+            self.pool = PagePool(n_pages, ps, num_slots,
+                                 pages_needed(self.max_ctx, ps))
+            row_seq = _bucket(self.max_ctx)
+        else:
+            self.max_ctx = max_seq
+            row_seq = max_seq
+        self._row_seq = row_seq        # single-row prefill cache capacity
+
         # pooled caches (compiled once per pool size; refills only scatter)
         if mode == "cloud":
-            self.main_caches = self.model.init_cache(num_slots, max_seq)
-            self._full_row0 = self.model.init_cache(1, max_seq)
+            self.main_caches = self._init_pool_cache(self.model.init_cache,
+                                                     self.model.init_paged_cache)
+            self._full_row0 = self.model.init_cache(1, row_seq)
         else:
-            self.edge_caches = collm.init_edge_cache(num_slots, max_seq)
-            self._edge_row0 = collm.init_edge_cache(1, max_seq)
+            self.edge_caches = self._init_pool_cache(
+                collm.init_edge_cache, collm.init_edge_cache_paged)
+            self._edge_row0 = collm.init_edge_cache(1, row_seq)
             if mode == "collm":
-                self.cloud_caches = collm.init_cloud_cache(num_slots, max_seq)
-                self._cloud_row0 = collm.init_cloud_cache(1, max_seq)
+                self.cloud_caches = self._init_pool_cache(
+                    collm.init_cloud_cache, collm.init_cloud_cache_paged)
+                self._cloud_row0 = collm.init_cloud_cache(1, row_seq)
 
         self._edge_step = jax.jit(collm.edge_step)
         self._full_step = jax.jit(collm.full_step)
         self._cloud_masked = jax.jit(collm.cloud_step_masked)
         self._ring_cloud = jax.jit(collm.ring_cloud_steps)
         self._scatter = jax.jit(_scatter_row)
+        self._scatter_paged = jax.jit(_scatter_row_paged)
+        self._reset_pages = jax.jit(_reset_pages_tree)
         self._edge_prefill = jax.jit(collm.edge_prefill_padded)
         self._cloud_prefill = jax.jit(collm.cloud_prefill_padded)
         self._full_prefill = jax.jit(collm.full_prefill_padded)
         # recurrent segments can't absorb right-padding (their state would
         # advance through pad tokens) -> exact-length prefill for them
         self._pad_ok = self.model.attention_only()
+
+    def _init_pool_cache(self, dense_init, paged_init):
+        if self.layout == "paged":
+            return paged_init(self.B, self.pool.num_pages,
+                              self.pool.page_size)
+        return dense_init(self.B, self.max_seq)
+
+    def kv_cache_bytes(self) -> int:
+        """Device bytes held by the pooled KV/state caches (the number the
+        paged layout shrinks: num_pages x page_size instead of B x max_seq)."""
+        total = 0
+        for name in ("main_caches", "edge_caches", "cloud_caches"):
+            c = getattr(self, name, None)
+            if c is not None:
+                total += sum(l.size * l.dtype.itemsize
+                             for l in jax.tree.leaves(c))
+        return total
+
+    def _block_tbl(self) -> Optional[jax.Array]:
+        """Device copy of the pool's block table, re-uploaded only after an
+        alloc/free actually changed it (most ticks change nothing)."""
+        if self.pool is None:
+            return None
+        if self._tbl_device is None:
+            self._tbl_device = jnp.asarray(self.pool.block_table)
+        return self._tbl_device
 
     # -- sampling -----------------------------------------------------------
     def _pick(self, logits: np.ndarray) -> np.ndarray:
@@ -273,18 +382,56 @@ class BatchScheduler:
             temperature=self.temperature, top_k=self.top_k))
 
     # -- admission ----------------------------------------------------------
+    def _admissible(self, req: Request, p_len: int, pad: int) -> bool:
+        """Capacity check.  Impossible requests raise; a request the paged
+        pool could serve but not *right now* stays queued (back-pressure)."""
+        if p_len + req.max_new > self.max_ctx or pad > self._row_seq:
+            raise ValueError(
+                f"request {req.device_id}: prompt {p_len} + max_new "
+                f"{req.max_new} exceeds max context {self.max_ctx}")
+        if self.pool is None:
+            return True
+        need = pages_needed(p_len + req.max_new, self.pool.page_size)
+        if need > self.pool.num_pages:
+            raise ValueError(
+                f"request {req.device_id}: needs {need} pages but the pool "
+                f"only has {self.pool.num_pages}")
+        return self.pool.can_admit(p_len + req.max_new)
+
+    def _admit_pages(self, slot: _Slot, p_len: int, pad: int,
+                     max_new: int) -> np.ndarray:
+        """Reserve the worst case, allocate the prompt's pages now, and
+        return the scatter table (one physical id per logical bucket page;
+        -1 = trash for bucket padding past the prompt)."""
+        pool = self.pool
+        pool.reserve(slot.index, p_len + max_new)
+        n_prompt = pages_needed(p_len, pool.page_size)
+        for lp in range(n_prompt):
+            pool.alloc(slot.index, lp)
+        pages = np.full((pages_needed(pad, pool.page_size),), -1, np.int32)
+        pages[:n_prompt] = pool.block_table[slot.index, :n_prompt]
+        self._tbl_device = None
+        return pages
+
+    def _scatter_admit(self, full: Pytree, row: Pytree, slot: _Slot,
+                       pages: Optional[np.ndarray]) -> Pytree:
+        if pages is None:
+            return self._scatter(full, row, slot.index)
+        return self._scatter_paged(full, row, slot.index, jnp.asarray(pages))
+
     def _admit(self, queue) -> None:
         for slot in self.slots:
             if slot.active or not queue:
                 continue
-            req: Request = queue.popleft()
+            req: Request = queue[0]
             prompt = np.asarray(req.prompt, np.int32)
             p_len = len(prompt)
             pad = _bucket(p_len) if self._pad_ok else p_len
-            if p_len + req.max_new > self.max_seq or pad > self.max_seq:
-                raise ValueError(
-                    f"request {req.device_id}: prompt {p_len} + max_new "
-                    f"{req.max_new} exceeds max_seq {self.max_seq}")
+            if not self._admissible(req, p_len, pad):
+                break                       # FIFO back-pressure: wait for pages
+            queue.popleft()
+            pages = (self._admit_pages(slot, p_len, pad, req.max_new)
+                     if self.pool is not None else None)
             tokens = np.zeros((1, pad), np.int32)
             tokens[0, :p_len] = prompt
             st = GenStats()
@@ -292,8 +439,8 @@ class BatchScheduler:
                 t0 = time.perf_counter()
                 logits, row = self._full_prefill(self.params, tokens, p_len,
                                                  self._full_row0)
-                self.main_caches = self._scatter(self.main_caches, row,
-                                                 slot.index)
+                self.main_caches = self._scatter_admit(self.main_caches, row,
+                                                       slot, pages)
                 first = self._pick(np.asarray(logits)[:, 0])
                 st.cloud_time += time.perf_counter() - t0
                 tok = int(first[0])
@@ -301,8 +448,8 @@ class BatchScheduler:
                 t0 = time.perf_counter()
                 decisions, h1_seq, row = self._edge_prefill(
                     self.params, tokens, p_len, self._edge_row0)
-                self.edge_caches = self._scatter(self.edge_caches, row,
-                                                 slot.index)
+                self.edge_caches = self._scatter_admit(self.edge_caches, row,
+                                                       slot, pages)
                 fetched = jax.device_get(
                     {l: (d.token, d.confidence, d.logits)
                      for l, d in decisions.items()})
@@ -313,8 +460,8 @@ class BatchScheduler:
                     t0 = time.perf_counter()
                     logits, crow = self._cloud_prefill(
                         self.params, h1_seq, p_len, self._cloud_row0)
-                    self.cloud_caches = self._scatter(self.cloud_caches,
-                                                      crow, slot.index)
+                    self.cloud_caches = self._scatter_admit(
+                        self.cloud_caches, crow, slot, pages)
                     prefill_logits = np.asarray(logits)[:, 0]
                     st.cloud_time += time.perf_counter() - t0
                     st.upload_bytes += _prompt_wire_bytes(
@@ -360,7 +507,24 @@ class BatchScheduler:
             if self.mode == "collm":
                 self.cm.end_of_sequence(req.device_id)
             slot.active = False
+            if self.pool is not None:
+                self._free_pages(slot)
         return done
+
+    def _free_pages(self, slot: _Slot) -> None:
+        """Bulk-free a retired slot's pages and invalidate them on device
+        (pos = -1) so reallocation can never leak its K/V."""
+        freed = self.pool.free_slot(slot.index)
+        self._tbl_device = None
+        if not freed:
+            return
+        ids = np.full((self.pool.max_logical,), -1, np.int32)
+        ids[:len(freed)] = freed
+        ids = jnp.asarray(ids)
+        for name in ("main_caches", "edge_caches", "cloud_caches"):
+            c = getattr(self, name, None)
+            if c is not None:
+                setattr(self, name, self._reset_pages(c, ids))
 
     # -- one decode tick ----------------------------------------------------
     def tick(self) -> None:
@@ -372,6 +536,12 @@ class BatchScheduler:
         for s in active:
             tokens[s.index, 0] = s.last_token
             pos[s.index] = s.pos
+            if self.pool is not None:
+                # alloc-on-write: this tick writes KV at s.pos
+                lp = s.pos // self.pool.page_size
+                if self.pool.block_table[s.index, lp] == -1:
+                    self.pool.alloc(s.index, lp)
+                    self._tbl_device = None
 
         if self.mode == "cloud":
             self._tick_cloud(active, tokens, pos)
@@ -386,7 +556,7 @@ class BatchScheduler:
         t0 = time.perf_counter()
         tok, logits, self.main_caches = self._full_step(
             self.params, jnp.asarray(tokens), self.main_caches,
-            jnp.asarray(pos))
+            jnp.asarray(pos), self._block_tbl())
         if self.sampler == "greedy":
             next_tok = np.asarray(tok)
         else:
@@ -400,7 +570,8 @@ class BatchScheduler:
         collm, ccfg = self.collm, self.ccfg
         t0 = time.perf_counter()
         out = self._edge_step(self.params, jnp.asarray(tokens),
-                              self.edge_caches, jnp.asarray(pos))
+                              self.edge_caches, jnp.asarray(pos),
+                              self._block_tbl())
         self.edge_caches = out.caches
         want_logits = self.sampler != "greedy"
         get = {
@@ -495,7 +666,8 @@ class BatchScheduler:
                     valid[i, s.index] = True
             logits, self.cloud_caches = self._ring_cloud(
                 self.params, {k: jnp.asarray(v) for k, v in ring.items()},
-                jnp.asarray(ring_pos), jnp.asarray(valid), self.cloud_caches)
+                jnp.asarray(ring_pos), jnp.asarray(valid), self.cloud_caches,
+                self._block_tbl())
         else:
             pkts = self.cm.take_upload_batch(
                 [(s.req.device_id, s.pos) for s in needy])
@@ -508,7 +680,8 @@ class BatchScheduler:
                     dense[k][s.index] = np.asarray(pkt.hidden[k])[0]
             logits, self.cloud_caches = self._cloud_masked(
                 self.params, {k: jnp.asarray(v) for k, v in dense.items()},
-                self.cloud_caches, jnp.asarray(pos), jnp.asarray(mask))
+                self.cloud_caches, jnp.asarray(pos), jnp.asarray(mask),
+                self._block_tbl())
 
         if self.sampler == "greedy":
             cloud_tok = np.argmax(np.asarray(logits), axis=-1)
@@ -548,6 +721,13 @@ class BatchScheduler:
             if any(s.active for s in self.slots):
                 self.tick()
                 self._collect(results, stats)
+            elif queue:
+                # nothing active yet the head request could not be admitted:
+                # no tick can ever free pages, so fail loudly instead of
+                # spinning (cannot happen with reservation accounting).
+                raise RuntimeError(
+                    f"scheduler wedged: {len(queue)} queued, 0 active, "
+                    f"pool {self.pool and self.pool.available_pages} pages")
         return results, stats
 
 
@@ -569,15 +749,19 @@ class ServingSystem:
                  *, num_slots: Optional[int] = None,
                  sampler: str = "greedy", temperature: float = 1.0,
                  top_k: int = 0, eos_id: Optional[int] = None,
-                 seed: int = 0) -> Dict[str, Any]:
+                 seed: int = 0, max_ctx: Optional[int] = None,
+                 num_pages: Optional[int] = None) -> Dict[str, Any]:
         """mode: collm | standalone | cloud.  One client per prompt, decoded
         by the continuous-batching ``BatchScheduler`` (num_slots streams in
-        flight; defaults to min(len(prompts), 8))."""
+        flight; defaults to min(len(prompts), 8)).  The KV layout follows
+        ``CollmConfig.kv_layout``; ``max_ctx``/``num_pages`` size the paged
+        pool (defaults: max_ctx = max_seq, num_pages = dense-equivalent)."""
         slots = num_slots or max(1, min(len(prompts), 8))
         longest = max(len(p) for p in prompts)
         max_seq = max_seq or (longest + max_new + 8)
         max_seq = max(max_seq, _bucket(longest))
-        key = (mode, slots, max_seq, sampler, temperature, top_k, seed)
+        key = (mode, slots, max_seq, sampler, temperature, top_k, seed,
+               max_ctx, num_pages)
         sched = self._schedulers.get(key)
         if sched is None:
             # bounded cache: each scheduler owns pooled device caches
@@ -587,7 +771,7 @@ class ServingSystem:
             sched = BatchScheduler(
                 self.collm, self.params, self.cloud.cm, slots, max_seq,
                 mode=mode, sampler=sampler, temperature=temperature,
-                top_k=top_k, seed=seed)
+                top_k=top_k, seed=seed, max_ctx=max_ctx, num_pages=num_pages)
             self._schedulers[key] = sched
         reqs = [Request(device_id=f"edge-{i}", prompt=np.asarray(p),
                         max_new=max_new, eos_id=eos_id)

@@ -1,0 +1,259 @@
+"""Block-paged KV cache: dense-vs-paged equivalence through the batched
+engine, the lifted per-slot context bound, page-reuse safety (no stale K/V
+leaks), out-of-pages admission back-pressure, and PagePool accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core.collm import CoLLM, CollmConfig
+from repro.core.paging import PagePool, pages_needed
+from repro.models.attention import (init_paged_attn_cache, paged_gather,
+                                    paged_reset_pages, paged_scatter_prefill)
+from repro.serving.engine import ServingSystem
+
+
+def _prompts(data, lens):
+    return [data.sample_tokens(n) for n in lens]
+
+
+def _systems(model, params, **ccfg_kw):
+    dense = ServingSystem(model, params, CollmConfig(**ccfg_kw))
+    paged = ServingSystem(model, params,
+                          CollmConfig(kv_layout="paged", **ccfg_kw))
+    return dense, paged
+
+
+# ---------------------------------------------------------------------------
+# dense vs paged equivalence (the tentpole's correctness contract)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("theta", [0.8, 1.0])
+def test_paged_equals_dense_collm(tiny_trained, theta):
+    """Greedy decode must be token-for-token identical across KV layouts —
+    more requests than slots, mixed prompt lengths, so slot retirement
+    frees pages that later admissions reuse."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 11, 9, 12, 10])
+    dense, paged = _systems(model, params, theta=theta)
+    d = dense.generate(prompts, 14, mode="collm", num_slots=3)
+    p = paged.generate(prompts, 14, mode="collm", num_slots=3)
+    assert p["tokens"] == d["tokens"]
+    ds, ps = d["stats"], p["stats"]
+    assert (ds.cloud_requests, ds.exits_l1, ds.exits_l2) == \
+        (ps.cloud_requests, ps.exits_l1, ps.exits_l2)
+
+
+@pytest.mark.parametrize("mode", ["standalone", "cloud"])
+def test_paged_equals_dense_other_modes(tiny_trained, mode):
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 8, 12])
+    dense, paged = _systems(model, params, theta=0.8)
+    d = dense.generate(prompts, 10, mode=mode, num_slots=2)
+    p = paged.generate(prompts, 10, mode=mode, num_slots=2)
+    assert p["tokens"] == d["tokens"]
+
+
+def test_paged_equals_dense_hybrid_arch():
+    """Hybrid (zamba2-style) smoke model: paged attention nodes coexist
+    with dense recurrent state in one cache tree — exercises the
+    mixed-node merge in ``CoLLM._caches_where_rows`` (recurrent leaves
+    still where-merged per row, paged nodes passed through) and the
+    exact-length (non-bucketed) prefill scatter path."""
+    from repro.configs.base import reduced
+    from repro.configs.registry import get_config
+    from repro.models.registry import build_model
+
+    cfg = reduced(get_config("zamba2-1.2b"), n_layers=4)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n) for n in (9, 12, 8)]
+    dense, paged = _systems(model, params, theta=0.8)
+    d = dense.generate(prompts, 12, mode="collm", num_slots=2)
+    p = paged.generate(prompts, 12, mode="collm", num_slots=2)
+    assert p["tokens"] == d["tokens"]
+
+
+def test_paged_backfill_equals_dense(tiny_trained):
+    """Backfill rings drain straight into pages (exact cloud KV)."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 9, 11])
+    dense, paged = _systems(model, params, theta=0.8, backfill=True)
+    d = dense.generate(prompts, 12, mode="collm", num_slots=2)
+    p = paged.generate(prompts, 12, mode="collm", num_slots=2)
+    assert p["tokens"] == d["tokens"]
+
+
+# ---------------------------------------------------------------------------
+# the unlock: per-slot context beyond the old max_seq ring
+# ---------------------------------------------------------------------------
+def test_long_stream_exceeds_old_slot_bound(tiny_trained):
+    """A 16-slot paged pool holding 32 pages x 16 tokens — exactly the
+    memory of 16 dense max_seq=32 rings — serves one stream whose context
+    (48 + 24 = 72) exceeds that old per-slot bound, emitting the same
+    tokens as a dense engine that pays for max_seq=128 rings."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = [data.sample_tokens(48)] + _prompts(data, [8] * 5)
+    dense, paged = _systems(model, params, theta=0.8)
+    d = dense.generate(prompts, 24, mode="collm", num_slots=16, max_seq=128)
+    p = paged.generate(prompts, 24, mode="collm", num_slots=16, max_seq=32,
+                       max_ctx=128, num_pages=32)
+    assert p["tokens"] == d["tokens"]
+    dsched = next(iter(dense._schedulers.values()))
+    psched = next(iter(paged._schedulers.values()))
+    # pool memory is num_pages x page_size, not B x max_ctx
+    assert psched.kv_cache_bytes() < dsched.kv_cache_bytes()
+    assert psched.pool.stats.high_water <= psched.pool.num_pages
+    assert psched.pool.free_pages == psched.pool.num_pages   # all retired
+
+
+# ---------------------------------------------------------------------------
+# page reuse never leaks stale K/V
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_page_reuse_no_stale_leak_property(seed, tiny_ee_cfg):
+    """Free + reallocate a retired stream's pages: the new stream's gather
+    must see only its own positions (everything else pos = -1), so stream
+    A's K/V can never appear in stream B's attention window."""
+    rng = np.random.RandomState(seed)
+    ps, num_pages, n_lp = 8, 6, 3
+    pool = PagePool(num_pages, ps, 2, n_lp)
+    cache = init_paged_attn_cache(tiny_ee_cfg, num_pages, ps)
+
+    len_a = int(rng.randint(ps + 1, n_lp * ps))      # stream A spans pages
+    pool.reserve(0, len_a)
+    pages_a = [pool.alloc(0, lp) for lp in range(pages_needed(len_a, ps))]
+    kvh, hd = tiny_ee_cfg.n_kv_heads, tiny_ee_cfg.resolved_head_dim
+    row = {
+        "k": jnp.asarray(rng.randn(1, len_a, kvh, hd), jnp.float32),
+        "v": jnp.asarray(rng.randn(1, len_a, kvh, hd), jnp.float32),
+        "pos": jnp.arange(len_a, dtype=jnp.int32)[None],
+    }
+    cache = paged_scatter_prefill(cache, row, jnp.asarray(pages_a))
+
+    freed = pool.free_slot(0)
+    assert sorted(freed) == sorted(pages_a)
+    cache = paged_reset_pages(cache, jnp.asarray(freed))
+
+    len_b = int(rng.randint(1, len_a))               # B shorter than A
+    pool.reserve(1, len_b)
+    pages_b = [pool.alloc(1, lp) for lp in range(pages_needed(len_b, ps))]
+    assert set(pages_b) <= set(freed)                # genuinely reused
+    row_b = {
+        "k": jnp.asarray(rng.randn(1, len_b, kvh, hd), jnp.float32),
+        "v": jnp.asarray(rng.randn(1, len_b, kvh, hd), jnp.float32),
+        "pos": jnp.arange(len_b, dtype=jnp.int32)[None],
+    }
+    cache = paged_scatter_prefill(cache, row_b, jnp.asarray(pages_b))
+
+    tbl = jnp.asarray(pool.block_table[1:2])
+    k, v, kpos = paged_gather(cache, tbl)
+    kpos = np.asarray(kpos[0])
+    valid = kpos >= 0
+    # every visible entry belongs to stream B; stream A's longer tail
+    # (positions len_b..len_a-1) must be gone
+    assert valid.sum() == len_b
+    assert np.array_equal(np.sort(kpos[valid]), np.arange(len_b))
+    np.testing.assert_array_equal(
+        np.asarray(k[0])[valid], np.asarray(row_b["k"][0]))
+
+
+def test_page_reuse_engine_deterministic(tiny_trained):
+    """Re-running the same requests through one scheduler reuses the freed
+    pages of the first run; outputs must be identical both times."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [9, 12, 8, 10])
+    paged = ServingSystem(model, params,
+                          CollmConfig(theta=0.8, kv_layout="paged"))
+    r1 = paged.generate(prompts, 12, mode="collm", num_slots=2)
+    r2 = paged.generate(prompts, 12, mode="collm", num_slots=2)
+    assert r1["tokens"] == r2["tokens"]
+
+
+# ---------------------------------------------------------------------------
+# out-of-pages admission back-pressure
+# ---------------------------------------------------------------------------
+def test_out_of_pages_backpressure(tiny_trained):
+    """A pool far smaller than the request load must delay admissions (not
+    crash, not corrupt): every stream completes with the dense tokens and
+    the pool never oversubscribes."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8] * 6)
+    dense, paged = _systems(model, params, theta=0.8)
+    d = dense.generate(prompts, 24, mode="collm", num_slots=4, max_seq=40)
+    # 4 pages x 16 tokens: one stream needs 2 pages -> at most 2 in flight
+    p = paged.generate(prompts, 24, mode="collm", num_slots=4, max_seq=40,
+                       num_pages=4)
+    assert p["tokens"] == d["tokens"]
+    sched = next(iter(paged._schedulers.values()))
+    assert sched.pool.stats.high_water <= 4
+    assert sched.pool.free_pages == 4
+
+
+def test_impossible_request_raises(tiny_trained):
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    paged = ServingSystem(model, params,
+                          CollmConfig(theta=0.8, kv_layout="paged"))
+    with pytest.raises(ValueError, match="pages"):
+        # needs more pages than the whole pool ever has
+        paged.generate(_prompts(data, [8]), 60, mode="collm", num_slots=2,
+                       max_seq=16, max_ctx=80, num_pages=2)
+
+
+# ---------------------------------------------------------------------------
+# fused single-graph step on the paged layout
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("theta", [0.8, 1.0])
+def test_fused_step_paged_matches_dense(tiny_trained, theta):
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    b, max_seq, steps = 2, 32, 6
+    tok0 = jnp.asarray(np.stack([data.sample_tokens(1) for _ in range(b)]))
+    outs = {}
+    for layout in ("dense", "paged"):
+        ccfg = CollmConfig(theta=theta, backfill=True, kv_layout=layout)
+        collm = CoLLM(tiny_trained["model"], ccfg)
+        state = collm.init_fused_state(b, max_seq)
+        step = jax.jit(collm.fused_step)
+        tok, toks = tok0, []
+        for i in range(steps):
+            nxt, _, state = step(params, tok, state, jnp.asarray(i))
+            toks.append(np.asarray(nxt))
+            tok = nxt[:, None].astype(jnp.int32)
+        outs[layout] = np.stack(toks)
+    np.testing.assert_array_equal(outs["dense"], outs["paged"])
+
+
+# ---------------------------------------------------------------------------
+# PagePool accounting
+# ---------------------------------------------------------------------------
+def test_page_pool_accounting():
+    pool = PagePool(6, 4, 2, 8)
+    assert pool.can_admit(24) and not pool.can_admit(25)
+    assert pool.reserve(0, 10) == 3                  # ceil(10/4)
+    assert pool.available_pages == 3
+    p0 = pool.alloc(0, 0)
+    assert p0 != 0                                   # trash page never handed out
+    assert pool.alloc(0, 0) == p0                    # idempotent re-map
+    assert pool.free_pages == 5 and pool.available_pages == 3
+    pool.alloc(0, 1)
+    pool.alloc(0, 2)
+    with pytest.raises(RuntimeError, match="beyond reservation"):
+        pool.alloc(0, 3)
+    pool.reserve(1, 12)
+    with pytest.raises(RuntimeError, match="out of pages"):
+        pool.reserve(1, 4)
+    freed = pool.free_slot(0)
+    assert len(freed) == 3 and pool.free_pages == 6
+    assert np.all(pool.block_table[0] == -1)

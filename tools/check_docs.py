@@ -1,0 +1,69 @@
+#!/usr/bin/env python
+"""Docs gate for CI (stdlib only, no network).
+
+1. Markdown link check: every relative link in README.md and docs/*.md
+   must point at a file (or file#anchor) that exists in the repo.
+   External (http/https/mailto) links are not fetched.
+2. Sync gate: the tier-1 verify command declared in ROADMAP.md must appear
+   verbatim in README.md, so the front door can never drift from the
+   command CI actually runs.
+
+Exit code 0 = docs are green; non-zero prints every violation.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — excluding images' leading "!" is unnecessary: image
+# targets must exist too.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_TIER1 = re.compile(r"\*\*Tier-1 verify:\*\*\s*`([^`]+)`")
+
+
+def doc_files() -> list[Path]:
+    return [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+
+
+def check_links() -> list[str]:
+    errors = []
+    for md in doc_files():
+        for target in _LINK.findall(md.read_text()):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not (md.parent / path).exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link -> "
+                              f"{target}")
+    return errors
+
+
+def check_tier1_sync() -> list[str]:
+    roadmap = (ROOT / "ROADMAP.md").read_text()
+    m = _TIER1.search(roadmap)
+    if not m:
+        return ["ROADMAP.md: no '**Tier-1 verify:** `...`' line found"]
+    cmd = m.group(1)
+    readme = (ROOT / "README.md").read_text()
+    if cmd not in readme:
+        return [f"README.md: tier-1 command out of sync with ROADMAP.md "
+                f"(expected to contain: {cmd})"]
+    return []
+
+
+def main() -> int:
+    errors = check_links() + check_tier1_sync()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        return 1
+    print(f"docs ok: {len(doc_files())} files link-checked, "
+          f"tier-1 command in sync")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
