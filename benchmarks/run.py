@@ -21,6 +21,7 @@ def main() -> None:
         ("roofline", roofline_table.run),
         ("throughput", throughput_bench.run),
         ("paged_kv", throughput_bench.run_paged),
+        ("async_channel", throughput_bench.run_channel),
     ]
     failures = []
     for name, fn in benches:

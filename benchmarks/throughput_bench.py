@@ -1,5 +1,6 @@
 """Serving throughput: continuous-batching scheduler vs. the seed's
-sequential per-client loop, and dense vs. block-paged KV layouts.
+sequential per-client loop, dense vs. block-paged KV layouts, and the
+async cloud channel vs. the blocking dispatch.
 
 Measures aggregate decode tokens/s on the tiny trained EE model for slot
 counts 1/4/8/16 against the sequential baseline (same request set), in
@@ -8,8 +9,17 @@ co-inference mode at θ=0.8.  The acceptance bar for the batching PR is
 additionally reports tokens/s and pooled-KV bytes per layout at 8/16
 slots (see docs/kv_paging.md).
 
+``--channel sim`` runs the async-transport comparison instead
+(docs/async_transport.md): the same WiFi-class ``AsyncSimChannel`` priced
+in virtual time, dispatched blocking vs. overlapped at 8 slots, plus a
+deadline-miss trace (replies slower than the deadline -> edge-committed
+tokens instead of stalls).  With ``--check`` it asserts the overlapped
+virtual makespan beats the blocking one and that the deadline trace
+still completes every stream.
+
     PYTHONPATH=src:. python benchmarks/throughput_bench.py [--check]
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --kv-layout both
+    PYTHONPATH=src:. python benchmarks/throughput_bench.py --channel sim --check
 """
 from __future__ import annotations
 
@@ -19,9 +29,10 @@ import time
 import numpy as np
 
 from repro.core.collm import CollmConfig
+from repro.core.transport import AsyncSimChannel, ScriptedChannel
 from repro.serving.engine import ServingSystem
 
-from benchmarks.common import tiny_trained_model
+from benchmarks.common import PAPER_NET, tiny_trained_model
 
 SLOT_COUNTS = (1, 4, 8, 16)
 
@@ -111,6 +122,79 @@ def run_paged(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
     return out
 
 
+ASYNC_SLOTS = 8
+# virtual edge compute per decode tick: A100-class edge partition on the
+# tiny split (the absolute value only scales the virtual axis; the
+# overlap-vs-blocking *ratio* is what the bench measures)
+TICK_TIME_S = 0.01
+
+
+def run_channel(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
+                theta: float = 0.8, check: bool = False) -> dict:
+    """Async cloud channel vs. blocking dispatch under identical WiFi-class
+    ``NetworkParams``, at 8 slots, in virtual time; plus a deadline-miss
+    trace (reply latency >> deadline) showing the latency-aware early exit
+    committing edge tokens instead of stalling."""
+    tiny = tiny_trained_model()
+    model, params, data = tiny["model"], tiny["params"], tiny["data"]
+    prompts = _requests(data, n_clients)
+    total = n_clients * max_new
+    ccfg = CollmConfig(theta=theta)
+    out: dict = {}
+
+    print("channel,dispatch,slots,virtual_s,virtual_ms_per_tok,wall_s,"
+          "cloud_requests,deadline_misses,stall_s,overlap_s")
+    for overlap in (False, True):
+        ch = AsyncSimChannel(PAPER_NET, service_s=0.004)
+        sysb = ServingSystem(model, params, ccfg)
+        sysb.generate(prompts[:ASYNC_SLOTS], max_new,
+                      num_slots=ASYNC_SLOTS, channel=ch,
+                      tick_time_s=TICK_TIME_S, overlap=overlap)  # warm
+        t0 = time.perf_counter()
+        r = sysb.generate(prompts, max_new, mode="collm",
+                          num_slots=ASYNC_SLOTS, channel=ch,
+                          tick_time_s=TICK_TIME_S, overlap=overlap)
+        wall = time.perf_counter() - t0
+        st = r["stats"]
+        name = "overlapped" if overlap else "blocking"
+        out[name] = {"virtual_s": r["virtual_time"], "wall_s": wall,
+                     "stats": st}
+        print(f"wifi-sim,{name},{ASYNC_SLOTS},{r['virtual_time']:.3f},"
+              f"{1e3 * r['virtual_time'] / total:.2f},{wall:.2f},"
+              f"{st.cloud_requests},{st.deadline_misses},"
+              f"{st.stall_s:.2f},{st.overlap_s:.2f}")
+
+    # deadline-miss trace: every reply arrives long after its deadline
+    ch = ScriptedChannel([0.5], deadline_s=0.02)
+    sysd = ServingSystem(model, params, ccfg)
+    r = sysd.generate(prompts, max_new, mode="collm", num_slots=ASYNC_SLOTS,
+                      channel=ch, tick_time_s=TICK_TIME_S, fallback_after=4)
+    st = r["stats"]
+    complete = all(len(t) == max_new for t in r["tokens"])
+    out["deadline"] = {"virtual_s": r["virtual_time"], "stats": st,
+                       "complete": complete}
+    print(f"deadline-trace,overlapped,{ASYNC_SLOTS},{r['virtual_time']:.3f},"
+          f"{1e3 * r['virtual_time'] / total:.2f},-,{st.cloud_requests},"
+          f"{st.deadline_misses},{st.stall_s:.2f},{st.overlap_s:.2f}")
+    print(f"# deadline trace: {st.deadline_misses} misses -> edge-committed "
+          f"tokens, {st.fallbacks} standalone fallbacks, all streams "
+          f"complete: {complete}")
+
+    if check:
+        v_block = out["blocking"]["virtual_s"]
+        v_over = out["overlapped"]["virtual_s"]
+        assert v_over < v_block, (
+            f"overlapped dispatch ({v_over:.3f}s virtual) should beat the "
+            f"blocking path ({v_block:.3f}s virtual) at {ASYNC_SLOTS} slots")
+        assert complete and st.deadline_misses > 0, (
+            "deadline-miss trace must complete every stream via "
+            "edge-committed tokens")
+        print(f"# check passed: overlapped {v_over:.3f}s < blocking "
+              f"{v_block:.3f}s virtual; deadline trace completed with "
+              f"{st.deadline_misses} misses")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=16)
@@ -118,11 +202,20 @@ def main() -> None:
     ap.add_argument("--theta", type=float, default=0.8)
     ap.add_argument("--repeats", type=int, default=1)
     ap.add_argument("--check", action="store_true",
-                    help="assert >=3x speedup at 8 slots")
+                    help="assert >=3x speedup at 8 slots (sync) / overlap "
+                         "beats blocking + deadline trace completes (sim)")
     ap.add_argument("--kv-layout", choices=("dense", "paged", "both"),
                     default="dense",
                     help="paged/both: compare KV layouts at 8/16 slots")
+    ap.add_argument("--channel", choices=("sync", "sim"), default="sync",
+                    help="sim: async-transport comparison (overlap vs "
+                         "blocking + deadline-miss trace) instead of the "
+                         "slot sweep")
     args = ap.parse_args()
+    if args.channel == "sim":
+        run_channel(n_clients=args.clients, max_new=args.max_new,
+                    theta=args.theta, check=args.check)
+        return
     if args.kv_layout in ("dense", "both"):
         run(n_clients=args.clients, max_new=args.max_new, theta=args.theta,
             repeats=args.repeats, check=args.check)

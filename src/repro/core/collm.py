@@ -50,7 +50,14 @@ class CollmConfig:
     theta: float = 0.8
     wire_format: str = "float16"      # paper: float16; beyond-paper: int8
     max_pending: int = 4              # upload ring size (fused mode)
-    speculative: bool = False         # cloud always computes (latency-hiding)
+    # Latency hiding (paper §4.4): the cloud computes for EVERY row and the
+    # edge commits a *provisional* exit-head token without waiting — the
+    # fused step gates cloud compute on all rows, and the batched engine
+    # reconciles the provisional token against the cloud reply when it
+    # arrives (keep on match, rewind-and-replace on mismatch, keep on
+    # deadline miss).  Requires greedy decoding + attention-only models in
+    # the batched path (rewind re-decodes positions).
+    speculative: bool = False
     # Paper-faithful: the content manager RELEASES hidden states of tokens
     # that exited early, so the cloud KV cache has gaps at those positions
     # (this is why Table 2 ROUGE-L < 1 for theta < 1).  backfill=True is the
@@ -261,6 +268,83 @@ class CoLLM:
                                              write_mask=mask)
         return logits, self._caches_where_rows(mask, new_caches, caches)
 
+    def edge_step_masked(self, params: Params, token: jax.Array,
+                         caches: Dict[int, Pytree], pos: jax.Array,
+                         run_mask: jax.Array,
+                         block_tbl: Optional[jax.Array] = None) -> EdgeStepOut:
+        """Batched edge step that leaves masked-out rows' caches untouched.
+
+        The async scheduler keeps ticking the pool while some rows are
+        stalled on an in-flight cloud reply; those rows flow through the
+        batched graph as placeholders.  For attention caches a placeholder
+        write is harmless (the slot is overwritten before it is read when
+        the row resumes), but recurrent state would advance irreversibly —
+        so rows with ``run_mask=False`` keep their caches bit-for-bit
+        (paged self-attention writes to the trash page via the KV
+        ``write_mask``; everything else is merged per row)."""
+        x, exit_h, new_caches = self.model.decode_step(
+            params, token, caches, pos, self.edge_segs, block_tbl=block_tbl,
+            write_mask=run_mask)
+        decisions = {l: evaluate_exit(self.model.exit_logits(params, l, h))
+                     for l, h in exit_h.items()}
+        tok, exited, _ = first_confident_exit(decisions, self.ccfg.theta)
+        upload = quantize(exit_h[self.l_ee1], self.ccfg.wire_format)
+        return EdgeStepOut(decisions, tok, exited, upload,
+                           self._caches_where_rows(run_mask, new_caches,
+                                                   caches))
+
+    def invalidate_rows_after(self, caches: Dict[int, Pytree],
+                              cut: jax.Array,
+                              block_tbl: Optional[jax.Array] = None
+                              ) -> Dict[int, Pytree]:
+        """Per-row KV rollback: mark each row's self-attention entries at
+        positions >= ``cut[row]`` invalid (pos = -1).
+
+        The speculative decode path rewinds a row when the cloud reply
+        disagrees with its provisionally-committed token; the row's *cloud*
+        KV written for discarded positions must disappear (a position the
+        re-decoded stream never cloud-serves again would otherwise read
+        stale K/V — in blocking mode it would be a release-semantics gap).
+        Edge KV needs no repair: decode overwrites a slot before reading
+        it.  Dense rings match on the stored pos marker (wrap-safe); paged
+        nodes scatter a per-page threshold through the block table.  Rows
+        that are not being rewound pass ``cut = INT32_MAX``.  Cross-attn
+        caches and recurrent state are untouched (speculation is gated to
+        attention-only models)."""
+        cut = jnp.asarray(cut, jnp.int32)
+        big = jnp.iinfo(jnp.int32).max
+
+        def fix_dense(c: Pytree) -> Pytree:
+            p = c["pos"]
+            shape = [1] * p.ndim
+            shape[p.ndim - 2] = cut.shape[0]       # batch axis of the ring
+            return {**c, "pos": jnp.where(p >= cut.reshape(shape), -1, p)}
+
+        def fix_paged(c: Pytree) -> Pytree:
+            def one(pos_arr):
+                thr = jnp.full((pos_arr.shape[0],), big, jnp.int32)
+                dest = jnp.where(block_tbl >= 0, block_tbl, 0).reshape(-1)
+                vals = jnp.repeat(cut, block_tbl.shape[1])
+                # trash page (id 0) may collect several rows' thresholds;
+                # its markers are always -1, never >= a non-negative cut
+                thr = thr.at[dest].set(vals)
+                return jnp.where(pos_arr >= thr[:, None], -1, pos_arr)
+            if c["kp"].ndim == 5:                  # stacked: (L, P, ps, ...)
+                return {**c, "pos": jax.vmap(one)(c["pos"])}
+            return {**c, "pos": one(c["pos"])}
+
+        def go(c: Pytree) -> Pytree:
+            if isinstance(c, dict):
+                if "kp" in c:
+                    return fix_paged(c)
+                if "pos" in c and "k" in c:
+                    return fix_dense(c)
+                return {k: (go(v) if k != "cross" else v)
+                        for k, v in c.items()}
+            return c
+
+        return {si: go(c) for si, c in caches.items()}
+
     def ring_cloud_steps(self, params: Params, ring: Dict[str, jax.Array],
                          ring_pos: jax.Array, ring_valid: jax.Array,
                          caches: Dict[int, Pytree],
@@ -342,19 +426,15 @@ class CoLLM:
             state["cloud"] = self.init_cloud_cache(batch, max_seq, dtype)
         return state
 
-    def fused_step(self, params: Params, token: jax.Array, state: Pytree,
-                   pos: jax.Array):
-        """token: (B,1); pos: scalar or per-row (B,) position vector.
-        Returns (next_token (B,), info, new_state).
-
-        Semantics: every step each row pushes its l_ee1 hidden into its own
-        upload ring (paper's parallel upload; per-row ring slots).  Cloud
-        compute fires only when some row is below θ or its ring is full; it
-        then drains the rings of exactly the needy rows in order —
-        *backfilling* their cloud KV (beyond-paper exact-KV mode) while
-        leaving confident rows' rings accumulating.  Without backfill each
-        ring holds only the newest upload (paper's release semantics: the
-        cloud KV keeps gaps at early-exited positions)."""
+    def fused_edge_phase(self, params: Params, token: jax.Array,
+                         state: Pytree, pos: jax.Array):
+        """Edge half of the fused step: decode, exit gating, and the ring
+        push — NO cloud compute.  Returns ``(out, rings, need_rows)`` where
+        ``rings`` is the updated {ring_h, ring_pos, count}.  A pipelined
+        driver runs this for tick t+1 while tick t's
+        ``fused_cloud_phase`` result is still in flight, committing each
+        needy row's provisional exit-head token in the meantime
+        (docs/async_transport.md)."""
         model, ccfg = self.model, self.ccfg
         b = token.shape[0]
         k = ccfg.max_pending if ccfg.backfill else 1
@@ -378,35 +458,70 @@ class CoLLM:
             need_rows = need_rows | (count >= k)     # ring full -> flush
         if ccfg.speculative:
             need_rows = jnp.ones((b,), bool)
-        need_cloud = jnp.any(need_rows)
+        rings = {"ring_h": ring_h, "ring_pos": ring_pos, "count": count}
+        return out, rings, need_rows
 
-        vocab = model.cfg.vocab_size
+    def fused_cloud_phase(self, params: Params, cloud_caches: Pytree,
+                          rings: Pytree, need_rows: jax.Array,
+                          block_tbl: Optional[jax.Array] = None):
+        """Cloud half of the fused step: ``lax.cond``-gated drain of the
+        needy rows' upload rings.  Returns (cloud_caches, cloud_logits
+        (B, V) f32, new_count)."""
+        ccfg = self.ccfg
+        b = need_rows.shape[0]
+        k = ccfg.max_pending if ccfg.backfill else 1
+        vocab = self.model.cfg.vocab_size
+        need_cloud = jnp.any(need_rows)
 
         def run_cloud(operand):
             caches, rh, rp, cnt = operand
             valid = (jnp.arange(k)[:, None] < cnt[None, :]) & need_rows[None]
             logits, caches = self.ring_cloud_steps(
                 params, {"data": rh[:k]}, rp[:k], valid, caches,
-                block_tbl=tbl)
+                block_tbl=block_tbl)
             return caches, logits, jnp.where(need_rows, 0, cnt)
 
         def skip_cloud(operand):
             caches, rh, rp, cnt = operand
             return caches, jnp.zeros((b, vocab), jnp.float32), cnt
 
-        cloud_caches, cloud_logits, new_count = jax.lax.cond(
+        return jax.lax.cond(
             need_cloud, run_cloud, skip_cloud,
-            (state["cloud"], ring_h, ring_pos, count))
+            (cloud_caches, rings["ring_h"], rings["ring_pos"],
+             rings["count"]))
+
+    def fused_step(self, params: Params, token: jax.Array, state: Pytree,
+                   pos: jax.Array):
+        """token: (B,1); pos: scalar or per-row (B,) position vector.
+        Returns (next_token (B,), info, new_state).
+
+        Semantics: every step each row pushes its l_ee1 hidden into its own
+        upload ring (paper's parallel upload; per-row ring slots).  Cloud
+        compute fires only when some row is below θ or its ring is full; it
+        then drains the rings of exactly the needy rows in order —
+        *backfilling* their cloud KV (beyond-paper exact-KV mode) while
+        leaving confident rows' rings accumulating.  Without backfill each
+        ring holds only the newest upload (paper's release semantics: the
+        cloud KV keeps gaps at early-exited positions).
+
+        Composed of ``fused_edge_phase`` + ``fused_cloud_phase`` so a
+        pipelined driver can overlap the two across ticks; calling this
+        fused composition keeps single-graph semantics bit-identical."""
+        tbl = state.get("block_tbl")
+        out, rings, need_rows = self.fused_edge_phase(params, token, state,
+                                                      pos)
+        cloud_caches, cloud_logits, new_count = self.fused_cloud_phase(
+            params, state["cloud"], rings, need_rows, block_tbl=tbl)
 
         cloud_tok = jnp.argmax(cloud_logits, -1).astype(jnp.int32)
         next_token = jnp.where(out.exited, out.token, cloud_tok)
 
         new_state = {"edge": out.caches, "cloud": cloud_caches,
-                     "ring_h": ring_h, "ring_pos": ring_pos,
+                     "ring_h": rings["ring_h"], "ring_pos": rings["ring_pos"],
                      "count": new_count}
         if tbl is not None:
             new_state["block_tbl"] = tbl
-        info = {"exited": out.exited, "need_cloud": need_cloud,
+        info = {"exited": out.exited, "need_cloud": jnp.any(need_rows),
                 "need_rows": need_rows, "cloud_logits": cloud_logits,
                 "confidences": {l: d.confidence
                                 for l, d in out.decisions.items()}}

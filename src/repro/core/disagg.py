@@ -8,7 +8,12 @@ the cloud program dies).  The l_ee1 hidden state crosses tiers as an fp16 /
 int8 packet (``jax.device_put`` over DCN on real hardware); jax async
 dispatch gives the paper's "parallel upload" for free: the edge program
 continues running while the transfer is in flight.
-"""
+
+Cloud requests go through ``DeviceTransferChannel`` — the
+``transport.CloudChannel`` protocol implemented over real device
+transfers, so the two-pod runtime and the simulated channels of the
+batched engine share one request path (submit -> poll) instead of two
+divergent ones (docs/async_transport.md)."""
 from __future__ import annotations
 
 import dataclasses
@@ -19,11 +24,45 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.collm import CoLLM, CollmConfig
-from repro.core.transport import dequantize, packet_bytes, quantize
+from repro.core.transport import (CloudChannel, dequantize, packet_bytes,
+                                  quantize)
 from repro.launch import sharding as shardlib
 from repro.models.transformer import Model
 
 Pytree = Any
+
+
+class DeviceTransferChannel(CloudChannel):
+    """``CloudChannel`` over real hardware: ``submit`` moves the quantized
+    packet to the cloud tier with ``jax.device_put`` (DCN on a multi-pod
+    mesh) and dispatches the cloud-tier jit program; both are
+    asynchronous, so the edge tier keeps running until ``poll`` — which
+    returns every submitted request (the *blocking point* is the caller
+    materializing the reply logits, not the dispatch).  Wire bytes are
+    accounted per request from the actual packet."""
+
+    def __init__(self, cloud_step, params_cloud: Pytree, cloud_device):
+        super().__init__()
+        self._cloud = cloud_step
+        self._pc = params_cloud
+        self._dev = cloud_device
+        self._caches: Optional[Pytree] = None
+
+    def attach_caches(self, caches: Pytree) -> None:
+        self._caches = caches
+
+    @property
+    def caches(self) -> Optional[Pytree]:
+        return self._caches
+
+    def submit_packet(self, packet: Pytree, pos, *, slot: int = 0,
+                      seq: int = 0, now: float = 0.0) -> int:
+        """Transfer + dispatch one cloud request; returns the handle."""
+        pkt = jax.device_put(packet, self._dev)     # async DCN transfer
+        logits, self._caches = self._cloud(self._pc, pkt, self._caches,
+                                           jnp.asarray(pos, jnp.int32))
+        return self.submit(slot=slot, seq=seq, pos=int(pos), reply=logits,
+                           now=now, nbytes_up=packet_bytes(packet))
 
 
 @dataclasses.dataclass
@@ -109,37 +148,46 @@ class TwoTierRuntime:
         self._edge = jax.jit(co.edge_step)
         self._cloud = jax.jit(co.cloud_step)
         self._pe, self._pc = params_edge, params_cloud
+        self.channel = DeviceTransferChannel(
+            self._cloud, params_cloud, self.cloud_mesh.devices.flat[0])
 
     def decode(self, prompt: jax.Array, max_new: int, max_seq: int = 256):
-        """Single-stream decode across the two tiers (device_put = DCN)."""
+        """Single-stream decode across the two tiers.  Every cloud request
+        goes submit -> poll through ``self.channel`` (the same protocol
+        the batched engine's simulated channels speak); the transfer and
+        the cloud program are dispatched asynchronously and the edge only
+        blocks when it materializes the reply token."""
         co = self.collm
-        edge_dev = self.edge_mesh.devices.flat[0]
         cloud_dev = self.cloud_mesh.devices.flat[0]
+        chan = self.channel
         e_caches = co.init_edge_cache(1, max_seq)
-        c_caches = co.init_cloud_cache(1, max_seq)
+        chan.attach_caches(co.init_cloud_cache(1, max_seq))
         _, h1, e_caches = co.edge_prefill(self._pe, {"tokens": prompt},
                                           e_caches)
         h1q = quantize(h1, self.ccfg.wire_format)
+        chan.notify_upload(0, packet_bytes(h1q), 0.0)
         h1q = jax.device_put(h1q, cloud_dev)           # prompt upload (DCN)
-        logits, c_caches = co.cloud_prefill(self._pc,
-                                            dequantize(h1q), c_caches)
+        logits, c_caches = co.cloud_prefill(self._pc, dequantize(h1q),
+                                            chan.caches)
+        chan.attach_caches(c_caches)
         tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
         toks = [int(tok[0])]
-        wire = 0
+        wire0 = chan.stats.bytes_up
         pos = prompt.shape[1]
         for _ in range(max_new - 1):
             out = self._edge(self._pe, tok[:, None], e_caches,
                              jnp.asarray(pos, jnp.int32))
             e_caches = out.caches
-            # parallel upload: dispatch the transfer, edge continues
-            pkt = jax.device_put(out.upload, cloud_dev)
-            wire += packet_bytes(out.upload)
             if bool(out.exited[0]):
+                # parallel upload: dispatch the transfer, edge continues
+                chan.notify_upload(0, packet_bytes(out.upload), 0.0)
+                jax.device_put(out.upload, cloud_dev)
                 tok = out.token
             else:
-                logits, c_caches = self._cloud(self._pc, pkt, c_caches,
-                                               jnp.asarray(pos, jnp.int32))
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                chan.submit_packet(out.upload, pos)
+                (rep,) = chan.poll()
+                tok = jnp.argmax(rep.reply, -1).astype(jnp.int32)
             toks.append(int(tok[0]))
             pos += 1
-        return toks, {"wire_bytes": wire}
+        return toks, {"wire_bytes": chan.stats.bytes_up - wire0,
+                      "channel": chan.stats.as_row()}

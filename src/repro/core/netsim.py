@@ -31,7 +31,10 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Sequence
 
-TOKEN_BYTES = 8  # token id + framing on the wire
+# Single source of truth for wire accounting: the simulator prices packets
+# with the same helpers the serving engine uses (repro.core.transport), so
+# the two can never disagree on transmitted MB.
+from repro.core.transport import TOKEN_BYTES, hidden_wire_bytes
 
 
 @dataclasses.dataclass
@@ -114,7 +117,8 @@ class _Client:
 
 
 def _hidden_bytes(d_model: int, half_precision: bool) -> int:
-    return d_model * (2 if half_precision else 4)
+    return hidden_wire_bytes(d_model,
+                             "float16" if half_precision else "float32")
 
 
 def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],

@@ -1,4 +1,5 @@
-"""Edge<->cloud transport: wire formats and quantization (paper §4.3).
+"""Edge<->cloud transport: wire formats, quantization, and the async
+cloud channel (paper §4.2/§4.3).
 
 The paper uploads hidden states in float16 (validated range ±65504).  We
 implement fp16 (paper-faithful) plus an int8 per-row-scaled format
@@ -8,11 +9,30 @@ For SSM/hybrid architectures the packet carries the recurrent state
 snapshots at the partition boundary in addition to the token activation
 (see DESIGN.md §4) — the cloud cannot reconstruct them from a single
 token's hidden state.
+
+Besides wire formats, this module defines the **CloudChannel** protocol —
+the asynchronous edge->cloud request path used by the batched serving
+engine, the sequential reference loop, and the two-tier runtime
+(docs/async_transport.md):
+
+  * ``submit(...) -> handle``   — dispatch one cloud request; the caller
+    keeps decoding while the reply is in flight (paper's latency hiding);
+  * ``poll(now) -> replies``    — drain the replies that have arrived by
+    virtual time ``now``;
+  * every request carries a **deadline**; the engine commits the edge
+    token when the reply misses it (paper's latency-aware early exit).
+
+``SyncChannel`` (zero latency, infinite deadline) reproduces a blocking
+call exactly; ``AsyncSimChannel`` prices each request with
+``netsim.NetworkParams``-style link parameters in virtual time;
+``ScriptedChannel`` replays an explicit per-request latency trace (tests,
+deterministic benchmarks).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+import math
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +40,20 @@ import jax.numpy as jnp
 Pytree = Any
 
 FORMATS = ("float32", "float16", "int8")
+
+# Wire size of one token id + framing — the single source of truth shared
+# by the netsim simulator and the serving engine (they can never disagree
+# on transmitted MB).
+TOKEN_BYTES = 8
+
+
+def hidden_wire_bytes(d_model: int, fmt: str, seq: int = 1) -> int:
+    """Wire size of a ``seq``-long hidden-state upload in format ``fmt``,
+    computed from the quantized packet ABSTRACTLY (eval_shape: no device
+    work), so int8 runs report int8 bytes, not hardcoded fp16."""
+    spec = jax.eval_shape(
+        lambda: quantize(jnp.zeros((1, seq, d_model), jnp.float32), fmt))
+    return packet_bytes(spec)
 
 
 def quantize(x: jax.Array, fmt: str) -> Dict[str, jax.Array]:
@@ -93,3 +127,185 @@ def open_packet(pkt: StatePacket, dtype=jnp.float32
     states = (dequantize_tree(pkt.states, dtype)
               if pkt.states is not None else None)
     return hidden, states
+
+
+# ---------------------------------------------------------------------------
+# Cloud channel (async edge->cloud request path)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CloudRequest:
+    """One in-flight cloud request.
+
+    ``slot``/``seq`` identify the engine slot *generation* that issued the
+    request: a reply whose (slot, seq) no longer matches the live slot is
+    late — it must be dropped, never applied to the slot's successor.
+    ``reply`` is an opaque caller payload (the engine stores the batched
+    device logits + row index so materialization can be deferred until the
+    reply is drained — jax async dispatch overlaps the cloud compute with
+    the edge decode in wall-clock time, the channel overlaps it in virtual
+    time)."""
+    handle: int
+    slot: int
+    seq: int
+    pos: int
+    reply: Any
+    submit_t: float
+    arrival_t: float
+    deadline_t: float
+    nbytes_up: int = 0
+    nbytes_down: int = 0
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    requests: int = 0
+    replies: int = 0
+    bytes_up: int = 0           # requests + notified uploads
+    bytes_down: int = 0
+    flight_s: float = 0.0       # summed virtual in-flight time
+
+    def as_row(self) -> Dict[str, float]:
+        return {"requests": self.requests, "replies": self.replies,
+                "bytes_up": self.bytes_up, "bytes_down": self.bytes_down,
+                "flight_s": round(self.flight_s, 4)}
+
+
+class CloudChannel:
+    """Base channel: immediate arrival (a blocking call in disguise).
+
+    Subclasses override ``_latency`` (virtual seconds between submit and
+    reply arrival) and optionally ``notify_upload`` (the per-tick l_ee1
+    hidden-state upload occupies the uplink even when no request rides on
+    it).  ``deadline_s`` is the per-request reply budget; ``math.inf``
+    disables the latency-aware early exit."""
+
+    def __init__(self, deadline_s: float = math.inf):
+        self.deadline_s = float(deadline_s)
+        self._next_handle = 0
+        self._inflight: Dict[int, CloudRequest] = {}
+        self.stats = ChannelStats()
+
+    # -- protocol -----------------------------------------------------------
+    def submit(self, *, slot: int = 0, seq: int = 0, pos: int = 0,
+               reply: Any = None, now: float = 0.0, nbytes_up: int = 0,
+               nbytes_down: int = 0) -> int:
+        handle = self._next_handle
+        self._next_handle += 1
+        arrival = now + self._latency(slot, now, nbytes_up, nbytes_down)
+        self._inflight[handle] = CloudRequest(
+            handle=handle, slot=slot, seq=seq, pos=pos, reply=reply,
+            submit_t=now, arrival_t=arrival,
+            deadline_t=now + self.deadline_s,
+            nbytes_up=nbytes_up, nbytes_down=nbytes_down)
+        self.stats.requests += 1
+        self.stats.bytes_up += nbytes_up
+        self.stats.bytes_down += nbytes_down
+        self.stats.flight_s += arrival - now
+        return handle
+
+    def poll(self, now: float = math.inf) -> List[CloudRequest]:
+        """Drain every reply that has arrived by virtual time ``now``
+        (in arrival order).  Late replies still arrive — the caller is
+        responsible for dropping the ones whose slot moved on."""
+        due = sorted((r for r in self._inflight.values()
+                      if r.arrival_t <= now), key=lambda r: r.arrival_t)
+        for r in due:
+            del self._inflight[r.handle]
+        self.stats.replies += len(due)
+        return due
+
+    def next_arrival(self) -> Optional[float]:
+        """Earliest pending arrival (the engine advances its virtual clock
+        here when every row is blocked on the channel)."""
+        if not self._inflight:
+            return None
+        return min(r.arrival_t for r in self._inflight.values())
+
+    def arrival_of(self, handle: int) -> Optional[float]:
+        """Arrival time of one in-flight request (None once drained) —
+        the blocking drain waits for a whole dispatch batch with this."""
+        req = self._inflight.get(handle)
+        return None if req is None else req.arrival_t
+
+    def in_flight(self) -> int:
+        return len(self._inflight)
+
+    def notify_upload(self, slot: int, nbytes: int, now: float) -> None:
+        """Account a parallel upload that is not itself a request."""
+        del slot, now
+        self.stats.bytes_up += nbytes
+
+    # -- latency model ------------------------------------------------------
+    def _latency(self, slot: int, now: float, nbytes_up: int,
+                 nbytes_down: int) -> float:
+        del slot, now, nbytes_up, nbytes_down
+        return 0.0
+
+
+class SyncChannel(CloudChannel):
+    """Zero-latency, infinite-deadline channel: the engine behaves exactly
+    like the pre-channel blocking implementation (token-for-token)."""
+
+    def __init__(self):
+        super().__init__(deadline_s=math.inf)
+
+
+class AsyncSimChannel(CloudChannel):
+    """Virtual-time network channel priced by ``netsim.NetworkParams``.
+
+    Each engine slot owns its WiFi-class link (paper §5: one link per edge
+    client); the cloud service point is a FIFO shared by every request —
+    exactly the accounting ``netsim.simulate`` uses, so the simulator and
+    the live engine price the same trace identically.
+
+      arrival = cloud_done + rtt/2 + nbytes_down / down_bw
+      cloud_done = max(uplink_arrival, cloud_free) + service_s
+      uplink_arrival = max(now, uplink_free[slot]) + nbytes_up/up_bw + rtt/2
+
+    ``net`` is duck-typed: anything with up_bw / down_bw / rtt fields
+    (``netsim.NetworkParams``) works."""
+
+    def __init__(self, net: Any, *, service_s: float = 0.0,
+                 deadline_s: float = math.inf):
+        super().__init__(deadline_s=deadline_s)
+        self.net = net
+        self.service_s = float(service_s)
+        self._uplink_free: Dict[int, float] = {}
+        self._cloud_free = 0.0
+
+    def _latency(self, slot: int, now: float, nbytes_up: int,
+                 nbytes_down: int) -> float:
+        link_free = max(now, self._uplink_free.get(slot, 0.0))
+        up_arr = link_free + nbytes_up / self.net.up_bw + self.net.rtt / 2
+        self._uplink_free[slot] = link_free + nbytes_up / self.net.up_bw
+        cloud_done = max(up_arr, self._cloud_free) + self.service_s
+        self._cloud_free = cloud_done
+        arrival = cloud_done + self.net.rtt / 2 + nbytes_down / self.net.down_bw
+        return arrival - now
+
+    def notify_upload(self, slot: int, nbytes: int, now: float) -> None:
+        super().notify_upload(slot, nbytes, now)
+        # the l_ee1 upload occupies this client's uplink: a request issued
+        # right after it queues behind it (paper's parallel upload still
+        # costs link time, it just overlaps edge compute)
+        link_free = max(now, self._uplink_free.get(slot, 0.0))
+        self._uplink_free[slot] = link_free + nbytes / self.net.up_bw
+
+
+class ScriptedChannel(CloudChannel):
+    """Replay an explicit per-request latency trace (request i takes
+    ``latencies[i % len]`` virtual seconds).  Deterministic harness for the
+    deadline-miss and reply-reordering tests."""
+
+    def __init__(self, latencies, *, deadline_s: float = math.inf):
+        super().__init__(deadline_s=deadline_s)
+        self.latencies = list(latencies)
+        if not self.latencies:
+            raise ValueError("ScriptedChannel needs at least one latency")
+        self._i = 0
+
+    def _latency(self, slot: int, now: float, nbytes_up: int,
+                 nbytes_down: int) -> float:
+        lat = float(self.latencies[self._i % len(self.latencies)])
+        self._i += 1
+        return lat

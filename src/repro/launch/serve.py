@@ -2,15 +2,22 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-moe-3b-a800m \
         --smoke --mode collm --theta 0.8 --clients 2 --max-new 16
+
+``--channel sim`` prices every cloud request with WiFi-class network
+parameters in virtual time (the engine overlaps edge decode with in-flight
+replies); ``--deadline`` arms the latency-aware early exit.
 """
 from __future__ import annotations
 
 import argparse
+import math
 
 import jax
 
 from repro.configs.registry import get_config, get_smoke_config
 from repro.core.collm import CollmConfig
+from repro.core.netsim import NetworkParams
+from repro.core.transport import AsyncSimChannel
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.registry import build_model
 from repro.serving.engine import ServingSystem, token_agreement
@@ -31,6 +38,16 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--channel", default="sync", choices=["sync", "sim"],
+                    help="sim: WiFi-class async channel in virtual time")
+    ap.add_argument("--deadline", type=float, default=math.inf,
+                    help="per-request reply budget (virtual s); a miss "
+                         "commits the edge token")
+    ap.add_argument("--tick-time", type=float, default=0.01,
+                    help="virtual edge compute per decode tick (sim)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="commit provisional edge tokens while cloud "
+                         "replies are in flight")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -43,15 +60,27 @@ def main():
     prompts = [data.sample_tokens(args.prompt_len)
                for _ in range(args.clients)]
     system = ServingSystem(model, params, CollmConfig(
-        theta=args.theta, wire_format=args.wire, backfill=args.backfill))
-    r = system.generate(prompts, args.max_new, mode=args.mode)
+        theta=args.theta, wire_format=args.wire, backfill=args.backfill,
+        speculative=args.speculative))
+    gen_kw = {}
+    if args.channel == "sim":
+        gen_kw = {"channel": AsyncSimChannel(NetworkParams(),
+                                             deadline_s=args.deadline),
+                  "tick_time_s": args.tick_time}
+    r = system.generate(prompts, args.max_new, mode=args.mode, **gen_kw)
     st = r["stats"]
-    print(f"mode={args.mode} theta={args.theta} wire={args.wire}")
+    print(f"mode={args.mode} theta={args.theta} wire={args.wire} "
+          f"channel={args.channel}")
     print(f"tokens={st.tokens} exits@l1={st.exits_l1} exits@l2={st.exits_l2} "
           f"cloud_requests={st.cloud_requests} "
           f"request_rate={st.request_rate:.2%}")
     print(f"upload={st.upload_bytes/1e3:.1f}KB edge_t={st.edge_time:.2f}s "
           f"cloud_t={st.cloud_time:.2f}s")
+    if args.channel == "sim":
+        print(f"virtual_t={r['virtual_time']:.3f}s "
+              f"deadline_misses={st.deadline_misses} "
+              f"fallbacks={st.fallbacks} stall={st.stall_s:.3f}s "
+              f"overlap={st.overlap_s:.3f}s late_drops={r['late_drops']}")
     if args.mode != "cloud":
         base = system.generate(prompts, args.max_new, mode="cloud")
         ags = [token_agreement(a, b)

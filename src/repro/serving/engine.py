@@ -34,14 +34,27 @@ Two execution engines implement that contract:
     under greedy decoding, and the throughput bench measures one against
     the other.
 
+Cloud requests travel through a ``repro.core.transport.CloudChannel`` —
+the scheduler is a two-stage pipeline (dispatch this tick's below-θ
+requests, keep decoding every unblocked row while they are in flight,
+drain replies with a per-row deadline), so cloud latency hides behind
+edge compute instead of stalling the pool.  A reply that misses its
+deadline commits the row's edge exit token (the paper's latency-aware
+early exit), and ``fallback_after`` consecutive misses switch the row to
+standalone mode (the paper's unstable-link fallback).  The default
+``SyncChannel`` reproduces the blocking engine token-for-token; see
+docs/async_transport.md.
+
 Everything is measured: per-token exit level, cloud request rate, wire
-bytes, partition wall-times (feeds the netsim), and agreement vs. the
-undivided model (the paper's ROUGE-L proxy).
+bytes, deadline misses, virtual stall/overlap time, partition wall-times
+(feeds the netsim), and agreement vs. the undivided model (the paper's
+ROUGE-L proxy).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -53,7 +66,8 @@ from repro.core.collm import CoLLM, CollmConfig
 from repro.core.content_manager import ContentManager
 from repro.core.exits import select_exit_logits
 from repro.core.paging import PagePool, pages_needed
-from repro.core.transport import StatePacket, packet_bytes, quantize
+from repro.core.transport import (TOKEN_BYTES, CloudChannel, StatePacket,
+                                  SyncChannel, hidden_wire_bytes)
 from repro.models.attention import paged_reset_pages, paged_scatter_prefill
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
@@ -66,42 +80,54 @@ class GenStats:
     tokens: int = 0
     exits_l1: int = 0
     exits_l2: int = 0
-    cloud_requests: int = 0
+    cloud_requests: int = 0       # tokens actually served by a cloud reply
+    deadline_misses: int = 0      # replies that missed their deadline
+    spec_rewinds: int = 0         # speculative reconciles that disagreed
+    fallbacks: int = 0            # switches to standalone fallback
     upload_bytes: int = 0
     edge_time: float = 0.0
     cloud_time: float = 0.0
+    stall_s: float = 0.0          # virtual time stalled on in-flight replies
+    overlap_s: float = 0.0        # virtual flight time hidden behind decode
     confidences: List[tuple] = dataclasses.field(default_factory=list)
 
     @property
     def request_rate(self) -> float:
-        return self.cloud_requests / max(self.tokens, 1)
+        """Fraction of emitted tokens served by the cloud.  A
+        deadline-missed request commits the edge token, so it counts under
+        ``deadline_misses`` (and ``exits_l2``), never as a cloud request;
+        zero-token streams have rate 0, not ``cloud_requests / 1``."""
+        if self.tokens <= 0:
+            return 0.0
+        return self.cloud_requests / self.tokens
 
 
-def _aggregate(stats: Sequence[GenStats]) -> GenStats:
+def _aggregate(stats: Sequence[Optional[GenStats]]) -> GenStats:
+    """Field-generic aggregation (scalars sum, lists concatenate) — new
+    counters can never be silently dropped, and ``None`` entries
+    (unserved requests) don't crash zero-token aggregations."""
     agg = GenStats()
     for st in stats:
-        agg.tokens += st.tokens
-        agg.exits_l1 += st.exits_l1
-        agg.exits_l2 += st.exits_l2
-        agg.cloud_requests += st.cloud_requests
-        agg.upload_bytes += st.upload_bytes
-        agg.edge_time += st.edge_time
-        agg.cloud_time += st.cloud_time
-        agg.confidences.extend(st.confidences)
+        if st is None:
+            continue
+        for f in dataclasses.fields(GenStats):
+            v = getattr(st, f.name)
+            if isinstance(v, list):
+                getattr(agg, f.name).extend(v)
+            else:
+                setattr(agg, f.name, getattr(agg, f.name) + v)
     return agg
 
 
-def _prompt_wire_bytes(shape, compute_dtype, wire_format: str) -> int:
-    """Wire size of the prompt's h1 upload in the configured format —
-    computed from the quantized packet ABSTRACTLY (eval_shape: no device
-    work), so int8 runs report int8 bytes, not hardcoded fp16."""
-    spec = jax.eval_shape(
-        lambda: quantize(jnp.zeros(shape, compute_dtype), wire_format))
-    return packet_bytes(spec)
-
-
 class CloudServer:
-    """Cloud partition + content manager (one per deployment)."""
+    """Cloud partition + content manager (one per deployment).
+
+    Inference speaks the ``CloudChannel`` protocol: ``request`` pops the
+    uploaded state(s), dispatches the cloud partition step, and submits
+    the still-on-device logits into the caller's channel — the same
+    cloud-request path the batched engine uses.  jit dispatch is
+    asynchronous, so the edge loop keeps running until it drains the
+    reply."""
 
     def __init__(self, collm: CoLLM, params: Pytree, max_clients_pending: int = 8):
         self.collm = collm
@@ -124,20 +150,25 @@ class CloudServer:
                        packet: StatePacket) -> None:
         self.cm.upload(device_id, pos, packet)
 
-    def infer(self, device_id: str, pos: int, *, backfill: bool) -> jax.Array:
-        """Single-token response (paper §4.2)."""
+    def request(self, channel: CloudChannel, device_id: str, pos: int, *,
+                now: float = 0.0, backfill: bool = False, slot: int = 0,
+                seq: int = 0) -> int:
+        """Dispatch one single-token cloud inference (paper §4.2) into
+        ``channel``; returns the in-flight handle.  The reply payload is
+        the cloud logits, still on device."""
         caches = self.cm.get_cache(device_id)
         if backfill:
             pending = self.cm.take_uploads_upto(device_id, pos)
         else:
-            pkt = self.cm.take_upload(device_id, pos)
-            pending = [(pos, pkt)]
+            pending = [(pos, self.cm.take_upload(device_id, pos))]
         logits = None
         for p, pkt in pending:
             logits, caches = self._cloud_step(
                 self.params, pkt.hidden, caches, jnp.asarray(p, jnp.int32))
         self.cm.put_cache(device_id, caches)
-        return logits
+        return channel.submit(slot=slot, seq=seq, pos=pos, reply=logits,
+                              now=now, nbytes_up=TOKEN_BYTES,
+                              nbytes_down=TOKEN_BYTES)
 
     def finish(self, device_id: str) -> None:
         self.cm.end_of_sequence(device_id)
@@ -183,10 +214,30 @@ class Request:
 
 
 @dataclasses.dataclass
+class _Pending:
+    """One in-flight cloud request of a slot."""
+    pos: int                 # decode position the request serves
+    tok_index: int           # index in slot.tokens its token lands at
+    provisional: int         # edge l_ee2 token committed on deadline miss
+    stall_from: float        # virtual submit time
+    deadline_t: float
+    idle_at: float = 0.0     # engine idle integral at submit (overlap_s)
+
+
+@dataclasses.dataclass
 class _Slot:
     """One row of the batched pool.  Lifecycle:
     FREE -> (admit: prefill + scatter row caches) ACTIVE
-         -> (decode ticks) ... -> (EOS / max_new) FINISHED -> FREE."""
+         -> (decode ticks) ... -> (EOS / max_new) FINISHED -> FREE.
+
+    ``seq`` is the slot *generation*: it increments at every admission, so
+    a cloud reply issued by a retired stream can never be applied to the
+    slot's successor.  ``pending`` tracks in-flight cloud requests
+    (at most one without speculation — the row stalls; any number with
+    ``CollmConfig.speculative`` — the row keeps decoding on provisional
+    tokens).  ``events`` records each emitted token's origin
+    ("admit"/"l1"/"l2"/"cloud"/"spec"/"full") so a speculative rewind can
+    unwind the per-token counters exactly."""
     index: int
     req: Optional[Request] = None
     stats: Optional[GenStats] = None
@@ -194,6 +245,11 @@ class _Slot:
     pos: int = 0
     last_token: int = 0
     active: bool = False
+    seq: int = 0
+    pending: Dict[int, _Pending] = dataclasses.field(default_factory=dict)
+    events: List[str] = dataclasses.field(default_factory=list)
+    miss_streak: int = 0
+    standalone: bool = False     # latency fallback engaged (stops uploading)
 
 
 def _bucket(n: int, floor: int = 8) -> int:
@@ -270,6 +326,30 @@ class BatchScheduler:
     the slot's pages and invalidates them on device.  The block table is
     shared by the edge/cloud/full cache pools (same token positions) and is
     passed into every jitted step.
+
+    Cloud requests travel through ``channel`` (a
+    ``transport.CloudChannel``) and each tick is a two-stage pipeline:
+
+      1. **edge pass** over every runnable row (rows stalled on an
+         in-flight reply flow through as placeholders whose outputs and —
+         for recurrent models — cache writes are discarded);
+      2. **dispatch** of this tick's below-θ rows: one masked cloud call
+         computes them all, the still-on-device logits enter the channel
+         per row, and the engine keeps decoding while they are in flight
+         (virtual time from the channel's latency model; wall-clock
+         overlap from jax async dispatch, materialization deferred to the
+         drain).
+
+    Replies drain against a per-row deadline: a miss commits the row's
+    edge l_ee2 token (the paper's latency-aware early exit), and
+    ``fallback_after`` consecutive misses flip the row to standalone mode.
+    With ``CollmConfig.speculative`` a below-θ row does not stall at all —
+    it commits the provisional edge token, keeps decoding, and
+    reconciles on arrival (keep on match, rewind-and-replace on
+    mismatch).  ``overlap=False`` degrades stage 2 to a blocking drain
+    (the whole pool waits) — the baseline the throughput bench compares
+    against.  The default ``SyncChannel`` (zero latency) reproduces the
+    blocking engine token-for-token.
     """
 
     def __init__(self, collm: CoLLM, params: Pytree, cm: ContentManager,
@@ -277,7 +357,10 @@ class BatchScheduler:
                  sampler: str = "greedy", temperature: float = 1.0,
                  top_k: int = 0, seed: int = 0,
                  max_ctx: Optional[int] = None,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 channel: Optional[CloudChannel] = None,
+                 tick_time_s: float = 0.0, overlap: bool = True,
+                 fallback_after: int = 0):
         if mode not in ("collm", "standalone", "cloud"):
             raise ValueError(mode)
         self.collm = collm
@@ -293,6 +376,27 @@ class BatchScheduler:
         self.top_k = top_k
         self._rng = jax.random.PRNGKey(seed)
         self.slots = [_Slot(index=i) for i in range(num_slots)]
+
+        # async cloud channel + virtual clock (docs/async_transport.md)
+        self.channel = channel if channel is not None else SyncChannel()
+        self.tick_time_s = float(tick_time_s)
+        self.overlap = bool(overlap)
+        self.fallback_after = int(fallback_after)
+        self.vnow = 0.0
+        self.last_virtual_time = 0.0
+        self.late_drops = 0          # replies dropped after slot moved on
+        self._idle_s = 0.0           # virtual time nobody decoded (waits)
+        self._spec = bool(self.ccfg.speculative) and mode == "collm"
+        if self._spec and sampler != "greedy":
+            raise ValueError("speculative decode reconciles token ids and "
+                             "requires greedy sampling")
+        if self._spec and not self.model.attention_only():
+            raise ValueError("speculative decode rewinds positions; "
+                             "recurrent state cannot rewind")
+        # recurrent state cannot absorb the placeholder steps stalled rows
+        # take through the batched graph -> masked edge step merges them out
+        self._mask_edge = (mode == "collm"
+                           and not self.model.attention_only())
 
         # KV layout.  dense: every slot owns a max_seq ring (pool memory
         # B x max_seq; a slot can never hold more than max_seq).  paged:
@@ -332,8 +436,10 @@ class BatchScheduler:
                 self._cloud_row0 = collm.init_cloud_cache(1, row_seq)
 
         self._edge_step = jax.jit(collm.edge_step)
+        self._edge_masked = jax.jit(collm.edge_step_masked)
         self._full_step = jax.jit(collm.full_step)
         self._cloud_masked = jax.jit(collm.cloud_step_masked)
+        self._invalidate_rows = jax.jit(collm.invalidate_rows_after)
         self._ring_cloud = jax.jit(collm.ring_cloud_steps)
         self._scatter = jax.jit(_scatter_row)
         self._scatter_paged = jax.jit(_scatter_row_paged)
@@ -419,9 +525,12 @@ class BatchScheduler:
             return self._scatter(full, row, slot.index)
         return self._scatter_paged(full, row, slot.index, jnp.asarray(pages))
 
-    def _admit(self, queue) -> None:
+    def _admit(self, queue) -> bool:
+        admitted = False
         for slot in self.slots:
-            if slot.active or not queue:
+            if slot.active or slot.req is not None or not queue:
+                # a finished-but-uncollected slot keeps its req until
+                # _collect copies the results out — never reuse it here
                 continue
             req: Request = queue[0]
             prompt = np.asarray(req.prompt, np.int32)
@@ -464,18 +573,25 @@ class BatchScheduler:
                         self.cloud_caches, crow, slot, pages)
                     prefill_logits = np.asarray(logits)[:, 0]
                     st.cloud_time += time.perf_counter() - t0
-                    st.upload_bytes += _prompt_wire_bytes(
-                        (1, p_len, self.model.cfg.d_model),
-                        self.model.compute_dtype, self.ccfg.wire_format)
+                    st.upload_bytes += hidden_wire_bytes(
+                        self.model.cfg.d_model, self.ccfg.wire_format,
+                        seq=p_len)
 
                 tok = self._first_token(fetched, prefill_logits, st)
             st.tokens = 1
             slot.req, slot.stats = req, st
             slot.tokens = [tok]
+            slot.events = ["admit"]
             slot.last_token = tok
             slot.pos = p_len
             slot.active = True
+            slot.seq += 1            # late replies of the predecessor drop
+            slot.pending = {}
+            slot.miss_streak = 0
+            slot.standalone = False
+            admitted = True
             self._maybe_finish(slot)
+        return admitted
 
     def _first_token(self, fetched: Dict, prefill_logits, st: GenStats) -> int:
         """First token from the prompt's last position — same decision tree
@@ -503,6 +619,10 @@ class BatchScheduler:
         done = (len(slot.tokens) >= req.max_new
                 or (req.eos_id is not None
                     and slot.tokens[-1] == req.eos_id))
+        # speculative: the tail tokens are provisional until their cloud
+        # replies reconcile (or miss their deadline) — a rewind may yet
+        # resume decoding below max_new / replace the EOS
+        done = done and not slot.pending
         if done:
             if self.mode == "collm":
                 self.cm.end_of_sequence(req.device_id)
@@ -510,6 +630,21 @@ class BatchScheduler:
             if self.pool is not None:
                 self._free_pages(slot)
         return done
+
+    def _runnable(self, s: _Slot) -> bool:
+        """A slot decodes this tick unless it is stalled on an in-flight
+        cloud reply (non-speculative) or has provisionally reached its end
+        and awaits validation (speculative)."""
+        if not s.active:
+            return False
+        if s.pending and not self._spec:
+            return False
+        if len(s.tokens) >= s.req.max_new:
+            return False
+        if (s.req.eos_id is not None and s.tokens
+                and s.tokens[-1] == s.req.eos_id):
+            return False
+        return True
 
     def _free_pages(self, slot: _Slot) -> None:
         """Bulk-free a retired slot's pages and invalidate them on device
@@ -528,14 +663,27 @@ class BatchScheduler:
 
     # -- one decode tick ----------------------------------------------------
     def tick(self) -> None:
-        active = [s for s in self.slots if s.active]
-        if not active:
+        """One step of the two-stage pipeline: resolve due replies, run the
+        edge pass for every runnable row (stalled rows flow through the
+        batched graph as placeholders), dispatch this tick's below-θ cloud
+        requests, resolve again (a ``SyncChannel`` reply arrives within
+        the same tick).  When every active row is blocked on the channel,
+        the virtual clock jumps to the next arrival/deadline instead of
+        busy-waiting."""
+        self._resolve()
+        runnable = [s for s in self.slots if self._runnable(s)]
+        if not runnable:
+            if any(s.active for s in self.slots):
+                self._advance_idle()
+                self._resolve()
             return
         tokens = np.zeros((self.B, 1), np.int32)
         pos = np.zeros((self.B,), np.int32)
-        for s in active:
-            tokens[s.index, 0] = s.last_token
-            pos[s.index] = s.pos
+        for s in self.slots:
+            if s.active:     # stalled rows: placeholder decode, outputs dropped
+                tokens[s.index, 0] = s.last_token
+                pos[s.index] = s.pos
+        for s in runnable:
             if self.pool is not None:
                 # alloc-on-write: this tick writes KV at s.pos
                 lp = s.pos // self.pool.page_size
@@ -543,16 +691,18 @@ class BatchScheduler:
                     self.pool.alloc(s.index, lp)
                     self._tbl_device = None
 
+        self.vnow += self.tick_time_s    # this tick's edge compute (virtual)
         if self.mode == "cloud":
-            self._tick_cloud(active, tokens, pos)
+            self._tick_cloud(runnable, tokens, pos)
         else:
-            self._tick_edge(active, tokens, pos)
+            self._tick_edge(runnable, tokens, pos)
 
-        for s in active:
+        for s in runnable:
             s.pos += 1
             self._maybe_finish(s)
+        self._resolve()
 
-    def _tick_cloud(self, active, tokens, pos) -> None:
+    def _tick_cloud(self, runnable, tokens, pos) -> None:
         t0 = time.perf_counter()
         tok, logits, self.main_caches = self._full_step(
             self.params, jnp.asarray(tokens), self.main_caches,
@@ -561,17 +711,23 @@ class BatchScheduler:
             next_tok = np.asarray(tok)
         else:
             next_tok = self._pick(np.asarray(logits))
-        dt = (time.perf_counter() - t0) / len(active)
-        for s in active:
+        dt = (time.perf_counter() - t0) / len(runnable)
+        for s in runnable:
             s.stats.cloud_time += dt
-            self._emit(s, int(next_tok[s.index]))
+            self._emit(s, int(next_tok[s.index]), "full")
 
-    def _tick_edge(self, active, tokens, pos) -> None:
+    def _tick_edge(self, runnable, tokens, pos) -> None:
         collm, ccfg = self.collm, self.ccfg
         t0 = time.perf_counter()
-        out = self._edge_step(self.params, jnp.asarray(tokens),
-                              self.edge_caches, jnp.asarray(pos),
-                              self._block_tbl())
+        jt, jp, tbl = jnp.asarray(tokens), jnp.asarray(pos), self._block_tbl()
+        if self._mask_edge:
+            run_mask = np.zeros((self.B,), bool)
+            for s in runnable:
+                run_mask[s.index] = True
+            out = self._edge_masked(self.params, jt, self.edge_caches, jp,
+                                    jnp.asarray(run_mask), tbl)
+        else:
+            out = self._edge_step(self.params, jt, self.edge_caches, jp, tbl)
         self.edge_caches = out.caches
         want_logits = self.sampler != "greedy"
         get = {
@@ -584,15 +740,17 @@ class BatchScheduler:
             if self.mode == "standalone":
                 get["logits_l2"] = out.decisions[collm.l_ee2].logits
             else:
-                # per-row logits of the chosen exit (sampling path)
+                # per-row logits of the chosen exit (sampling path); rows
+                # that exit nowhere get the LAST exit's logits, which is
+                # also what a standalone-fallback row samples from
                 get["sel_logits"] = select_exit_logits(
                     out.decisions, ccfg.theta)[0]
         fetched = jax.device_get(get)
-        edge_dt = (time.perf_counter() - t0) / len(active)
+        edge_dt = (time.perf_counter() - t0) / len(runnable)
         exited = fetched["exited"]
         confs = fetched["conf"]
 
-        for s in active:
+        for s in runnable:
             s.stats.edge_time += edge_dt
             s.stats.tokens += 1
             c1 = float(confs.get(collm.l_ee1, np.zeros(self.B))[s.index])
@@ -602,50 +760,70 @@ class BatchScheduler:
         if self.mode == "standalone":
             toks = (fetched["tok2"] if self.sampler == "greedy"
                     else self._pick(fetched["logits_l2"]))
-            for s in active:
+            for s in runnable:
                 c1 = s.stats.confidences[-1][0]
                 if c1 >= ccfg.theta:
                     s.stats.exits_l1 += 1
+                    self._emit(s, int(toks[s.index]), "l1")
                 else:
                     s.stats.exits_l2 += 1
-                self._emit(s, int(toks[s.index]))
+                    self._emit(s, int(toks[s.index]), "l2")
             return
 
-        # parallel upload (always dispatched at l_ee1) — batched receive
+        # parallel upload (always dispatched at l_ee1) — batched receive.
+        # Standalone-fallback rows have given up on the cloud: no upload.
         up = fetched["upload"]
+        uploaders = [s for s in runnable if not s.standalone]
         pkts = {s.index: StatePacket(
             hidden={k: v[s.index:s.index + 1] for k, v in up.items()},
-            pos=s.pos) for s in active}
+            pos=s.pos) for s in uploaders}
         self.cm.upload_batch((s.req.device_id, s.pos, pkts[s.index])
-                             for s in active)
-        for s in active:
-            s.stats.upload_bytes += pkts[s.index].nbytes()
+                             for s in uploaders)
+        for s in uploaders:
+            nb = pkts[s.index].nbytes()
+            s.stats.upload_bytes += nb
+            self.channel.notify_upload(s.index, nb, self.vnow)
 
-        needy = [s for s in active if not bool(exited[s.index])]
-        cloud_np = None
-        if needy:
-            cloud_np = self._serve_cloud(needy, pos)
         exit_toks = (fetched["token"] if self.sampler == "greedy"
                      else self._pick(fetched["sel_logits"]))
+        tok2 = fetched["tok2"]
 
-        for s in active:
+        # the provisional token a deadline miss commits: the l_ee2 exit
+        # head's answer under the configured sampler (sel_logits gives
+        # below-θ rows the last exit's logits on the sampling path)
+        prov_toks = tok2 if self.sampler == "greedy" else exit_toks
+        needy = [s for s in uploaders if not bool(exited[s.index])]
+        if needy:
+            self._dispatch_cloud(needy, pos, prov_toks)
+        for s in runnable:
             if bool(exited[s.index]):
                 if s.stats.confidences[-1][0] >= ccfg.theta:
                     s.stats.exits_l1 += 1
+                    self._emit(s, int(exit_toks[s.index]), "l1")
                 else:
                     s.stats.exits_l2 += 1
-                tok = int(exit_toks[s.index])
-            else:
-                tok = int(cloud_np[s.index])
-            self._emit(s, tok)
+                    self._emit(s, int(exit_toks[s.index]), "l2")
+            elif s.standalone:
+                # latency fallback: the edge serves its below-θ tokens
+                s.stats.exits_l2 += 1
+                tok = (int(tok2[s.index]) if self.sampler == "greedy"
+                       else int(exit_toks[s.index]))
+                self._emit(s, tok, "l2")
+            # else: needy — token arrives via the channel (_resolve)
 
-    def _serve_cloud(self, needy: List[_Slot], pos: np.ndarray) -> np.ndarray:
-        """One masked cloud call serves every below-θ slot of the tick."""
+    def _dispatch_cloud(self, needy: List[_Slot], pos: np.ndarray,
+                        prov_toks: np.ndarray) -> None:
+        """Stage 2: one masked cloud call computes every below-θ slot of
+        the tick; per-row requests enter the channel and the engine keeps
+        decoding while they are in flight.  The batched logits stay on
+        device — materialization is deferred to the drain, so jax async
+        dispatch overlaps the cloud compute with the next edge pass in
+        wall-clock time while the channel prices the flight in virtual
+        time."""
         ccfg = self.ccfg
         mask = np.zeros((self.B,), bool)
         for s in needy:
             mask[s.index] = True
-            s.stats.cloud_requests += 1
 
         t0 = time.perf_counter()
         if ccfg.backfill:
@@ -683,17 +861,190 @@ class BatchScheduler:
                 self.cloud_caches, jnp.asarray(pos), jnp.asarray(mask),
                 self._block_tbl())
 
-        if self.sampler == "greedy":
-            cloud_tok = np.argmax(np.asarray(logits), axis=-1)
-        else:
-            cloud_tok = self._pick(np.asarray(logits))
         dt = (time.perf_counter() - t0) / len(needy)
+        group = {"logits": logits, "np": None}      # materialized at drain
+        handles = []
         for s in needy:
             s.stats.cloud_time += dt
-        return cloud_tok
+            h = self.channel.submit(
+                slot=s.index, seq=s.seq, pos=s.pos,
+                reply=(group, s.index), now=self.vnow,
+                nbytes_up=TOKEN_BYTES, nbytes_down=TOKEN_BYTES)
+            s.pending[h] = _Pending(
+                pos=s.pos, tok_index=len(s.tokens),
+                provisional=int(prov_toks[s.index]), stall_from=self.vnow,
+                deadline_t=self.vnow + self.channel.deadline_s,
+                idle_at=self._idle_s)
+            handles.append(h)
+            if self._spec:
+                # latency hiding: commit the edge token provisionally and
+                # keep decoding; _resolve reconciles it on arrival
+                self._emit(s, int(prov_toks[s.index]), "spec")
+        if not self.overlap:
+            # blocking baseline: the whole pool waits for this tick's
+            # replies (still paying the channel's virtual latency) — the
+            # jump is pure idle time, nothing decodes during it
+            arr = [self.channel.arrival_of(h) for h in handles]
+            target = max([self.vnow] + [a for a in arr if a is not None])
+            self._idle_s += target - self.vnow
+            self.vnow = target
 
-    def _emit(self, slot: _Slot, tok: int) -> None:
+    # -- reply drain --------------------------------------------------------
+    def _reply_token(self, rep) -> int:
+        """Materialize a reply group's logits (once per dispatched batch)
+        and return this row's token."""
+        group, row = rep.reply
+        if group["np"] is None:
+            logits = np.asarray(group["logits"])
+            if self.sampler == "greedy":
+                group["np"] = np.argmax(logits, axis=-1)
+            else:
+                group["np"] = np.asarray(self._pick(logits))
+        return int(group["np"][row])
+
+    def _hidden_s(self, pend: _Pending) -> float:
+        """Virtual time of this request's wait that was hidden behind the
+        pool's continued decoding: the stalled window minus whatever part
+        of it the whole engine spent idle (``_advance_idle`` jumps and the
+        blocking drain).  This is the number that separates the overlapped
+        pipeline from the blocking one — at 1 slot, or with
+        ``overlap=False``, every wait is idle and it stays 0."""
+        stall = self.vnow - pend.stall_from
+        idle = self._idle_s - pend.idle_at
+        return max(0.0, stall - idle)
+
+    def _deadline_miss(self, s: _Slot, pend: _Pending) -> None:
+        """Latency-aware early exit: the reply is overdue (or arrived past
+        its deadline) — the row's edge l_ee2 token wins."""
+        s.stats.deadline_misses += 1
+        s.miss_streak += 1
+        if self._spec:
+            # the provisional token becomes final
+            s.events[pend.tok_index] = "l2"
+            s.stats.exits_l2 += 1
+        else:
+            s.stats.stall_s += self.vnow - pend.stall_from
+            s.stats.overlap_s += self._hidden_s(pend)
+            s.stats.exits_l2 += 1
+            self._emit(s, pend.provisional, "l2")
+        if (self.fallback_after
+                and s.miss_streak >= self.fallback_after
+                and not s.standalone):
+            s.standalone = True
+            s.stats.fallbacks += 1
+
+    def _resolve(self) -> None:
+        """Drain arrived replies, then expire deadlines, at the current
+        virtual time."""
+        for rep in self.channel.poll(self.vnow):
+            s = self.slots[rep.slot] if rep.slot < self.B else None
+            if (s is None or not s.active or s.seq != rep.seq
+                    or rep.handle not in s.pending):
+                # the slot retired, was refilled, or rewound past this
+                # position: a late reply must never land on its successor
+                self.late_drops += 1
+                continue
+            pend = s.pending.pop(rep.handle)
+            if rep.arrival_t > pend.deadline_t:
+                # arrival and deadline crossed within one clock advance:
+                # the deadline fired first — the reply is late even though
+                # we only see both now
+                self._deadline_miss(s, pend)
+                self.late_drops += 1
+                self._maybe_finish(s)
+                continue
+            tok = self._reply_token(rep)
+            if self._spec:
+                s.stats.overlap_s += self._hidden_s(pend)
+                s.miss_streak = 0
+                if tok == s.tokens[pend.tok_index]:
+                    # speculation validated: the provisional token IS the
+                    # cloud token
+                    s.events[pend.tok_index] = "cloud"
+                    s.stats.cloud_requests += 1
+                else:
+                    self._rewind(s, pend, tok)
+            else:
+                s.stats.cloud_requests += 1
+                s.stats.stall_s += self.vnow - pend.stall_from
+                s.stats.overlap_s += self._hidden_s(pend)
+                s.miss_streak = 0
+                self._emit(s, tok, "cloud")
+            self._maybe_finish(s)
+        # latency-aware early exit: overdue replies commit the edge token
+        for s in self.slots:
+            if not s.active or not s.pending:
+                continue
+            for h, pend in list(s.pending.items()):
+                if pend.deadline_t > self.vnow:
+                    continue
+                del s.pending[h]
+                self._deadline_miss(s, pend)
+                self._maybe_finish(s)
+
+    def _advance_idle(self) -> None:
+        """Every active row is blocked on the channel: jump the virtual
+        clock to the next reply arrival or deadline (never busy-wait)."""
+        cands = []
+        nxt = self.channel.next_arrival()
+        if nxt is not None:
+            cands.append(nxt)
+        for s in self.slots:
+            if s.active:
+                cands.extend(p.deadline_t for p in s.pending.values())
+        cands = [t for t in cands if t != math.inf]
+        if not cands:
+            raise RuntimeError(
+                "scheduler wedged: every row is blocked on the channel but "
+                "it has nothing in flight and no finite deadline")
+        target = max(self.vnow, min(cands))
+        self._idle_s += target - self.vnow     # nothing decodes while idle
+        self.vnow = target
+
+    def _unwind_event(self, s: _Slot, kind: str) -> None:
+        """Undo one discarded token's contribution to the per-stream
+        counters (speculative rewind).  ``deadline_misses`` is an event
+        count, not a token property — it stays."""
+        st = s.stats
+        st.tokens -= 1
+        if st.confidences:
+            st.confidences.pop()
+        if kind == "l1":
+            st.exits_l1 -= 1
+        elif kind == "l2":
+            st.exits_l2 -= 1
+        elif kind == "cloud":
+            st.cloud_requests -= 1
+
+    def _rewind(self, s: _Slot, pend: _Pending, tok: int) -> None:
+        """Speculative reconcile: the cloud disagreed with the provisional
+        token at ``pend.tok_index`` — replace it, discard everything the
+        row decoded after it, and invalidate the discarded cloud KV (a
+        position the re-decoded stream never cloud-serves again must read
+        a release-semantics gap, not stale K/V; edge KV needs no repair
+        because decode overwrites a slot before reading it)."""
+        i = pend.tok_index
+        for kind in reversed(s.events[i + 1:]):
+            self._unwind_event(s, kind)
+        del s.tokens[i + 1:]
+        del s.events[i + 1:]
+        s.tokens[i] = tok
+        s.events[i] = "cloud"
+        s.stats.cloud_requests += 1
+        s.stats.spec_rewinds += 1
+        s.last_token = tok
+        s.pos = pend.pos + 1
+        for h, p2 in list(s.pending.items()):
+            if p2.pos > pend.pos:      # requests of discarded positions
+                del s.pending[h]       # (their replies will late-drop)
+        cut = np.full((self.B,), np.iinfo(np.int32).max, np.int32)
+        cut[s.index] = pend.pos + 1
+        self.cloud_caches = self._invalidate_rows(
+            self.cloud_caches, jnp.asarray(cut), self._block_tbl())
+
+    def _emit(self, slot: _Slot, tok: int, event: str) -> None:
         slot.tokens.append(tok)
+        slot.events.append(event)
         slot.last_token = tok
         if self.mode == "cloud":
             slot.stats.tokens += 1
@@ -715,19 +1066,27 @@ class BatchScheduler:
         queue = collections.deque(requests)
         results: List[Optional[List[int]]] = [None] * len(requests)
         stats: List[Optional[GenStats]] = [None] * len(requests)
+        v0 = self.vnow
+        self.late_drops = 0
         while queue or any(s.active for s in self.slots):
-            self._admit(queue)
+            admitted = self._admit(queue)
             self._collect(results, stats)     # finished at admission
             if any(s.active for s in self.slots):
                 self.tick()
                 self._collect(results, stats)
-            elif queue:
-                # nothing active yet the head request could not be admitted:
+            elif queue and not admitted:
+                # nothing active, nothing admitted, yet requests remain:
                 # no tick can ever free pages, so fail loudly instead of
                 # spinning (cannot happen with reservation accounting).
+                # (An admission that finished instantly — first token hits
+                # eos — sets ``admitted`` and simply loops to refill.)
                 raise RuntimeError(
                     f"scheduler wedged: {len(queue)} queued, 0 active, "
                     f"pool {self.pool and self.pool.available_pages} pages")
+        # replies still in flight belong to retired slots — drop them now
+        # so a reused channel can never leak them into a later run
+        self.late_drops += len(self.channel.poll(math.inf))
+        self.last_virtual_time = self.vnow - v0
         return results, stats
 
 
@@ -750,18 +1109,31 @@ class ServingSystem:
                  sampler: str = "greedy", temperature: float = 1.0,
                  top_k: int = 0, eos_id: Optional[int] = None,
                  seed: int = 0, max_ctx: Optional[int] = None,
-                 num_pages: Optional[int] = None) -> Dict[str, Any]:
+                 num_pages: Optional[int] = None,
+                 channel: Optional[CloudChannel] = None,
+                 tick_time_s: float = 0.0, overlap: bool = True,
+                 fallback_after: int = 0) -> Dict[str, Any]:
         """mode: collm | standalone | cloud.  One client per prompt, decoded
         by the continuous-batching ``BatchScheduler`` (num_slots streams in
         flight; defaults to min(len(prompts), 8)).  The KV layout follows
         ``CollmConfig.kv_layout``; ``max_ctx``/``num_pages`` size the paged
-        pool (defaults: max_ctx = max_seq, num_pages = dense-equivalent)."""
+        pool (defaults: max_ctx = max_seq, num_pages = dense-equivalent).
+
+        ``channel`` selects the cloud transport (default: blocking-
+        equivalent ``SyncChannel``); ``tick_time_s`` is the virtual edge
+        compute per decode tick, ``overlap=False`` degrades the dispatch
+        to a blocking drain, and ``fallback_after`` N consecutive deadline
+        misses flips a stream to standalone mode.  The result dict gains
+        ``virtual_time`` (this run's virtual makespan), ``late_drops``,
+        and ``channel_stats``."""
         slots = num_slots or max(1, min(len(prompts), 8))
         longest = max(len(p) for p in prompts)
         max_seq = max_seq or (longest + max_new + 8)
         max_seq = max(max_seq, _bucket(longest))
         key = (mode, slots, max_seq, sampler, temperature, top_k, seed,
-               max_ctx, num_pages)
+               max_ctx, num_pages,
+               id(channel) if channel is not None else None,
+               tick_time_s, overlap, fallback_after)
         sched = self._schedulers.get(key)
         if sched is None:
             # bounded cache: each scheduler owns pooled device caches
@@ -771,7 +1143,9 @@ class ServingSystem:
             sched = BatchScheduler(
                 self.collm, self.params, self.cloud.cm, slots, max_seq,
                 mode=mode, sampler=sampler, temperature=temperature,
-                top_k=top_k, seed=seed, max_ctx=max_ctx, num_pages=num_pages)
+                top_k=top_k, seed=seed, max_ctx=max_ctx, num_pages=num_pages,
+                channel=channel, tick_time_s=tick_time_s, overlap=overlap,
+                fallback_after=fallback_after)
             self._schedulers[key] = sched
         reqs = [Request(device_id=f"edge-{i}", prompt=np.asarray(p),
                         max_new=max_new, eos_id=eos_id)
@@ -779,7 +1153,10 @@ class ServingSystem:
         results, stats = sched.run(reqs)
         return {"tokens": results, "stats": _aggregate(stats),
                 "per_client": stats, "cm_stats": self.cloud.cm.stats(),
-                "num_slots": slots}
+                "num_slots": slots,
+                "virtual_time": sched.last_virtual_time,
+                "late_drops": sched.late_drops,
+                "channel_stats": sched.channel.stats.as_row()}
 
     # ------------------------------------------------------------------
     def generate_sequential(self, prompts: Sequence[np.ndarray], max_new: int,
@@ -802,6 +1179,7 @@ class ServingSystem:
                       mode: str, max_seq: int):
         model, collm, params = self.model, self.collm, self.params
         st = GenStats()
+        channel = SyncChannel()      # the one cloud-request path (blocking)
         batch = {"tokens": jnp.asarray(prompt[None, :])}
 
         if mode == "cloud":
@@ -834,8 +1212,9 @@ class ServingSystem:
                                                  h1_prompt=h1_seq, enc_out=enc)
             st.cloud_time += time.perf_counter() - t0
             # prompt upload crosses the wire in the configured format
-            st.upload_bytes += _prompt_wire_bytes(
-                h1_seq.shape, model.compute_dtype, self.ccfg.wire_format)
+            st.upload_bytes += hidden_wire_bytes(
+                model.cfg.d_model, self.ccfg.wire_format,
+                seq=h1_seq.shape[1])
 
         # first token from the prompt's last position
         from repro.core.exits import first_confident_exit
@@ -885,11 +1264,12 @@ class ServingSystem:
                 tok = int(out.token[0])
             else:
                 t0 = time.perf_counter()
-                logits = self.cloud.infer(device_id, client.pos - 1,
-                                          backfill=self.ccfg.backfill)
+                self.cloud.request(channel, device_id, client.pos - 1,
+                                   backfill=self.ccfg.backfill)
+                (rep,) = channel.poll()
                 st.cloud_time += time.perf_counter() - t0
                 st.cloud_requests += 1
-                tok = int(jnp.argmax(logits[0]))
+                tok = int(jnp.argmax(rep.reply[0]))
             toks.append(tok)
 
         if mode == "collm":

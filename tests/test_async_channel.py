@@ -1,0 +1,333 @@
+"""Async cloud channel: transport-level unit tests, sync-vs-async token
+equivalence across modes and KV layouts, the latency-aware early exit
+(deadline miss -> edge-committed token, property-tested over latency
+traces), speculative reconcile, and reply-reordering safety across slot
+refill (a retired slot's late reply must be dropped, never applied to its
+successor)."""
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.collm import CollmConfig
+from repro.core.netsim import NetworkParams
+from repro.core.netsim import _hidden_bytes as netsim_hidden_bytes
+from repro.core.transport import (TOKEN_BYTES, AsyncSimChannel, CloudChannel,
+                                  ScriptedChannel, SyncChannel,
+                                  hidden_wire_bytes)
+from repro.serving.engine import GenStats, ServingSystem, _aggregate
+
+WIFI = NetworkParams(up_bw=3.8e6, down_bw=8e6, rtt=0.003)
+
+
+def _prompts(data, lens):
+    return [data.sample_tokens(n) for n in lens]
+
+
+# ---------------------------------------------------------------------------
+# channel unit tests (no model)
+# ---------------------------------------------------------------------------
+def test_sync_channel_immediate():
+    ch = SyncChannel()
+    h = ch.submit(slot=3, seq=7, pos=5, reply="r", now=2.5, nbytes_up=8)
+    assert ch.in_flight() == 1 and ch.arrival_of(h) == 2.5
+    (rep,) = ch.poll(2.5)
+    assert (rep.slot, rep.seq, rep.pos, rep.reply) == (3, 7, 5, "r")
+    assert rep.deadline_t == math.inf
+    assert ch.in_flight() == 0 and ch.poll(math.inf) == []
+
+
+def test_async_sim_channel_fifo_and_links():
+    ch = AsyncSimChannel(WIFI, service_s=0.005, deadline_s=0.5)
+    h1 = ch.submit(slot=0, pos=0, reply=1, now=0.0, nbytes_up=8,
+                   nbytes_down=8)
+    h2 = ch.submit(slot=1, pos=0, reply=2, now=0.0, nbytes_up=8,
+                   nbytes_down=8)
+    # nothing arrives instantly; the shared cloud FIFO serializes service
+    assert ch.poll(1e-4) == []
+    assert ch.arrival_of(h2) > ch.arrival_of(h1) > 0.0
+    reps = ch.poll(1.0)
+    assert [r.reply for r in reps] == [1, 2]
+    assert all(r.deadline_t == 0.5 for r in reps)
+    assert ch.stats.requests == 2 and ch.stats.replies == 2
+    # uploads occupy the per-slot uplink: a later request on the same slot
+    # queues behind them
+    ch2 = AsyncSimChannel(WIFI)
+    ha = ch2.submit(slot=0, reply=0, now=0.0, nbytes_up=8)
+    base_arrival = ch2.arrival_of(ha)
+    ch2.poll(math.inf)
+    ch3 = AsyncSimChannel(WIFI)
+    ch3.notify_upload(0, 10_000_000, 0.0)          # big upload in the way
+    hb = ch3.submit(slot=0, reply=0, now=0.0, nbytes_up=8)
+    assert ch3.arrival_of(hb) > base_arrival
+
+
+def test_scripted_channel_replays_trace():
+    ch = ScriptedChannel([0.1, 0.3], deadline_s=0.2)
+    ch.submit(reply="a", now=0.0)
+    ch.submit(reply="b", now=0.0)
+    assert [r.reply for r in ch.poll(0.15)] == ["a"]
+    assert ch.next_arrival() == pytest.approx(0.3)
+    assert [r.reply for r in ch.poll(0.35)] == ["b"]
+
+
+def test_wire_accounting_single_source_of_truth():
+    """netsim prices hidden/token packets with transport's helpers — the
+    simulator and the engine can never disagree on transmitted MB."""
+    from repro.core import netsim
+    assert netsim.TOKEN_BYTES is TOKEN_BYTES
+    for d in (64, 128, 4096):
+        assert netsim_hidden_bytes(d, True) == hidden_wire_bytes(d, "float16")
+        assert netsim_hidden_bytes(d, False) == hidden_wire_bytes(d, "float32")
+    # int8 carries a per-position fp32 scale
+    assert hidden_wire_bytes(128, "int8", seq=3) == 3 * 128 + 3 * 4
+
+
+def test_genstats_edge_cases():
+    assert GenStats().request_rate == 0.0          # zero-token stream
+    st0 = GenStats(tokens=4, cloud_requests=2, deadline_misses=1)
+    assert st0.request_rate == 0.5                 # misses are not requests
+    agg = _aggregate([st0, None, GenStats(tokens=1, deadline_misses=2,
+                                          overlap_s=0.5)])
+    assert (agg.tokens, agg.cloud_requests, agg.deadline_misses) == (5, 2, 3)
+    assert agg.overlap_s == 0.5                    # new counters aggregate
+
+
+# ---------------------------------------------------------------------------
+# sync-vs-async token equivalence (all modes, both KV layouts)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_async_inf_deadline_matches_sync_collm(tiny_trained, layout):
+    """With an infinite deadline the async channel only delays replies —
+    stalled rows wait while others decode — so greedy streams must be
+    token-for-token identical to the blocking SyncChannel engine."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 11, 9, 12])
+    ccfg = CollmConfig(theta=0.8, kv_layout=layout)
+    base = ServingSystem(model, params, ccfg).generate(
+        prompts, 12, mode="collm", num_slots=2)
+    ch = AsyncSimChannel(WIFI, service_s=0.004)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 12, mode="collm", num_slots=2, channel=ch,
+        tick_time_s=0.01)
+    assert r["tokens"] == base["tokens"]
+    bs, rs = base["stats"], r["stats"]
+    assert (bs.cloud_requests, bs.exits_l1, bs.exits_l2) == \
+        (rs.cloud_requests, rs.exits_l1, rs.exits_l2)
+    assert rs.deadline_misses == 0
+    assert r["virtual_time"] > 0 and rs.stall_s > 0
+
+
+@pytest.mark.parametrize("mode", ["standalone", "cloud"])
+def test_async_channel_other_modes_unchanged(tiny_trained, mode):
+    """standalone/cloud modes never cross the hidden-state channel — an
+    async channel must not change their streams."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 8])
+    ccfg = CollmConfig(theta=0.8)
+    base = ServingSystem(model, params, ccfg).generate(
+        prompts, 10, mode=mode, num_slots=2)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 10, mode=mode, num_slots=2,
+        channel=AsyncSimChannel(WIFI), tick_time_s=0.01)
+    assert r["tokens"] == base["tokens"]
+
+
+def test_overlap_beats_blocking_virtual_time(tiny_trained):
+    """Same WiFi-class latencies: overlapping edge decode with in-flight
+    cloud steps must lower the virtual makespan vs the blocking drain."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10] * 8)
+    ccfg = CollmConfig(theta=0.8)
+    runs = {}
+    for overlap in (False, True):
+        r = ServingSystem(model, params, ccfg).generate(
+            prompts, 12, mode="collm", num_slots=4,
+            channel=AsyncSimChannel(WIFI, service_s=0.004),
+            tick_time_s=0.01, overlap=overlap)
+        runs[overlap] = r
+    assert runs[True]["tokens"] == runs[False]["tokens"]
+    assert runs[True]["virtual_time"] < runs[False]["virtual_time"]
+    # overlap_s is the separating counter: stalled time hidden behind the
+    # pool's decoding — identically 0 when the whole pool blocks
+    assert runs[True]["stats"].overlap_s > runs[False]["stats"].overlap_s
+    assert runs[False]["stats"].overlap_s == 0.0
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+def test_speculative_matches_blocking(tiny_trained, layout):
+    """Latency hiding with full reconcile: provisional edge tokens +
+    rewind-on-mismatch must converge to the exact blocking stream (the
+    speculation is invisible in the final output), with zero stall time."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 11, 9])
+    base = ServingSystem(
+        model, params, CollmConfig(theta=0.8, kv_layout=layout)).generate(
+        prompts, 12, mode="collm", num_slots=2)
+    ccfg = CollmConfig(theta=0.8, kv_layout=layout, speculative=True)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 12, mode="collm", num_slots=2,
+        channel=AsyncSimChannel(WIFI, service_s=0.004), tick_time_s=0.01)
+    assert r["tokens"] == base["tokens"]
+    bs, rs = base["stats"], r["stats"]
+    assert (bs.tokens, bs.cloud_requests, bs.exits_l1, bs.exits_l2) == \
+        (rs.tokens, rs.cloud_requests, rs.exits_l1, rs.exits_l2)
+    assert rs.stall_s == 0.0 and rs.overlap_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# latency-aware early exit (deadline miss -> edge token)
+# ---------------------------------------------------------------------------
+def test_deadline_miss_commits_edge_tokens(tiny_trained):
+    """Replies far slower than the deadline: every below-θ token must be
+    served by the edge exit head (no stalls, streams complete), and the
+    late replies must be dropped, not applied."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 9, 11])
+    ccfg = CollmConfig(theta=0.8)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 12, mode="collm", num_slots=2,
+        channel=ScriptedChannel([0.5], deadline_s=0.02), tick_time_s=0.005)
+    st = r["stats"]
+    assert all(len(t) == 12 for t in r["tokens"])
+    assert st.deadline_misses > 0
+    # decode-time tokens never came from the cloud (only the admission
+    # first token may have been served by the cloud prefill)
+    assert st.cloud_requests <= len(prompts)
+    assert st.deadline_misses + st.exits_l1 + st.exits_l2 >= 11 * len(prompts)
+    assert r["late_drops"] == st.deadline_misses
+
+
+def test_reply_arriving_past_deadline_is_a_miss(tiny_trained):
+    """Arrival and deadline crossed within one virtual-clock advance: the
+    deadline fired first, so the reply must be dropped and the edge token
+    committed — even though the engine sees both events at once."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 9])
+    # latency 8 ms, deadline 5 ms, tick 10 ms: every request's deadline
+    # AND arrival land inside the same tick
+    r = ServingSystem(model, params, CollmConfig(theta=0.8)).generate(
+        prompts, 10, mode="collm", num_slots=2,
+        channel=ScriptedChannel([0.008], deadline_s=0.005),
+        tick_time_s=0.01)
+    st = r["stats"]
+    assert all(len(t) == 10 for t in r["tokens"])
+    assert st.deadline_misses > 0
+    assert st.cloud_requests <= len(prompts)   # admission prefill only
+
+
+def test_fallback_after_switches_to_standalone(tiny_trained):
+    """The paper's unstable-link story: consecutive deadline misses flip a
+    stream to standalone mode — it stops uploading and serves itself."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 9])
+    r = ServingSystem(model, params, CollmConfig(theta=0.8)).generate(
+        prompts, 14, mode="collm", num_slots=2,
+        channel=ScriptedChannel([0.5], deadline_s=0.01), tick_time_s=0.005,
+        fallback_after=2)
+    st = r["stats"]
+    assert st.fallbacks >= 1
+    assert all(len(t) == 14 for t in r["tokens"])
+    # once fallen back, rows submit no further requests: fewer channel
+    # requests than below-θ decode positions
+    assert r["channel_stats"]["requests"] < 13 * len(prompts)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_deadline_miss_property_over_latency_traces(tiny_trained, seed):
+    """Hypothesis over random latency traces: whatever the trace, the
+    engine never stalls forever and never invents or loses tokens —
+    every stream completes to max_new and every emitted token is either a
+    confident exit, a cloud reply that beat its deadline, or a
+    deadline-missed edge commit."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(0.0, 0.08, size=16).tolist()
+    prompts = _prompts(data, [8, 10, 9])
+    max_new = 8
+    ch = ScriptedChannel(lat, deadline_s=0.03)
+    r = ServingSystem(model, params, CollmConfig(theta=0.8)).generate(
+        prompts, max_new, mode="collm", num_slots=2, channel=ch,
+        tick_time_s=0.01)
+    agg = r["stats"]
+    assert all(len(t) == max_new for t in r["tokens"])
+    served = agg.exits_l1 + agg.exits_l2 + agg.cloud_requests
+    # the admission token is uncounted when it exits at the prompt's last
+    # position, counted as a cloud request when the prefill served it
+    assert agg.tokens - len(prompts) <= served <= agg.tokens
+    # every submitted request resolved exactly once: committed reply or
+    # deadline miss (cloud_requests also counts admission prefill tokens,
+    # which never cross the channel — hence the n_clients slack)
+    submitted = r["channel_stats"]["requests"]
+    assert (agg.cloud_requests - len(prompts) + agg.deadline_misses
+            <= submitted
+            <= agg.cloud_requests + agg.deadline_misses)
+
+
+# ---------------------------------------------------------------------------
+# reply reordering across slot refill
+# ---------------------------------------------------------------------------
+def test_late_reply_dropped_across_refill(tiny_trained):
+    """A retired slot's reply arriving during its successor's stream must
+    be dropped: the successor's tokens are identical to running it
+    alone under the same channel conditions."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    p0, p1 = _prompts(data, [10, 9])
+    # replies take 0.6 virtual seconds; a 6-token stream at 0.01s/tick
+    # with a 0.01s deadline retires long before they arrive — they land
+    # in the successor's lifetime and must be dropped by the seq guard
+    mk = lambda: ScriptedChannel([0.6], deadline_s=0.01)
+    both = ServingSystem(model, params, CollmConfig(theta=0.8)).generate(
+        [p0, p1], 6, mode="collm", num_slots=1, channel=mk(),
+        tick_time_s=0.01)
+    alone = ServingSystem(model, params, CollmConfig(theta=0.8)).generate(
+        [p1], 6, mode="collm", num_slots=1, channel=mk(), tick_time_s=0.01)
+    assert both["tokens"][1] == alone["tokens"][0]
+    assert both["late_drops"] >= both["stats"].deadline_misses > 0
+
+
+def test_recurrent_arch_stalls_keep_state():
+    """Hybrid SSM arch: stalled rows flow through the batched graph as
+    placeholders, and ``edge_step_masked`` must merge their recurrent
+    state out — async streams stay token-identical to sync."""
+    import jax
+    from repro.configs.registry import get_smoke_config
+    from repro.models.registry import build_model
+
+    cfg = get_smoke_config("zamba2-1.2b")
+    model = build_model(cfg)
+    assert not model.attention_only()
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (8, 9)]
+    ccfg = CollmConfig(theta=0.95)
+    base = ServingSystem(model, params, ccfg).generate(
+        prompts, 8, mode="collm", num_slots=2)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 8, mode="collm", num_slots=2,
+        channel=AsyncSimChannel(WIFI, service_s=0.004), tick_time_s=0.01)
+    assert r["tokens"] == base["tokens"]
+    assert r["stats"].stall_s > 0
+
+
+def test_channel_protocol_base_class():
+    """The engine only relies on the CloudChannel protocol surface."""
+    ch = CloudChannel(deadline_s=1.0)
+    h = ch.submit(reply="x", now=0.0)
+    assert ch.arrival_of(h) == 0.0
+    (rep,) = ch.poll(0.0)
+    assert rep.deadline_t == 1.0
+    assert ch.next_arrival() is None
