@@ -22,6 +22,7 @@ def main() -> None:
         ("throughput", throughput_bench.run),
         ("paged_kv", throughput_bench.run_paged),
         ("async_channel", throughput_bench.run_channel),
+        ("cloud_batch", throughput_bench.run_cloud_batch),
     ]
     failures = []
     for name, fn in benches:

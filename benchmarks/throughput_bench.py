@@ -17,9 +17,18 @@ tokens instead of stalls).  With ``--check`` it asserts the overlapped
 virtual makespan beats the blocking one and that the deadline trace
 still completes every stream.
 
+``--cloud-batch`` runs the multi-client sweep instead: ``--clients N``
+edge engines (one slot + one WiFi link each) share one cloud, and the
+shared ``CloudBatcher`` (one masked cloud step per wave of concurrent
+requests, priced by a batching ``CloudServicePoint``) is compared against
+the per-request FIFO cloud.  With ``--check`` it asserts the batched
+cloud virtual makespan beats FIFO at N>=4 and that both variants emit
+token-identical streams to N independent sync runs.
+
     PYTHONPATH=src:. python benchmarks/throughput_bench.py [--check]
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --kv-layout both
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --channel sim --check
+    PYTHONPATH=src:. python benchmarks/throughput_bench.py --clients 4 --cloud-batch --check
 """
 from __future__ import annotations
 
@@ -29,7 +38,8 @@ import time
 import numpy as np
 
 from repro.core.collm import CollmConfig
-from repro.core.transport import AsyncSimChannel, ScriptedChannel
+from repro.core.transport import (AsyncSimChannel, CloudServicePoint,
+                                  ScriptedChannel)
 from repro.serving.engine import ServingSystem
 
 from benchmarks.common import PAPER_NET, tiny_trained_model
@@ -195,6 +205,82 @@ def run_channel(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
     return out
 
 
+# virtual cost of ONE batched cloud service step (A100-class cloud
+# partition); the batching window the cloud waits to accumulate arrivals
+CLOUD_SERVICE_S = 0.008
+CLOUD_WINDOW_S = 0.004
+
+
+def run_cloud_batch(csv: bool = False, *, n_clients: int = 4,
+                    max_new: int = 24, theta: float = 0.8,
+                    check: bool = False) -> dict:
+    """Multi-client sweep (paper §5, Fig 4): N edge engines, each its own
+    WiFi link and virtual clock, sharing ONE cloud.  ``fifo`` prices the
+    cloud as a per-request queue (every request occupies the server for
+    ``CLOUD_SERVICE_S`` back-to-back) with per-engine cloud compute;
+    ``batched`` routes compute through the shared ``CloudBatcher`` (one
+    masked cloud step per wave of concurrent requests) and prices it with
+    a batching service point.  ``--check`` asserts the batched cloud
+    virtual makespan beats per-request FIFO at N>=4 and that both emit
+    token-identical streams to N independent sync runs."""
+    tiny = tiny_trained_model()
+    model, params, data = tiny["model"], tiny["params"], tiny["data"]
+    prompts = _requests(data, n_clients)
+    ccfg = CollmConfig(theta=theta)
+
+    # reference: each client run independently on a blocking SyncChannel
+    ref_sys = ServingSystem(model, params, ccfg)
+    ref = [ref_sys.generate([p], max_new, mode="collm", num_slots=1)
+           ["tokens"][0] for p in prompts]
+
+    n_layers = model.cfg.n_layers
+    cloud_frac = (n_layers - model.cfg.exit_layers[0]) / n_layers
+    out: dict = {}
+    print("cloud,clients,virtual_s,cloud_busy_s,steps,mean_batch,"
+          "requests,offload_pct,tokens_equal")
+    for variant in ("fifo", "batched"):
+        # one client has nobody to coalesce with: both variants are FIFO
+        batched = variant == "batched" and n_clients > 1
+        svc = CloudServicePoint(
+            CLOUD_SERVICE_S,
+            batch_window_s=CLOUD_WINDOW_S if batched else 0.0,
+            max_batch=n_clients if batched else 1)
+        chans = [AsyncSimChannel(PAPER_NET, service=svc)
+                 for _ in range(n_clients)]
+        sysm = ServingSystem(model, params, ccfg)
+        r = sysm.generate_multi(prompts, max_new, cloud_batch=batched,
+                                channels=chans, tick_time_s=TICK_TIME_S)
+        st = r["stats"]
+        # cloud work the edge kept OFF the cloud, vs. the cloud-only
+        # deployment (every token, all layers) — the paper's headline
+        offload = 100.0 * (1.0 - st.request_rate * cloud_frac)
+        b = r.get("batcher", {})
+        equal = r["tokens"] == ref
+        out[variant] = {"virtual_s": r["virtual_time"],
+                        "cloud_busy_s": svc.busy_s,
+                        "steps": b.get("steps", svc.batches),
+                        "mean_batch": b.get("mean_batch", 1.0),
+                        "offload_pct": offload, "tokens_equal": equal}
+        print(f"{variant},{n_clients},{r['virtual_time']:.3f},"
+              f"{svc.busy_s:.3f},{out[variant]['steps']},"
+              f"{out[variant]['mean_batch']},{st.cloud_requests},"
+              f"{offload:.1f},{equal}")
+
+    if check:
+        v_f, v_b = out["fifo"]["virtual_s"], out["batched"]["virtual_s"]
+        assert n_clients >= 4, "--check needs --clients >= 4"
+        assert v_b < v_f, (
+            f"batched cloud ({v_b:.3f}s virtual) should beat per-request "
+            f"FIFO ({v_f:.3f}s virtual) at {n_clients} clients")
+        assert out["batched"]["tokens_equal"] and out["fifo"]["tokens_equal"], \
+            "multi-client streams must be token-identical to independent " \
+            "sync runs"
+        print(f"# check passed: batched {v_b:.3f}s < fifo {v_f:.3f}s "
+              f"virtual at {n_clients} clients; streams identical to "
+              f"independent runs")
+    return out
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=16)
@@ -211,7 +297,14 @@ def main() -> None:
                     help="sim: async-transport comparison (overlap vs "
                          "blocking + deadline-miss trace) instead of the "
                          "slot sweep")
+    ap.add_argument("--cloud-batch", action="store_true",
+                    help="multi-client sweep: N edge engines sharing one "
+                         "cloud, batched CloudBatcher vs per-request FIFO")
     args = ap.parse_args()
+    if args.cloud_batch:
+        run_cloud_batch(n_clients=args.clients, max_new=args.max_new,
+                        theta=args.theta, check=args.check)
+        return
     if args.channel == "sim":
         run_channel(n_clients=args.clients, max_new=args.max_new,
                     theta=args.theta, check=args.check)

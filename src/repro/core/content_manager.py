@@ -34,6 +34,7 @@ class ClientState:
     device_id: str
     pending_uploads: Dict[int, StatePacket] = dataclasses.field(default_factory=dict)
     cache: Optional[Pytree] = None          # cloud-partition KV / ssm states
+    cloud_slot: Optional[int] = None        # row in the CloudBatcher's pool
     last_active: float = 0.0
     uploads_received: int = 0
     uploads_consumed: int = 0
@@ -125,6 +126,39 @@ class ContentManager:
         c = self._client(device_id)
         c.cache = cache
         c.last_active = self._clock()
+
+    # -- cloud slot pool (CloudBatcher) --------------------------------------
+    # The batcher serves every client out of ONE pooled, batch-major cloud
+    # cache; the manager owns the device_id -> pool-row mapping so the
+    # per-client state (uploads, slot, lifecycle) lives in one place.
+    def init_cloud_slots(self, num_slots: int) -> None:
+        self._cloud_free_slots = list(range(num_slots - 1, -1, -1))
+
+    def assign_cloud_slot(self, device_id: str) -> int:
+        c = self._client(device_id)
+        if c.cloud_slot is not None:
+            return c.cloud_slot
+        if not getattr(self, "_cloud_free_slots", None):
+            raise RuntimeError(
+                f"cloud slot pool exhausted assigning {device_id} "
+                "(release a finished client first)")
+        c.cloud_slot = self._cloud_free_slots.pop()
+        return c.cloud_slot
+
+    def cloud_slot(self, device_id: str) -> Optional[int]:
+        c = self._clients.get(device_id)
+        return None if c is None else c.cloud_slot
+
+    def release_cloud_slot(self, device_id: str) -> Optional[int]:
+        c = self._clients.get(device_id)
+        if c is None or c.cloud_slot is None:
+            return None
+        slot, c.cloud_slot = c.cloud_slot, None
+        self._cloud_free_slots.append(slot)
+        return slot
+
+    def cloud_slots_free(self) -> int:
+        return len(getattr(self, "_cloud_free_slots", ()))
 
     # -- lifecycle ------------------------------------------------------------
     def end_of_sequence(self, device_id: str) -> None:

@@ -31,10 +31,13 @@ import dataclasses
 import heapq
 from typing import Dict, List, Optional, Sequence
 
-# Single source of truth for wire accounting: the simulator prices packets
-# with the same helpers the serving engine uses (repro.core.transport), so
-# the two can never disagree on transmitted MB.
-from repro.core.transport import TOKEN_BYTES, hidden_wire_bytes
+# Single source of truth for wire accounting AND cloud-queue accounting:
+# the simulator prices packets with the same helpers the serving engine
+# uses, and books cloud service through the same CloudServicePoint the
+# AsyncSimChannel uses (repro.core.transport), so the two can never
+# disagree on transmitted MB or on the batched-cloud saturation knee.
+from repro.core.transport import (TOKEN_BYTES, CloudServicePoint,
+                                  hidden_wire_bytes)
 
 
 @dataclasses.dataclass
@@ -126,12 +129,22 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
              theta: float = 0.8,
              half_precision: bool = True,
              early_exit: bool = True,
-             content_manager: bool = True) -> SimResult:
-    """Run one deployment strategy over per-client case lists."""
+             content_manager: bool = True,
+             cloud_batch_window: float = 0.0,
+             cloud_max_batch: int = 1) -> SimResult:
+    """Run one deployment strategy over per-client case lists.
+
+    ``cloud_batch_window`` / ``cloud_max_batch`` configure the shared
+    cloud service point: with the defaults every request occupies the
+    server back-to-back (per-request FIFO — Fig 4's saturation knee);
+    with batching on, requests arriving within the window share one
+    batched service step, the accounting the live ``CloudBatcher``
+    realizes (docs/async_transport.md)."""
     res = SimResult()
     clients = [_Client(cid=i, cases=list(cs))
                for i, cs in enumerate(clients_cases)]
-    cloud_free = 0.0
+    cloud = CloudServicePoint(0.0, batch_window_s=cloud_batch_window,
+                              max_batch=cloud_max_batch)
     hb = _hidden_bytes(split.d_model, half_precision)
     theta_eff = theta if early_exit else 2.0   # never exit early
 
@@ -172,11 +185,8 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
                 comm = wire / net.up_bw
                 res.comm_time += comm
                 res.transmitted_mb += wire / 1e6
-                start = max(c.now + comm, cloud_free)
                 svc = p * split.n_layers * comp.cloud_layer_time * pf
-                cloud_free = start + svc
-                res.cloud_time += svc
-                c.now = cloud_free
+                c.now = cloud.service(c.now + comm, svc)
             elif strategy == "naive":
                 # edge prefills its partition, ships ALL prompt hiddens sync
                 svc_e = p * edge_layers_e2 * comp.edge_layer_time * pf
@@ -185,12 +195,10 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
                 comm = net.rtt / 2 + upload_cost(wire)
                 res.comm_time += comm
                 res.transmitted_mb += wire / 1e6
-                start = max(c.now + svc_e + comm, cloud_free)
                 svc_c = (p * (split.n_layers - split.l_ee2)
                          * comp.cloud_layer_time * pf)
-                cloud_free = start + svc_c
-                res.cloud_time += svc_c
-                c.now = cloud_free + net.rtt / 2
+                c.now = cloud.service(c.now + svc_e + comm, svc_c) \
+                    + net.rtt / 2
             elif strategy in ("ce_collm",):
                 svc_e = (p * edge_layers_e2 * comp.edge_layer_time * pf
                          + serialize_cost(p * hb))
@@ -206,11 +214,8 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
                 c.now = c.now + max(svc_e, link if not content_manager else svc_e)
                 # cloud prefills its partition from uploaded hiddens (async,
                 # needed before the first cloud request)
-                start = max(c.upload_arrival, cloud_free)
                 svc_c = p * cloud_layers * comp.cloud_layer_time * pf
-                cloud_free = start + svc_c
-                res.cloud_time += svc_c
-                c.upload_arrival = cloud_free
+                c.upload_arrival = cloud.service(c.upload_arrival, svc_c)
             elif strategy == "standalone":
                 svc_e = p * edge_layers_e2 * comp.edge_layer_time * pf
                 res.edge_time += svc_e
@@ -225,11 +230,8 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
                 comm = wire / net.up_bw
                 res.comm_time += comm
                 res.transmitted_mb += wire / 1e6
-                start = max(c.now + comm, cloud_free)
                 svc = split.n_layers * comp.cloud_layer_time
-                cloud_free = start + svc
-                res.cloud_time += svc
-                c.now = cloud_free
+                c.now = cloud.service(c.now + comm, svc)
 
             elif strategy == "naive":
                 svc_e = edge_layers_e2 * comp.edge_layer_time
@@ -242,12 +244,9 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
                 comm = net.rtt + upload_cost(wire)
                 res.comm_time += comm
                 res.transmitted_mb += wire / 1e6
-                start = max(c.now + svc_e + net.rtt / 2 + upload_cost(wire),
-                            cloud_free)
                 svc_c = (split.n_layers - split.l_ee2) * comp.cloud_layer_time
-                cloud_free = start + svc_c
-                res.cloud_time += svc_c
-                c.now = cloud_free + net.rtt / 2
+                ready = c.now + svc_e + net.rtt / 2 + upload_cost(wire)
+                c.now = cloud.service(ready, svc_c) + net.rtt / 2
 
             elif strategy == "standalone":
                 svc_e = (edge_layers_e2 * comp.edge_layer_time
@@ -305,13 +304,10 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
                             res.comm_time += comm
                             res.transmitted_mb += wire / 1e6
                             data_ready = now2 + net.rtt / 2 + upload_cost(wire)
-                        start = max(data_ready, cloud_free)
                         nbf = pending_backfill[cid] if split.backfill else 0
                         svc_c = (1 + nbf) * cloud_layers * comp.cloud_layer_time
                         pending_backfill[cid] = 0
-                        cloud_free = start + svc_c
-                        res.cloud_time += svc_c
-                        c.now = cloud_free + net.rtt / 2
+                        c.now = cloud.service(data_ready, svc_c) + net.rtt / 2
 
             c.tok_idx += 1
             if c.tok_idx >= len(case.tokens):
@@ -325,6 +321,9 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
 
     res.per_client_finish = [c.now for c in clients]
     res.total_time = max(res.per_client_finish) if clients else 0.0
+    # server busy time comes from the service point: a batched step serves
+    # several requests with ONE service, so summing per request would lie
+    res.cloud_time = cloud.busy_s
     if res.tokens:
         res.request_cloud_rate = (res.cloud_requests / res.tokens
                                   if strategy == "ce_collm" else

@@ -36,6 +36,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
@@ -108,7 +109,10 @@ class StatePacket:
         if self.states is not None:
             n += packet_bytes(self.states)
         if self.pos is not None:
-            n += 4
+            # positions go over the wire as int32 — one per row.  A batched
+            # upload carries a (B,) position vector and must bill all B
+            # entries, not a flat 4 bytes.
+            n += 4 * int(np.asarray(self.pos).size)
         return n
 
 
@@ -127,6 +131,85 @@ def open_packet(pkt: StatePacket, dtype=jnp.float32
     states = (dequantize_tree(pkt.states, dtype)
               if pkt.states is not None else None)
     return hidden, states
+
+
+# ---------------------------------------------------------------------------
+# Cloud service point (the shared cloud server queue, in virtual time)
+# ---------------------------------------------------------------------------
+class CloudServicePoint:
+    """The cloud server's service queue, shared by every client channel.
+
+    This replaces the scalar ``_cloud_free`` FIFO: with the default knobs
+    (``batch_window_s=0``, ``max_batch=1``) every request occupies the
+    server for ``service_s`` back-to-back — N concurrent clients serialize,
+    which is the saturation knee of the paper's Fig 4.  With batching
+    enabled, requests that become ready within ``batch_window_s`` of the
+    first one (up to ``max_batch``) share ONE ``service_s`` — the masked
+    batched cloud step the ``CloudBatcher`` actually executes — so the
+    knee moves from N*service_s to service_s + window.
+
+    ``service(ready_t, service_s=None)`` books one request that is ready
+    (uploaded + request arrived) at virtual time ``ready_t`` and returns
+    its completion time.  A joining request may carry a larger per-request
+    service cost (e.g. backfill rings); the batch's completion extends to
+    cover it.  Both ``netsim.simulate`` and ``AsyncSimChannel`` price the
+    cloud through this class, so the simulator and the live engine agree
+    on the batched knee by construction.
+    """
+
+    def __init__(self, service_s: float = 0.0, *,
+                 batch_window_s: float = 0.0, max_batch: int = 1):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if batch_window_s > 0.0 and max_batch == 1:
+            # the window would delay every request with nothing ever
+            # joining a batch — strictly worse than FIFO, silently
+            raise ValueError("batch_window_s > 0 requires max_batch > 1 "
+                             "(a window with max_batch=1 never coalesces)")
+        self.service_s = float(service_s)
+        self.batch_window_s = float(batch_window_s)
+        self.max_batch = int(max_batch)
+        self.reset()
+
+    def reset(self) -> None:
+        """Forget all virtual-time state (a fresh run on a reused point)."""
+        self._free = 0.0           # when the server is next idle
+        self._close_t = -math.inf  # open batch's accumulation window end
+        self._start_t = 0.0        # open batch's service start
+        self._done_t = 0.0         # open batch's completion
+        self._count = 0            # requests in the open batch
+        self.batches = 0           # total batched service steps booked
+        self.requests = 0
+        self.busy_s = 0.0          # summed server busy time (per batch,
+                                   # not per request — coalescing shrinks it)
+
+    @property
+    def batched(self) -> bool:
+        return self.max_batch > 1 or self.batch_window_s > 0.0
+
+    def service(self, ready_t: float, service_s: Optional[float] = None
+                ) -> float:
+        svc = self.service_s if service_s is None else float(service_s)
+        self.requests += 1
+        if self._count and self._count < self.max_batch \
+                and ready_t <= self._close_t:
+            # join the open batch: one masked step serves this request too;
+            # a costlier member (backfill ring) stretches the completion
+            self._count += 1
+            stretched = max(self._done_t, self._start_t + svc)
+            self.busy_s += stretched - self._done_t
+            self._done_t = stretched
+            self._free = max(self._free, self._done_t)
+            return self._done_t
+        # open a new batch: wait out the accumulation window, then serve
+        self.batches += 1
+        self._count = 1
+        self._close_t = ready_t + self.batch_window_s
+        self._start_t = max(self._close_t, self._free)
+        self._done_t = self._start_t + svc
+        self._free = self._done_t
+        self.busy_s += svc
+        return self._done_t
 
 
 # ---------------------------------------------------------------------------
@@ -235,6 +318,15 @@ class CloudChannel:
         del slot, now
         self.stats.bytes_up += nbytes
 
+    def reset(self) -> None:
+        """Forget virtual-time state between ``generate()`` runs.
+
+        A reused channel would otherwise inherit the previous run's link /
+        service bookkeeping (virtual times far beyond the new run's clock)
+        and skew the second run's latency trace.  Cumulative counters
+        (``stats``) survive; any stale in-flight request is dropped."""
+        self._inflight.clear()
+
     # -- latency model ------------------------------------------------------
     def _latency(self, slot: int, now: float, nbytes_up: int,
                  nbytes_down: int) -> float:
@@ -254,32 +346,36 @@ class AsyncSimChannel(CloudChannel):
     """Virtual-time network channel priced by ``netsim.NetworkParams``.
 
     Each engine slot owns its WiFi-class link (paper §5: one link per edge
-    client); the cloud service point is a FIFO shared by every request —
+    client); the cloud is a ``CloudServicePoint`` shared by every request —
     exactly the accounting ``netsim.simulate`` uses, so the simulator and
-    the live engine price the same trace identically.
+    the live engine price the same trace identically.  Passing one
+    ``service`` instance to several channels models N edge clients sharing
+    one cloud server: their requests contend in (and, with batching knobs,
+    coalesce at) the same queue.
 
       arrival = cloud_done + rtt/2 + nbytes_down / down_bw
-      cloud_done = max(uplink_arrival, cloud_free) + service_s
+      cloud_done = service.service(uplink_arrival)
       uplink_arrival = max(now, uplink_free[slot]) + nbytes_up/up_bw + rtt/2
 
     ``net`` is duck-typed: anything with up_bw / down_bw / rtt fields
     (``netsim.NetworkParams``) works."""
 
     def __init__(self, net: Any, *, service_s: float = 0.0,
-                 deadline_s: float = math.inf):
+                 deadline_s: float = math.inf,
+                 service: Optional[CloudServicePoint] = None):
         super().__init__(deadline_s=deadline_s)
         self.net = net
-        self.service_s = float(service_s)
+        self._own_service = service is None
+        self.service = (CloudServicePoint(service_s) if service is None
+                        else service)
         self._uplink_free: Dict[int, float] = {}
-        self._cloud_free = 0.0
 
     def _latency(self, slot: int, now: float, nbytes_up: int,
                  nbytes_down: int) -> float:
         link_free = max(now, self._uplink_free.get(slot, 0.0))
         up_arr = link_free + nbytes_up / self.net.up_bw + self.net.rtt / 2
         self._uplink_free[slot] = link_free + nbytes_up / self.net.up_bw
-        cloud_done = max(up_arr, self._cloud_free) + self.service_s
-        self._cloud_free = cloud_done
+        cloud_done = self.service.service(up_arr)
         arrival = cloud_done + self.net.rtt / 2 + nbytes_down / self.net.down_bw
         return arrival - now
 
@@ -290,6 +386,14 @@ class AsyncSimChannel(CloudChannel):
         # costs link time, it just overlaps edge compute)
         link_free = max(now, self._uplink_free.get(slot, 0.0))
         self._uplink_free[slot] = link_free + nbytes / self.net.up_bw
+
+    def reset(self) -> None:
+        super().reset()
+        self._uplink_free.clear()
+        # a shared service point is coordinated by the multi-engine driver
+        # (one reset per run, not one per channel)
+        if self._own_service:
+            self.service.reset()
 
 
 class ScriptedChannel(CloudChannel):
@@ -309,3 +413,7 @@ class ScriptedChannel(CloudChannel):
         lat = float(self.latencies[self._i % len(self.latencies)])
         self._i += 1
         return lat
+
+    def reset(self) -> None:
+        super().reset()
+        self._i = 0          # a reused channel replays the trace from the top

@@ -6,6 +6,12 @@
 ``--channel sim`` prices every cloud request with WiFi-class network
 parameters in virtual time (the engine overlaps edge decode with in-flight
 replies); ``--deadline`` arms the latency-aware early exit.
+
+``--cloud-batch`` switches to the multi-client topology (paper §5): each
+client is its own single-slot engine and the shared ``CloudBatcher``
+coalesces their concurrent cloud requests into one masked cloud step over
+a pooled cloud cache; with ``--channel sim`` the engines' channels share
+one batching ``CloudServicePoint`` (``--batch-window``).
 """
 from __future__ import annotations
 
@@ -17,7 +23,7 @@ import jax
 from repro.configs.registry import get_config, get_smoke_config
 from repro.core.collm import CollmConfig
 from repro.core.netsim import NetworkParams
-from repro.core.transport import AsyncSimChannel
+from repro.core.transport import AsyncSimChannel, CloudServicePoint
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.registry import build_model
 from repro.serving.engine import ServingSystem, token_agreement
@@ -48,6 +54,15 @@ def main():
     ap.add_argument("--speculative", action="store_true",
                     help="commit provisional edge tokens while cloud "
                          "replies are in flight")
+    ap.add_argument("--cloud-batch", action="store_true",
+                    help="multi-client mode: one engine per client, cloud "
+                         "requests coalesced by the shared CloudBatcher")
+    ap.add_argument("--batch-window", type=float, default=0.004,
+                    help="cloud service accumulation window (virtual s, "
+                         "--cloud-batch with --channel sim)")
+    ap.add_argument("--service-s", type=float, default=0.008,
+                    help="virtual cost of one cloud service step "
+                         "(--channel sim)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -62,15 +77,33 @@ def main():
     system = ServingSystem(model, params, CollmConfig(
         theta=args.theta, wire_format=args.wire, backfill=args.backfill,
         speculative=args.speculative))
-    gen_kw = {}
-    if args.channel == "sim":
-        gen_kw = {"channel": AsyncSimChannel(NetworkParams(),
-                                             deadline_s=args.deadline),
-                  "tick_time_s": args.tick_time}
-    r = system.generate(prompts, args.max_new, mode=args.mode, **gen_kw)
+    if args.cloud_batch:
+        gen_kw = {}
+        if args.channel == "sim":
+            # a single client has nobody to coalesce with: plain FIFO
+            svc = CloudServicePoint(
+                args.service_s,
+                batch_window_s=args.batch_window if args.clients > 1 else 0.0,
+                max_batch=args.clients)
+            gen_kw = {"channels": [AsyncSimChannel(NetworkParams(),
+                                                   deadline_s=args.deadline,
+                                                   service=svc)
+                                   for _ in range(args.clients)],
+                      "tick_time_s": args.tick_time}
+        r = system.generate_multi(prompts, args.max_new, mode=args.mode,
+                                  cloud_batch=True, **gen_kw)
+        if "batcher" in r:
+            print(f"cloud batcher: {r['batcher']}")
+    else:
+        gen_kw = {}
+        if args.channel == "sim":
+            gen_kw = {"channel": AsyncSimChannel(NetworkParams(),
+                                                 deadline_s=args.deadline),
+                      "tick_time_s": args.tick_time}
+        r = system.generate(prompts, args.max_new, mode=args.mode, **gen_kw)
     st = r["stats"]
     print(f"mode={args.mode} theta={args.theta} wire={args.wire} "
-          f"channel={args.channel}")
+          f"channel={args.channel} cloud_batch={args.cloud_batch}")
     print(f"tokens={st.tokens} exits@l1={st.exits_l1} exits@l2={st.exits_l2} "
           f"cloud_requests={st.cloud_requests} "
           f"request_rate={st.request_rate:.2%}")

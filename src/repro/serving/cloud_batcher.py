@@ -1,0 +1,396 @@
+"""Cloud-side continuous batching across engines (paper §5, Fig 4).
+
+The paper's central experiment is N edge clients sharing ONE cloud
+server.  Up to PR 3 the cloud side still executed one cloud step per
+client request — the shared-FIFO saturation knee existed only inside the
+``netsim`` simulator.  The **CloudBatcher** makes it real: it is the cloud
+service point's *compute* half.
+
+  * every co-inference client stream owns one row of a pooled,
+    batch-major cloud KV cache (the ``ContentManager`` maps
+    ``device_id -> cloud slot``; under ``kv_layout="paged"`` the rows
+    share a ``PagePool`` exactly like the edge engine's);
+  * edge engines submit single-token cloud requests (the uploaded l_ee1
+    packet is popped from the ContentManager at submit time, preserving
+    the release/backfill semantics of the per-engine path);
+  * pending requests from *any* engine are coalesced into waves — at most
+    one request per cloud slot, up to ``max_batch`` rows — and each wave
+    is ONE masked ``cloud_step_masked`` (or ``ring_cloud_steps`` in
+    backfill mode) over the pooled cache;
+  * each request's still-on-device logits fan back out through the
+    requester's own ``CloudChannel``; arrival times are priced by the
+    channels' shared ``transport.CloudServicePoint`` (the timing half),
+    so per-client latencies stay correct.
+
+Flushes are lazy: requests queue until an engine materializes a reply
+(the reply payload carries a ``flush`` hook) or ``flush()`` is called.
+Under the multi-engine driver this means one lockstep round of N engines
+lands N clients' requests in one wave — one masked cloud step for N edge
+clients.
+
+This module must not import ``repro.serving.engine`` (the engine imports
+it); the pooled-cache scatter helpers live here and the engine reuses
+them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.collm import CoLLM
+from repro.core.content_manager import ContentManager
+from repro.core.paging import PagePool, pages_needed
+from repro.models.attention import paged_reset_pages, paged_scatter_prefill
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# pooled-cache helpers (shared with the edge engine)
+# ---------------------------------------------------------------------------
+def _bucket(n: int, floor: int = 8) -> int:
+    """Next power-of-two length bucket >= n (bounds prefill recompiles)."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def _put_row(f: jax.Array, r: jax.Array, j) -> jax.Array:
+    """Insert one cache row into a pooled leaf; the batch axis is located
+    by shape mismatch (stacked segments carry batch at axis 1, shared
+    segments at axis 0)."""
+    if f.shape == r.shape:                          # pool of size 1
+        return r.astype(f.dtype)
+    axis = next(i for i, (a, b) in enumerate(zip(f.shape, r.shape))
+                if a != b)
+    return jax.lax.dynamic_update_slice_in_dim(f, r.astype(f.dtype), j, axis)
+
+
+def _scatter_row(full: Pytree, row: Pytree, j) -> Pytree:
+    """Insert a single-row cache pytree into a batched pool at row j."""
+    return jax.tree.map(lambda f, r: _put_row(f, r, j), full, row)
+
+
+def _scatter_row_paged(full: Pytree, row: Pytree, j,
+                       pages: jax.Array) -> Pytree:
+    """Paged admission scatter: self-attention K/V of the prefilled row is
+    written into its allocated physical pages (``pages``: one id per
+    logical prompt page, -1 entries redirect to the trash page); every
+    other cache leaf (cross-attn, recurrent state) is a dense per-row
+    scatter at row j exactly like the dense layout."""
+    def go(f: Pytree, r: Pytree) -> Pytree:
+        if isinstance(f, dict):
+            if "kp" in f:
+                if f["kp"].ndim == 5:       # stacked: (L, P, ps, KV, d)
+                    return jax.vmap(paged_scatter_prefill,
+                                    in_axes=(0, 0, None))(f, r, pages)
+                return paged_scatter_prefill(f, r, pages)
+            return {k: go(f[k], r[k]) for k in f}
+        return _put_row(f, r, j)
+    return {si: go(full[si], row[si]) for si in full}
+
+
+def _reset_pages_tree(caches: Pytree, pages: jax.Array) -> Pytree:
+    """Invalidate freed physical pages across every paged cache node, so a
+    page returned to the free list never leaks a retired stream's K/V."""
+    def go(c: Pytree) -> Pytree:
+        if isinstance(c, dict):
+            if "kp" in c:
+                if c["kp"].ndim == 5:
+                    return jax.vmap(paged_reset_pages,
+                                    in_axes=(0, None))(c, pages)
+                return paged_reset_pages(c, pages)
+            return {k: go(v) for k, v in c.items()}
+        return c
+    return {si: go(c) for si, c in caches.items()}
+
+
+# one jitted wrapper per process, shared by every scheduler and batcher —
+# schedulers are spawned per client in multi-engine mode and must not each
+# re-trace the scatter/invalidate graphs
+SCATTER = jax.jit(_scatter_row)
+SCATTER_PAGED = jax.jit(_scatter_row_paged)
+RESET_PAGES = jax.jit(_reset_pages_tree)
+
+
+def _jit(collm: CoLLM, name: str):
+    """Per-CoLLM memoized ``jax.jit`` of a bound step method: every
+    scheduler/batcher sharing one CoLLM (the multi-engine mode spawns one
+    scheduler per client) reuses one traced wrapper instead of re-tracing
+    per engine."""
+    cache = getattr(collm, "_jit_cache", None)
+    if cache is None:
+        cache = collm._jit_cache = {}
+    if name not in cache:
+        cache[name] = jax.jit(getattr(collm, name))
+    return cache[name]
+
+
+# ---------------------------------------------------------------------------
+# the batcher
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Entry:
+    """One queued cloud request awaiting a batched step."""
+    device_id: str
+    slot: int                   # cloud pool row
+    pos: int
+    packets: list               # [(pos, StatePacket), ...]; len > 1 = backfill
+    group: dict                 # reply payload shared with the channel
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    requests: int = 0
+    steps: int = 0              # masked batched cloud calls executed
+    rows: int = 0               # summed rows served by those calls
+    cancelled: int = 0
+    prefills: int = 0
+    # host seconds spent in batched wave compute.  Prefill time is NOT
+    # included: the admitting engine times admit() and charges it to the
+    # admitting stream's GenStats, so summing the two never double-counts.
+    cloud_time: float = 0.0
+
+    @property
+    def mean_batch(self) -> float:
+        return self.rows / self.steps if self.steps else 0.0
+
+    def as_row(self) -> Dict[str, float]:
+        return {"requests": self.requests, "steps": self.steps,
+                "mean_batch": round(self.mean_batch, 2),
+                "cancelled": self.cancelled, "prefills": self.prefills,
+                "cloud_time_s": round(self.cloud_time, 4)}
+
+
+class CloudBatcher:
+    """One cloud partition serving N client streams out of a pooled,
+    batch-major KV cache — the compute half of the shared cloud service
+    point (docs/async_transport.md §cloud service point)."""
+
+    def __init__(self, collm: CoLLM, params: Pytree, cm: ContentManager,
+                 num_slots: int, max_seq: int, *,
+                 max_batch: Optional[int] = None,
+                 max_ctx: Optional[int] = None,
+                 num_pages: Optional[int] = None):
+        self.collm = collm
+        self.params = params
+        self.cm = cm
+        self.B = num_slots
+        self.max_seq = max_seq
+        self.max_batch = max_batch or num_slots
+        cm.init_cloud_slots(num_slots)
+
+        self.layout = collm.ccfg.kv_layout
+        self.pool: Optional[PagePool] = None
+        self._tbl_device: Optional[jax.Array] = None
+        if self.layout == "paged":
+            ps = collm.ccfg.page_size
+            self.max_ctx = max_ctx or max_seq
+            n_pages = num_pages or num_slots * pages_needed(self.max_ctx, ps)
+            self.pool = PagePool(n_pages, ps, num_slots,
+                                 pages_needed(self.max_ctx, ps))
+            row_seq = _bucket(self.max_ctx)
+            self.caches = collm.init_cloud_cache_paged(
+                num_slots, self.pool.num_pages, ps)
+        else:
+            self.max_ctx = max_seq
+            row_seq = max_seq
+            self.caches = collm.init_cloud_cache(num_slots, max_seq)
+        self._row_seq = row_seq
+        self._row0 = collm.init_cloud_cache(1, row_seq)
+
+        self._cloud_masked = _jit(collm, "cloud_step_masked")
+        self._ring_cloud = _jit(collm, "ring_cloud_steps")
+        self._cloud_prefill = _jit(collm, "cloud_prefill_padded")
+        self._invalidate_rows = _jit(collm, "invalidate_rows_after")
+        self._scatter = SCATTER
+        self._scatter_paged = SCATTER_PAGED
+        self._reset_pages = RESET_PAGES
+
+        self._pending: List[_Entry] = []
+        self.stats = BatcherStats()
+
+    # -- capacity / lifecycle ----------------------------------------------
+    def can_admit(self, budget_tokens: int) -> bool:
+        """One more stream of ``prompt + max_new`` tokens, right now?"""
+        if self.cm.cloud_slots_free() <= 0:
+            return False
+        if self.pool is not None:
+            if pages_needed(budget_tokens, self.pool.page_size) \
+                    > self.pool.num_pages:
+                raise ValueError(
+                    f"stream of {budget_tokens} tokens needs more pages "
+                    f"than the cloud pool has ({self.pool.num_pages})")
+            return self.pool.can_admit(budget_tokens)
+        return True
+
+    def admit(self, device_id: str, h1_seq: jax.Array, true_len: int,
+              budget_tokens: int) -> jax.Array:
+        """Prefill the cloud partition over the uploaded (padded) prompt
+        hidden sequence into the client's pool row; returns the logits at
+        the true last position (the cloud answer for the first token),
+        still on device."""
+        slot = self.cm.assign_cloud_slot(device_id)
+        pages = None
+        if self.pool is not None:
+            self.pool.reserve(slot, budget_tokens)
+            n_prompt = pages_needed(true_len, self.pool.page_size)
+            for lp in range(n_prompt):
+                self.pool.alloc(slot, lp)
+            pad = h1_seq.shape[1]
+            pages = np.full((pages_needed(pad, self.pool.page_size),),
+                            -1, np.int32)
+            pages[:n_prompt] = self.pool.block_table[slot, :n_prompt]
+            self._tbl_device = None
+        logits, row = self._cloud_prefill(self.params, h1_seq, true_len,
+                                          self._row0)
+        if pages is None:
+            self.caches = self._scatter(self.caches, row, slot)
+        else:
+            self.caches = self._scatter_paged(self.caches, row, slot,
+                                              jnp.asarray(pages))
+        self.stats.prefills += 1
+        return logits
+
+    def release(self, device_id: str) -> None:
+        """Stream finished: cancel its queued requests, free its pages
+        (invalidated on device), return its pool row."""
+        self.cancel(device_id, 0)
+        slot = self.cm.release_cloud_slot(device_id)
+        if slot is None or self.pool is None:
+            return
+        freed = self.pool.free_slot(slot)
+        self._tbl_device = None
+        if not freed:
+            return
+        ids = np.full((self.pool.max_logical,), -1, np.int32)
+        ids[:len(freed)] = freed
+        self.caches = self._reset_pages(self.caches, jnp.asarray(ids))
+
+    # -- request path -------------------------------------------------------
+    def submit(self, device_id: str, pos: int, *, backfill: bool = False):
+        """Queue one single-token cloud request; returns the reply payload
+        ``(group, row)`` the engine hands to its channel.  The uploaded
+        packet(s) are popped from the ContentManager NOW (submit order =
+        per-client pos order), so a later flush computes exactly what a
+        per-engine call would have."""
+        slot = self.cm.cloud_slot(device_id)
+        if slot is None:
+            raise KeyError(f"{device_id} has no cloud slot (admit first)")
+        if backfill:
+            packets = self.cm.take_uploads_upto(device_id, pos)
+        else:
+            packets = [(pos, self.cm.take_upload(device_id, pos))]
+        if self.pool is not None:
+            for p, _ in packets:
+                lp = p // self.pool.page_size
+                if self.pool.block_table[slot, lp] == -1:
+                    self.pool.alloc(slot, lp)
+                    self._tbl_device = None
+        group = {"logits": None, "np": None, "flush": self.flush}
+        self._pending.append(_Entry(device_id=device_id, slot=slot, pos=pos,
+                                    packets=packets, group=group))
+        self.stats.requests += 1
+        return group, slot
+
+    def cancel(self, device_id: str, min_pos: int) -> int:
+        """Drop queued (not yet computed) requests of one client at
+        positions >= ``min_pos`` — a speculative rewind discarded them, or
+        the stream retired.  Their replies will late-drop in the engine;
+        computing them after an ``invalidate`` would resurrect stale KV."""
+        keep = [e for e in self._pending
+                if e.device_id != device_id or e.pos < min_pos]
+        dropped = len(self._pending) - len(keep)
+        self._pending = keep
+        self.stats.cancelled += dropped
+        return dropped
+
+    def invalidate(self, device_id: str, cut_pos: int) -> None:
+        """Speculative rewind support: invalidate the client's cloud KV at
+        positions >= ``cut_pos`` (see ``CoLLM.invalidate_rows_after``)."""
+        slot = self.cm.cloud_slot(device_id)
+        if slot is None:
+            return
+        cut = np.full((self.B,), np.iinfo(np.int32).max, np.int32)
+        cut[slot] = cut_pos
+        self.caches = self._invalidate_rows(self.caches, jnp.asarray(cut),
+                                            self._block_tbl())
+
+    def flush(self) -> None:
+        """Drain the queue in waves: each wave serves at most one request
+        per cloud slot (and at most ``max_batch`` rows) with ONE masked
+        batched cloud step; every entry's reply group gets the wave's
+        still-on-device logits."""
+        while self._pending:
+            wave, rest, seen = [], [], set()
+            for e in self._pending:
+                if e.slot in seen or len(wave) >= self.max_batch:
+                    rest.append(e)
+                else:
+                    seen.add(e.slot)
+                    wave.append(e)
+            self._pending = rest
+            self._compute(wave)
+
+    # -- internals ----------------------------------------------------------
+    def _block_tbl(self) -> Optional[jax.Array]:
+        if self.pool is None:
+            return None
+        if self._tbl_device is None:
+            self._tbl_device = jnp.asarray(self.pool.block_table)
+        return self._tbl_device
+
+    def _compute(self, wave: List[_Entry]) -> None:
+        t0 = time.perf_counter()
+        backfill = any(len(e.packets) > 1 for e in wave)
+        mask = np.zeros((self.B,), bool)
+        for e in wave:
+            mask[e.slot] = True
+        first = wave[0].packets[0][1]
+        keys = first.hidden.keys()
+        if backfill:
+            depth = _bucket(max(len(e.packets) for e in wave), floor=1)
+            ring = {k: np.zeros(
+                (depth, self.B) + np.shape(first.hidden[k])[1:],
+                np.asarray(first.hidden[k]).dtype) for k in keys}
+            ring_pos = np.zeros((depth, self.B), np.int32)
+            valid = np.zeros((depth, self.B), bool)
+            for e in wave:
+                for i, (p, pkt) in enumerate(e.packets):
+                    for k in keys:
+                        ring[k][i, e.slot] = np.asarray(pkt.hidden[k])[0]
+                    ring_pos[i, e.slot] = p
+                    valid[i, e.slot] = True
+            logits, self.caches = self._ring_cloud(
+                self.params, {k: jnp.asarray(v) for k, v in ring.items()},
+                jnp.asarray(ring_pos), jnp.asarray(valid), self.caches,
+                self._block_tbl())
+        else:
+            dense = {k: np.zeros((self.B,) + np.shape(first.hidden[k])[1:],
+                                 np.asarray(first.hidden[k]).dtype)
+                     for k in keys}
+            pos = np.zeros((self.B,), np.int32)
+            for e in wave:
+                (p, pkt), = e.packets
+                for k in keys:
+                    dense[k][e.slot] = np.asarray(pkt.hidden[k])[0]
+                pos[e.slot] = p
+            logits, self.caches = self._cloud_masked(
+                self.params, {k: jnp.asarray(v) for k, v in dense.items()},
+                self.caches, jnp.asarray(pos), jnp.asarray(mask),
+                self._block_tbl())
+        for e in wave:
+            e.group["logits"] = logits
+        self.stats.steps += 1
+        self.stats.rows += len(wave)
+        self.stats.cloud_time += time.perf_counter() - t0
+
+    def kv_cache_bytes(self) -> int:
+        return sum(l.size * l.dtype.itemsize
+                   for l in jax.tree.leaves(self.caches))

@@ -66,11 +66,13 @@ from repro.core.collm import CoLLM, CollmConfig
 from repro.core.content_manager import ContentManager
 from repro.core.exits import select_exit_logits
 from repro.core.paging import PagePool, pages_needed
-from repro.core.transport import (TOKEN_BYTES, CloudChannel, StatePacket,
-                                  SyncChannel, hidden_wire_bytes)
-from repro.models.attention import paged_reset_pages, paged_scatter_prefill
+from repro.core.transport import (TOKEN_BYTES, ChannelStats, CloudChannel,
+                                  StatePacket, SyncChannel,
+                                  hidden_wire_bytes)
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
+from repro.serving.cloud_batcher import (RESET_PAGES, SCATTER, SCATTER_PAGED,
+                                         CloudBatcher, _bucket, _jit)
 
 Pytree = Any
 
@@ -155,7 +157,17 @@ class CloudServer:
                 seq: int = 0) -> int:
         """Dispatch one single-token cloud inference (paper §4.2) into
         ``channel``; returns the in-flight handle.  The reply payload is
-        the cloud logits, still on device."""
+        the cloud logits, still on device.
+
+        Wire accounting: the hidden-state packets this request consumes
+        (one, or the whole pending ring under ``backfill``) already
+        crossed the wire when they were uploaded — they are billed once,
+        at upload time, via ``channel.notify_upload``.  The request itself
+        is a token-sized control message (``nbytes_up=TOKEN_BYTES``)
+        whether it consumes one upload or a backfill ring of ten; billing
+        the consumed uploads here again would double-count them (and
+        billing them *only* here would skip the ones ``backfill`` drains).
+        ``tests/test_cloud_batcher.py`` asserts this parity with netsim."""
         caches = self.cm.get_cache(device_id)
         if backfill:
             pending = self.cm.take_uploads_upto(device_id, pos)
@@ -252,64 +264,6 @@ class _Slot:
     standalone: bool = False     # latency fallback engaged (stops uploading)
 
 
-def _bucket(n: int, floor: int = 8) -> int:
-    """Next power-of-two length bucket >= n (bounds prefill recompiles)."""
-    b = floor
-    while b < n:
-        b *= 2
-    return b
-
-
-def _put_row(f: jax.Array, r: jax.Array, j) -> jax.Array:
-    """Insert one cache row into a pooled leaf; the batch axis is located
-    by shape mismatch (stacked segments carry batch at axis 1, shared
-    segments at axis 0)."""
-    if f.shape == r.shape:                          # pool of size 1
-        return r.astype(f.dtype)
-    axis = next(i for i, (a, b) in enumerate(zip(f.shape, r.shape))
-                if a != b)
-    return jax.lax.dynamic_update_slice_in_dim(f, r.astype(f.dtype), j, axis)
-
-
-def _scatter_row(full: Pytree, row: Pytree, j) -> Pytree:
-    """Insert a single-row cache pytree into a batched pool at row j."""
-    return jax.tree.map(lambda f, r: _put_row(f, r, j), full, row)
-
-
-def _scatter_row_paged(full: Pytree, row: Pytree, j,
-                       pages: jax.Array) -> Pytree:
-    """Paged admission scatter: self-attention K/V of the prefilled row is
-    written into its allocated physical pages (``pages``: one id per
-    logical prompt page, -1 entries redirect to the trash page); every
-    other cache leaf (cross-attn, recurrent state) is a dense per-row
-    scatter at row j exactly like the dense layout."""
-    def go(f: Pytree, r: Pytree) -> Pytree:
-        if isinstance(f, dict):
-            if "kp" in f:
-                if f["kp"].ndim == 5:       # stacked: (L, P, ps, KV, d)
-                    return jax.vmap(paged_scatter_prefill,
-                                    in_axes=(0, 0, None))(f, r, pages)
-                return paged_scatter_prefill(f, r, pages)
-            return {k: go(f[k], r[k]) for k in f}
-        return _put_row(f, r, j)
-    return {si: go(full[si], row[si]) for si in full}
-
-
-def _reset_pages_tree(caches: Pytree, pages: jax.Array) -> Pytree:
-    """Invalidate freed physical pages across every paged cache node, so a
-    page returned to the free list never leaks a retired stream's K/V."""
-    def go(c: Pytree) -> Pytree:
-        if isinstance(c, dict):
-            if "kp" in c:
-                if c["kp"].ndim == 5:
-                    return jax.vmap(paged_reset_pages,
-                                    in_axes=(0, None))(c, pages)
-                return paged_reset_pages(c, pages)
-            return {k: go(v) for k, v in c.items()}
-        return c
-    return {si: go(c) for si, c in caches.items()}
-
-
 class BatchScheduler:
     """Continuous-batching multi-slot decode engine.
 
@@ -360,9 +314,15 @@ class BatchScheduler:
                  num_pages: Optional[int] = None,
                  channel: Optional[CloudChannel] = None,
                  tick_time_s: float = 0.0, overlap: bool = True,
-                 fallback_after: int = 0):
+                 fallback_after: int = 0,
+                 cloud_batcher: Optional[CloudBatcher] = None):
         if mode not in ("collm", "standalone", "cloud"):
             raise ValueError(mode)
+        # cloud compute delegated to a shared CloudBatcher (multi-engine
+        # mode): this engine keeps NO cloud caches of its own — below-θ
+        # rows are submitted to the batcher, which coalesces them with
+        # other engines' requests into one masked cloud step
+        self._batcher = cloud_batcher if mode == "collm" else None
         self.collm = collm
         self.model = collm.model
         self.ccfg = collm.ccfg
@@ -430,23 +390,23 @@ class BatchScheduler:
             self.edge_caches = self._init_pool_cache(
                 collm.init_edge_cache, collm.init_edge_cache_paged)
             self._edge_row0 = collm.init_edge_cache(1, row_seq)
-            if mode == "collm":
+            if mode == "collm" and self._batcher is None:
                 self.cloud_caches = self._init_pool_cache(
                     collm.init_cloud_cache, collm.init_cloud_cache_paged)
                 self._cloud_row0 = collm.init_cloud_cache(1, row_seq)
 
-        self._edge_step = jax.jit(collm.edge_step)
-        self._edge_masked = jax.jit(collm.edge_step_masked)
-        self._full_step = jax.jit(collm.full_step)
-        self._cloud_masked = jax.jit(collm.cloud_step_masked)
-        self._invalidate_rows = jax.jit(collm.invalidate_rows_after)
-        self._ring_cloud = jax.jit(collm.ring_cloud_steps)
-        self._scatter = jax.jit(_scatter_row)
-        self._scatter_paged = jax.jit(_scatter_row_paged)
-        self._reset_pages = jax.jit(_reset_pages_tree)
-        self._edge_prefill = jax.jit(collm.edge_prefill_padded)
-        self._cloud_prefill = jax.jit(collm.cloud_prefill_padded)
-        self._full_prefill = jax.jit(collm.full_prefill_padded)
+        self._edge_step = _jit(collm, "edge_step")
+        self._edge_masked = _jit(collm, "edge_step_masked")
+        self._full_step = _jit(collm, "full_step")
+        self._cloud_masked = _jit(collm, "cloud_step_masked")
+        self._invalidate_rows = _jit(collm, "invalidate_rows_after")
+        self._ring_cloud = _jit(collm, "ring_cloud_steps")
+        self._scatter = SCATTER
+        self._scatter_paged = SCATTER_PAGED
+        self._reset_pages = RESET_PAGES
+        self._edge_prefill = _jit(collm, "edge_prefill_padded")
+        self._cloud_prefill = _jit(collm, "cloud_prefill_padded")
+        self._full_prefill = _jit(collm, "full_prefill_padded")
         # recurrent segments can't absorb right-padding (their state would
         # advance through pad tokens) -> exact-length prefill for them
         self._pad_ok = self.model.attention_only()
@@ -495,6 +455,9 @@ class BatchScheduler:
             raise ValueError(
                 f"request {req.device_id}: prompt {p_len} + max_new "
                 f"{req.max_new} exceeds max context {self.max_ctx}")
+        if self._batcher is not None \
+                and not self._batcher.can_admit(p_len + req.max_new):
+            return False        # shared cloud pool full: wait for a release
         if self.pool is None:
             return True
         need = pages_needed(p_len + req.max_new, self.pool.page_size)
@@ -567,10 +530,15 @@ class BatchScheduler:
                 prefill_logits = None
                 if self.mode == "collm":
                     t0 = time.perf_counter()
-                    logits, crow = self._cloud_prefill(
-                        self.params, h1_seq, p_len, self._cloud_row0)
-                    self.cloud_caches = self._scatter_admit(
-                        self.cloud_caches, crow, slot, pages)
+                    if self._batcher is not None:
+                        logits = self._batcher.admit(
+                            req.device_id, h1_seq, p_len,
+                            p_len + req.max_new)
+                    else:
+                        logits, crow = self._cloud_prefill(
+                            self.params, h1_seq, p_len, self._cloud_row0)
+                        self.cloud_caches = self._scatter_admit(
+                            self.cloud_caches, crow, slot, pages)
                     prefill_logits = np.asarray(logits)[:, 0]
                     st.cloud_time += time.perf_counter() - t0
                     st.upload_bytes += hidden_wire_bytes(
@@ -625,6 +593,9 @@ class BatchScheduler:
         done = done and not slot.pending
         if done:
             if self.mode == "collm":
+                if self._batcher is not None:
+                    # cancels queued requests, frees the cloud pool row
+                    self._batcher.release(req.device_id)
                 self.cm.end_of_sequence(req.device_id)
             slot.active = False
             if self.pool is not None:
@@ -819,14 +790,25 @@ class BatchScheduler:
         device — materialization is deferred to the drain, so jax async
         dispatch overlaps the cloud compute with the next edge pass in
         wall-clock time while the channel prices the flight in virtual
-        time."""
+        time.  With a shared ``CloudBatcher`` the masked call itself is
+        deferred too: requests queue with the batcher so concurrent rows
+        from OTHER engines join the same wave (one masked cloud step for
+        N edge clients)."""
         ccfg = self.ccfg
         mask = np.zeros((self.B,), bool)
         for s in needy:
             mask[s.index] = True
 
         t0 = time.perf_counter()
-        if ccfg.backfill:
+        if self._batcher is not None:
+            # shared cloud: queue per-row requests with the CloudBatcher —
+            # it coalesces them with OTHER engines' concurrent requests
+            # into one masked cloud step over the pooled cloud cache, and
+            # the reply group's flush hook materializes it at the drain
+            payloads = {s.index: self._batcher.submit(
+                s.req.device_id, s.pos, backfill=ccfg.backfill)
+                for s in needy}
+        elif ccfg.backfill:
             rings = self.cm.take_uploads_upto_batch(
                 [(s.req.device_id, s.pos) for s in needy])
             depth = _bucket(max(len(r) for r in rings), floor=1)
@@ -846,6 +828,8 @@ class BatchScheduler:
                 self.params, {k: jnp.asarray(v) for k, v in ring.items()},
                 jnp.asarray(ring_pos), jnp.asarray(valid), self.cloud_caches,
                 self._block_tbl())
+            group = {"logits": logits, "np": None}   # materialized at drain
+            payloads = {s.index: (group, s.index) for s in needy}
         else:
             pkts = self.cm.take_upload_batch(
                 [(s.req.device_id, s.pos) for s in needy])
@@ -860,15 +844,16 @@ class BatchScheduler:
                 self.params, {k: jnp.asarray(v) for k, v in dense.items()},
                 self.cloud_caches, jnp.asarray(pos), jnp.asarray(mask),
                 self._block_tbl())
+            group = {"logits": logits, "np": None}   # materialized at drain
+            payloads = {s.index: (group, s.index) for s in needy}
 
         dt = (time.perf_counter() - t0) / len(needy)
-        group = {"logits": logits, "np": None}      # materialized at drain
         handles = []
         for s in needy:
             s.stats.cloud_time += dt
             h = self.channel.submit(
                 slot=s.index, seq=s.seq, pos=s.pos,
-                reply=(group, s.index), now=self.vnow,
+                reply=payloads[s.index], now=self.vnow,
                 nbytes_up=TOKEN_BYTES, nbytes_down=TOKEN_BYTES)
             s.pending[h] = _Pending(
                 pos=s.pos, tok_index=len(s.tokens),
@@ -895,6 +880,11 @@ class BatchScheduler:
         and return this row's token."""
         group, row = rep.reply
         if group["np"] is None:
+            if group["logits"] is None:
+                # CloudBatcher reply: the batched cloud step is lazy so
+                # that concurrent engines' requests land in one wave —
+                # first materialization computes it
+                group["flush"]()
             logits = np.asarray(group["logits"])
             if self.sampler == "greedy":
                 group["np"] = np.argmax(logits, axis=-1)
@@ -1037,10 +1027,16 @@ class BatchScheduler:
         for h, p2 in list(s.pending.items()):
             if p2.pos > pend.pos:      # requests of discarded positions
                 del s.pending[h]       # (their replies will late-drop)
-        cut = np.full((self.B,), np.iinfo(np.int32).max, np.int32)
-        cut[s.index] = pend.pos + 1
-        self.cloud_caches = self._invalidate_rows(
-            self.cloud_caches, jnp.asarray(cut), self._block_tbl())
+        if self._batcher is not None:
+            # drop still-queued requests of the discarded positions FIRST
+            # (a later flush would re-write the KV we are invalidating)
+            self._batcher.cancel(s.req.device_id, pend.pos + 1)
+            self._batcher.invalidate(s.req.device_id, pend.pos + 1)
+        else:
+            cut = np.full((self.B,), np.iinfo(np.int32).max, np.int32)
+            cut[s.index] = pend.pos + 1
+            self.cloud_caches = self._invalidate_rows(
+                self.cloud_caches, jnp.asarray(cut), self._block_tbl())
 
     def _emit(self, slot: _Slot, tok: int, event: str) -> None:
         slot.tokens.append(tok)
@@ -1068,6 +1064,9 @@ class BatchScheduler:
         stats: List[Optional[GenStats]] = [None] * len(requests)
         v0 = self.vnow
         self.late_drops = 0
+        # a reused channel must not leak the previous run's link/service
+        # virtual times (or stale in-flight replies) into this run's trace
+        self.channel.reset()
         while queue or any(s.active for s in self.slots):
             admitted = self._admit(queue)
             self._collect(results, stats)     # finished at admission
@@ -1088,6 +1087,61 @@ class BatchScheduler:
         self.late_drops += len(self.channel.poll(math.inf))
         self.last_virtual_time = self.vnow - v0
         return results, stats
+
+
+def run_multi(scheds: Sequence[BatchScheduler],
+              request_lists: Sequence[Sequence[Request]]):
+    """Drive several ``BatchScheduler``s (edge engines) in lockstep rounds
+    against one shared cloud (paper §5: N edge clients, one server).
+
+    Each engine keeps its own virtual clock, channel and edge caches; the
+    cloud side is shared — a ``CloudServicePoint`` (timing) common to the
+    engines' channels and, in cloud-batch mode, a ``CloudBatcher``
+    (compute) that coalesces the round's concurrent requests into one
+    masked cloud step.  Returns (per-engine token lists, per-engine
+    stats, virtual makespan across engines)."""
+    queues = []
+    for reqs in request_lists:
+        for i, r in enumerate(reqs):
+            r.index = i
+        queues.append(collections.deque(reqs))
+    results = [[None] * len(rs) for rs in request_lists]
+    stats = [[None] * len(rs) for rs in request_lists]
+    v0 = [s.vnow for s in scheds]
+    services = {}
+    for s in scheds:
+        s.late_drops = 0
+        s.channel.reset()
+        svc = getattr(s.channel, "service", None)
+        if svc is not None:
+            services[id(svc)] = svc
+    for svc in services.values():
+        svc.reset()      # shared points are reset once per run, not per channel
+
+    def busy(i: int) -> bool:
+        return bool(queues[i]) or any(sl.active for sl in scheds[i].slots)
+
+    while any(busy(i) for i in range(len(scheds))):
+        progressed = False
+        for i, s in enumerate(scheds):
+            if not busy(i):
+                continue
+            progressed |= s._admit(queues[i])
+            s._collect(results[i], stats[i])
+            if any(sl.active for sl in s.slots):
+                s.tick()
+                s._collect(results[i], stats[i])
+                progressed = True
+        if not progressed:
+            raise RuntimeError(
+                "multi-engine scheduler wedged: requests queued but no "
+                "engine can admit or tick (shared cloud slots/pages "
+                "exhausted with nothing running?)")
+    for s, v in zip(scheds, v0):
+        s.late_drops += len(s.channel.poll(math.inf))
+        s.last_virtual_time = s.vnow - v
+    makespan = max(s.last_virtual_time for s in scheds)
+    return results, stats, makespan
 
 
 class ServingSystem:
@@ -1159,16 +1213,101 @@ class ServingSystem:
                 "channel_stats": sched.channel.stats.as_row()}
 
     # ------------------------------------------------------------------
+    def generate_multi(self, prompts: Sequence[np.ndarray], max_new: int,
+                       *, n_engines: Optional[int] = None,
+                       mode: str = "collm", max_seq: Optional[int] = None,
+                       eos_id: Optional[int] = None,
+                       cloud_batch: bool = True,
+                       max_batch: Optional[int] = None,
+                       channels: Optional[Sequence[CloudChannel]] = None,
+                       tick_time_s: float = 0.0, overlap: bool = True,
+                       fallback_after: int = 0) -> Dict[str, Any]:
+        """Multi-client mode (paper §5): each edge client is its own
+        single-slot ``BatchScheduler`` with its own channel and virtual
+        clock; all of them share ONE cloud.
+
+        With ``cloud_batch`` (default) a shared ``CloudBatcher`` serves
+        every client out of a pooled batch-major cloud cache, coalescing
+        concurrent below-θ requests from different engines into one
+        masked cloud step; with ``cloud_batch=False`` each engine computes
+        its own cloud calls (the per-request FIFO cloud the batcher is
+        benchmarked against — same tokens, different virtual makespan).
+
+        ``channels`` optionally provides one ``CloudChannel`` per engine —
+        e.g. ``AsyncSimChannel``s sharing a ``CloudServicePoint`` so their
+        requests contend in (FIFO) or coalesce at (batched) the same
+        virtual cloud queue.  Defaults to a ``SyncChannel`` each, in which
+        case the streams are token-identical to independent
+        ``generate()`` runs.  Returns the usual result dict plus
+        ``n_engines`` and, in cloud-batch mode, the batcher's stats row."""
+        n = n_engines or len(prompts)
+        if channels is not None and len(channels) != n:
+            raise ValueError(f"need one channel per engine "
+                             f"({len(channels)} != {n})")
+        longest = max(len(p) for p in prompts)
+        max_seq = max_seq or (longest + max_new + 8)
+        max_seq = max(max_seq, _bucket(longest))
+        batcher = None
+        if cloud_batch and mode == "collm":
+            batcher = CloudBatcher(self.collm, self.params, self.cloud.cm,
+                                   n, max_seq, max_batch=max_batch)
+        scheds = [BatchScheduler(
+            self.collm, self.params, self.cloud.cm, 1, max_seq, mode=mode,
+            channel=(channels[i] if channels is not None else None),
+            tick_time_s=tick_time_s, overlap=overlap,
+            fallback_after=fallback_after, cloud_batcher=batcher)
+            for i in range(n)]
+        per_engine = [[] for _ in range(n)]
+        assign = [[] for _ in range(n)]
+        for j, p in enumerate(prompts):
+            per_engine[j % n].append(Request(
+                device_id=f"edge-{j}", prompt=np.asarray(p),
+                max_new=max_new, eos_id=eos_id))
+            assign[j % n].append(j)
+        results, stats, makespan = run_multi(scheds, per_engine)
+        tokens: List[Optional[List[int]]] = [None] * len(prompts)
+        flat: List[Optional[GenStats]] = [None] * len(prompts)
+        for e in range(n):
+            for k, j in enumerate(assign[e]):
+                tokens[j] = results[e][k]
+                flat[j] = stats[e][k]
+        ch_agg = ChannelStats()
+        for s in scheds:
+            for f in dataclasses.fields(ChannelStats):
+                setattr(ch_agg, f.name, getattr(ch_agg, f.name)
+                        + getattr(s.channel.stats, f.name))
+        out = {"tokens": tokens, "stats": _aggregate(flat),
+               "per_client": flat, "cm_stats": self.cloud.cm.stats(),
+               "n_engines": n, "virtual_time": makespan,
+               "late_drops": sum(s.late_drops for s in scheds),
+               "channel_stats": ch_agg.as_row()}
+        if batcher is not None:
+            # the batched wave compute runs in the batcher, not in any one
+            # engine's dispatch: fold it into the aggregate so cloud_time
+            # stays comparable with non-batched runs (it cannot be
+            # attributed per client — per_client entries carry only each
+            # stream's own admit/submit time)
+            out["stats"].cloud_time += batcher.stats.cloud_time
+            out["batcher"] = batcher.stats.as_row()
+        return out
+
+    # ------------------------------------------------------------------
     def generate_sequential(self, prompts: Sequence[np.ndarray], max_new: int,
                             mode: str = "collm",
-                            max_seq: Optional[int] = None) -> Dict[str, Any]:
+                            max_seq: Optional[int] = None,
+                            channel: Optional[CloudChannel] = None
+                            ) -> Dict[str, Any]:
         """The seed's per-client loops (batch=1, one Python iteration per
-        token) — reference implementation and throughput baseline."""
+        token) — reference implementation and throughput baseline.
+        ``channel`` optionally shares one cloud channel across the clients
+        (wire-accounting tests read its stats); default: a fresh blocking
+        ``SyncChannel`` per client."""
         max_seq = max_seq or (max(len(p) for p in prompts) + max_new + 8)
         results, stats = [], []
         for i, prompt in enumerate(prompts):
             toks, st = self._generate_one(f"edge-{i}", np.asarray(prompt),
-                                          max_new, mode, max_seq)
+                                          max_new, mode, max_seq,
+                                          channel=channel)
             results.append(toks)
             stats.append(st)
         return {"tokens": results, "stats": _aggregate(stats),
@@ -1176,10 +1315,12 @@ class ServingSystem:
 
     # ------------------------------------------------------------------
     def _generate_one(self, device_id: str, prompt: np.ndarray, max_new: int,
-                      mode: str, max_seq: int):
+                      mode: str, max_seq: int,
+                      channel: Optional[CloudChannel] = None):
         model, collm, params = self.model, self.collm, self.params
         st = GenStats()
-        channel = SyncChannel()      # the one cloud-request path (blocking)
+        if channel is None:
+            channel = SyncChannel()  # the one cloud-request path (blocking)
         batch = {"tokens": jnp.asarray(prompt[None, :])}
 
         if mode == "cloud":
@@ -1250,11 +1391,15 @@ class ServingSystem:
                 toks.append(tok)
                 continue
 
-            # parallel upload (always dispatched at l_ee1)
+            # parallel upload (always dispatched at l_ee1).  The packet
+            # crosses the wire NOW: bill it on the channel once, here —
+            # a later request that consumes it (or a backfill ring of
+            # them) is a token-sized control message only.
             pkt = StatePacket(hidden=out.upload,
                               pos=jnp.asarray(client.pos - 1))
             self.cloud.receive_upload(device_id, client.pos - 1, pkt)
             st.upload_bytes += pkt.nbytes()
+            channel.notify_upload(0, pkt.nbytes(), 0.0)
 
             if bool(out.exited[0]):
                 if confs.get(collm.l_ee1, 0.0) >= collm.ccfg.theta:

@@ -1,0 +1,329 @@
+"""Cross-engine cloud batching + the wire-accounting bugfix sweep.
+
+Covers: the ``CloudServicePoint`` (per-request FIFO vs batched service in
+virtual time), the ``CloudBatcher`` (K clients through one pooled masked
+cloud step emit token-identical streams to K independent runs, all
+collm variants x both KV layouts), the batched-beats-FIFO makespan at
+N>=4 with netsim agreeing on the knee, and regressions for the three
+wire-accounting fixes: per-row ``StatePacket.pos`` billing, backfill
+requests billing consumed uploads exactly once, and channel virtual-time
+reset between runs."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.collm import CollmConfig
+from repro.core.content_manager import ContentManager
+from repro.core.netsim import (CaseTrace, ComputeParams, ModelSplit,
+                               NetworkParams, TokenTrace, simulate)
+from repro.core.transport import (TOKEN_BYTES, AsyncSimChannel,
+                                  CloudServicePoint, ScriptedChannel,
+                                  StatePacket, SyncChannel,
+                                  hidden_wire_bytes, quantize)
+from repro.serving.engine import ServingSystem
+
+WIFI = NetworkParams(up_bw=3.8e6, down_bw=8e6, rtt=0.003)
+
+
+def _prompts(data, lens):
+    return [data.sample_tokens(n) for n in lens]
+
+
+def _independent(model, params, ccfg, prompts, max_new):
+    """Each client decoded alone on a blocking SyncChannel — the reference
+    the multi-client engine must match token-for-token."""
+    sys0 = ServingSystem(model, params, ccfg)
+    return [sys0.generate([p], max_new, mode="collm", num_slots=1)
+            ["tokens"][0] for p in prompts]
+
+
+# ---------------------------------------------------------------------------
+# bugfix 1: StatePacket.nbytes bills pos per row
+# ---------------------------------------------------------------------------
+def test_statepacket_bills_per_row_positions():
+    import jax.numpy as jnp
+    hidden = quantize(jnp.zeros((4, 1, 16), jnp.float32), "float16")
+    base = StatePacket(hidden=hidden).nbytes()
+    # scalar position: one int32 on the wire
+    assert StatePacket(hidden=hidden, pos=jnp.asarray(7)).nbytes() == base + 4
+    assert StatePacket(hidden=hidden, pos=5).nbytes() == base + 4
+    # batched upload: a (B,) per-row position vector bills every entry
+    pos = jnp.arange(4, dtype=jnp.int32)
+    assert StatePacket(hidden=hidden, pos=pos).nbytes() == base + 4 * 4
+
+
+# ---------------------------------------------------------------------------
+# bugfix 2: backfill requests bill consumed uploads exactly once
+# ---------------------------------------------------------------------------
+def test_backfill_request_bills_uploads_once(tiny_trained):
+    """Uploads are billed at upload time (notify_upload); the request that
+    consumes them — one upload, or a whole backfill ring — is a token-sized
+    control message.  Channel-level wire accounting must therefore be
+    exactly: notified upload bytes + TOKEN_BYTES per request, matching how
+    netsim prices the same trace (hidden bytes per upload + TOKEN_BYTES
+    per request)."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompt = data.sample_tokens(9)
+    ch = SyncChannel()
+    sysq = ServingSystem(model, params,
+                         CollmConfig(theta=0.8, backfill=True))
+    r = sysq.generate_sequential([prompt], 10, mode="collm", channel=ch)
+    st = r["stats"]
+    prompt_bytes = hidden_wire_bytes(model.cfg.d_model, "float16",
+                                     seq=len(prompt))
+    # st.upload_bytes = prompt upload + per-token packets; the channel saw
+    # the per-token packets (notified) + TOKEN_BYTES framing per request —
+    # nothing double-billed, nothing the backfill ring consumed for free
+    assert ch.stats.bytes_up == (st.upload_bytes - prompt_bytes
+                                 + TOKEN_BYTES * ch.stats.requests)
+    assert ch.stats.requests > 0
+    # every consumed upload reached the content manager with the same bytes
+    cm_bytes = r["cm_stats"]["edge-0"]["bytes_received"]
+    assert cm_bytes == st.upload_bytes - prompt_bytes
+    # netsim parity: a per-token packet is the hidden payload plus its
+    # int32 position; requests are TOKEN_BYTES in both accountings
+    per_tok = hidden_wire_bytes(model.cfg.d_model, "float16") + 4
+    assert cm_bytes == per_tok * (st.tokens - 1)
+
+
+# ---------------------------------------------------------------------------
+# bugfix 3: channels forget virtual time between runs
+# ---------------------------------------------------------------------------
+def test_async_channel_reset_clears_virtual_state():
+    ch = AsyncSimChannel(WIFI, service_s=0.01)
+    first = ch.arrival_of(ch.submit(slot=0, reply=0, now=0.0, nbytes_up=64))
+    for i in range(20):        # pile up link + service backlog
+        ch.submit(slot=0, reply=i, now=0.0, nbytes_up=10_000)
+    ch.poll(math.inf)
+    ch.reset()
+    again = ch.arrival_of(ch.submit(slot=0, reply=0, now=0.0, nbytes_up=64))
+    assert again == pytest.approx(first)
+    assert ch.in_flight() == 1        # reset dropped nothing live afterwards
+
+
+def test_reused_channel_gives_identical_traces(tiny_trained):
+    """BatchScheduler.run resets the channel: a second generate() through
+    the same AsyncSimChannel must price the identical request trace
+    identically instead of inheriting the first run's virtual backlog."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [9, 10])
+    ch = AsyncSimChannel(WIFI, service_s=0.004)
+    times = []
+    for _ in range(2):
+        r = ServingSystem(model, params, CollmConfig(theta=0.8)).generate(
+            prompts, 8, mode="collm", num_slots=2, channel=ch,
+            tick_time_s=0.01)
+        times.append(r["virtual_time"])
+    assert times[0] == pytest.approx(times[1])
+
+
+# ---------------------------------------------------------------------------
+# CloudServicePoint: FIFO vs batched service
+# ---------------------------------------------------------------------------
+def test_service_point_rejects_window_without_batching():
+    """A window with max_batch=1 would delay every request and coalesce
+    nothing — strictly worse than FIFO, so it must fail loudly."""
+    with pytest.raises(ValueError):
+        CloudServicePoint(0.01, batch_window_s=0.005)
+    with pytest.raises(ValueError):
+        CloudServicePoint(0.01, max_batch=0)
+
+
+def test_service_point_fifo_serializes():
+    svc = CloudServicePoint(0.01)
+    assert svc.service(0.0) == pytest.approx(0.01)
+    assert svc.service(0.0) == pytest.approx(0.02)   # queues behind
+    assert svc.service(0.05) == pytest.approx(0.06)  # idle gap, no batch
+    assert svc.batches == 3 and svc.requests == 3
+    assert svc.busy_s == pytest.approx(0.03)
+
+
+def test_service_point_batches_within_window():
+    svc = CloudServicePoint(0.01, batch_window_s=0.005, max_batch=3)
+    d0 = svc.service(0.0)
+    assert d0 == pytest.approx(0.015)                # window + one service
+    assert svc.service(0.004) == pytest.approx(d0)   # joins, same completion
+    assert svc.service(0.005) == pytest.approx(d0)   # batch full at 3
+    d1 = svc.service(0.005)                          # 4th opens a new batch
+    assert d1 == pytest.approx(max(0.005 + 0.005, d0) + 0.01)
+    assert svc.batches == 2
+    assert svc.busy_s == pytest.approx(0.02)         # one service per batch
+    # a late-window straggler after the window closed opens its own batch
+    assert svc.service(1.0) == pytest.approx(1.015)
+    assert svc.batches == 3
+
+
+def test_service_point_variable_service_extends_batch():
+    svc = CloudServicePoint(0.01, batch_window_s=0.01, max_batch=4)
+    d0 = svc.service(0.0, 0.01)
+    d1 = svc.service(0.001, 0.03)    # costlier member stretches completion
+    assert d1 == pytest.approx(d0 + 0.02)
+    assert svc.busy_s == pytest.approx(0.03)
+
+
+# ---------------------------------------------------------------------------
+# multi-client equivalence: K clients through the CloudBatcher
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize("backfill", [False, True])
+def test_multi_client_matches_independent_runs(tiny_trained, layout,
+                                               backfill):
+    """K clients, each its own engine, served by one CloudBatcher over a
+    pooled batch-major cloud cache: greedy streams must be token-identical
+    to K independent single-client runs (release and backfill semantics,
+    dense and paged cloud KV)."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 11, 9])
+    ccfg = CollmConfig(theta=0.8, kv_layout=layout, backfill=backfill)
+    ref = _independent(model, params, ccfg, prompts, 8)
+    r = ServingSystem(model, params, ccfg).generate_multi(
+        prompts, 8, cloud_batch=True)
+    assert r["tokens"] == ref
+    assert r["batcher"]["requests"] > 0
+    # per-client accounting survived the pooling
+    assert r["stats"].tokens == 8 * len(prompts)
+
+
+@pytest.mark.parametrize("mode", ["standalone", "cloud"])
+def test_multi_client_other_modes(tiny_trained, mode):
+    """standalone/cloud modes never touch the cloud channel: the
+    multi-engine driver must reproduce independent runs without a
+    batcher."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [10, 8])
+    ccfg = CollmConfig(theta=0.8)
+    sys0 = ServingSystem(model, params, ccfg)
+    ref = [sys0.generate([p], 8, mode=mode, num_slots=1)["tokens"][0]
+           for p in prompts]
+    r = ServingSystem(model, params, ccfg).generate_multi(
+        prompts, 8, mode=mode, cloud_batch=True)
+    assert r["tokens"] == ref
+    assert "batcher" not in r
+
+
+def test_more_clients_than_engines_refill(tiny_trained):
+    """5 streams over 2 engines: cloud slots are released at retirement
+    and reassigned to queued streams; every stream matches its
+    independent run."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 9, 10, 8, 11])
+    ccfg = CollmConfig(theta=0.8)
+    ref = _independent(model, params, ccfg, prompts, 6)
+    r = ServingSystem(model, params, ccfg).generate_multi(
+        prompts, 6, n_engines=2, cloud_batch=True)
+    assert r["tokens"] == ref
+
+
+def test_speculative_multi_client_reconciles(tiny_trained):
+    """Speculative decode through the batcher: provisional tokens +
+    rewind-on-mismatch (with queued-request cancellation and pooled-cache
+    invalidation) still converge to the blocking streams."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 10, 9])
+    ref = _independent(model, params, CollmConfig(theta=0.8), prompts, 8)
+    svc = CloudServicePoint(0.004, batch_window_s=0.002, max_batch=3)
+    chans = [AsyncSimChannel(WIFI, service=svc) for _ in prompts]
+    r = ServingSystem(model, params,
+                      CollmConfig(theta=0.8, speculative=True)
+                      ).generate_multi(prompts, 8, cloud_batch=True,
+                                       channels=chans, tick_time_s=0.01)
+    assert r["tokens"] == ref
+    assert r["stats"].stall_s == 0.0
+
+
+def test_deadline_misses_cancel_batcher_entries(tiny_trained):
+    """Replies far slower than the deadline: streams complete on
+    edge-committed tokens, and the retiring streams' queued batcher
+    entries are cancelled instead of computing into freed slots."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [9, 10])
+    chans = [ScriptedChannel([0.5], deadline_s=0.02) for _ in prompts]
+    r = ServingSystem(model, params, CollmConfig(theta=0.8)).generate_multi(
+        prompts, 8, cloud_batch=True, channels=chans, tick_time_s=0.005)
+    assert all(len(t) == 8 for t in r["tokens"])
+    assert r["stats"].deadline_misses > 0
+    b = r["batcher"]
+    # every queued request either computed in a wave or was cancelled
+    assert b["steps"] * 1 <= b["requests"]
+    assert b["cancelled"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the knee: batched cloud beats per-request FIFO at N>=4
+# ---------------------------------------------------------------------------
+def test_batched_cloud_beats_fifo_at_four_clients(tiny_trained):
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    n = 4
+    prompts = _prompts(data, [10] * n)
+    ccfg = CollmConfig(theta=0.8)
+    ref = _independent(model, params, ccfg, prompts, 10)
+    runs = {}
+    for batched in (False, True):
+        svc = CloudServicePoint(
+            0.008, batch_window_s=0.004 if batched else 0.0,
+            max_batch=n if batched else 1)
+        chans = [AsyncSimChannel(WIFI, service=svc) for _ in range(n)]
+        r = ServingSystem(model, params, ccfg).generate_multi(
+            prompts, 10, cloud_batch=batched, channels=chans,
+            tick_time_s=0.01)
+        assert r["tokens"] == ref
+        runs[batched] = (r, svc)
+    r_b, svc_b = runs[True]
+    r_f, svc_f = runs[False]
+    assert r_b["virtual_time"] < r_f["virtual_time"]
+    # the separating quantity: one masked step serves several requests
+    assert r_b["batcher"]["mean_batch"] > 1.0
+    assert svc_b.busy_s < svc_f.busy_s
+
+
+def test_netsim_agrees_on_the_batched_knee():
+    """The simulator prices the cloud through the same CloudServicePoint:
+    enabling the batching knobs must lower both the makespan and the
+    cloud busy time of a saturated N-client ce_collm trace, and the
+    default knobs must keep the historical FIFO accounting."""
+    n, toks = 6, 24
+    cases = [[CaseTrace(prompt_len=12,
+                        tokens=[TokenTrace(0.0, 0.0)] * toks)]
+             for _ in range(n)]      # every token requests the cloud
+    net = NetworkParams()
+    comp = ComputeParams(edge_layer_time=1e-4, cloud_layer_time=1e-3)
+    split = ModelSplit(n_layers=8, l_ee1=2, l_ee2=4, d_model=128)
+    fifo = simulate("ce_collm", cases, net, comp, split, theta=0.8)
+    batched = simulate("ce_collm", cases, net, comp, split, theta=0.8,
+                       cloud_batch_window=0.004, cloud_max_batch=n)
+    assert fifo.cloud_requests == batched.cloud_requests == n * toks
+    assert batched.total_time < fifo.total_time
+    assert batched.cloud_time < fifo.cloud_time
+    # FIFO busy time is the historical per-request sum
+    svc_c = (split.n_layers - split.l_ee1) * comp.cloud_layer_time
+    prefill = (12 * (split.n_layers - split.l_ee1)
+               * comp.cloud_layer_time * comp.prefill_discount)
+    assert fifo.cloud_time == pytest.approx(n * (toks * svc_c + prefill))
+
+
+# ---------------------------------------------------------------------------
+# ContentManager cloud slot pool
+# ---------------------------------------------------------------------------
+def test_cloud_slot_pool_lifecycle():
+    cm = ContentManager()
+    cm.init_cloud_slots(2)
+    a = cm.assign_cloud_slot("a")
+    b = cm.assign_cloud_slot("b")
+    assert {a, b} == {0, 1}
+    assert cm.assign_cloud_slot("a") == a          # idempotent
+    assert cm.cloud_slots_free() == 0
+    with pytest.raises(RuntimeError):
+        cm.assign_cloud_slot("c")
+    assert cm.release_cloud_slot("a") == a
+    assert cm.cloud_slot("a") is None
+    assert cm.assign_cloud_slot("c") == a          # recycled
+    assert cm.release_cloud_slot("nobody") is None
