@@ -71,6 +71,18 @@ class CollmConfig:
     # page slot whose pos marker was never written.
     kv_layout: str = "dense"
     page_size: int = 16               # tokens per KV page (paged layout)
+    # Paged-KV preemption (docs/kv_paging.md §Preemption).  "off" keeps the
+    # conservative worst-case admission check (a stream admitted under
+    # backpressure can always finish, but the pool is sized for worst
+    # cases that rarely materialize).  Otherwise admission is optimistic —
+    # only the prompt's pages need to fit — and a decode-time OutOfPages
+    # preempts a victim stream: its stream state is checkpointed, its
+    # pages freed, and it resumes later by "recompute" (re-prefill the KV
+    # from its token prefix) or "swap" (pages round-trip through a
+    # host-side SwapPool).  Preemption is invisible in output space:
+    # greedy token streams are identical to an un-preempted run.
+    preemption: str = "off"           # "off" | "recompute" | "swap"
+    preempt_policy: str = "youngest"  # "youngest" | "fewest-pages" | "lru"
 
 
 class EdgeStepOut(NamedTuple):

@@ -118,6 +118,31 @@ class ContentManager:
         c = self._clients.get(device_id)
         return bool(c and pos in c.pending_uploads)
 
+    # -- preemption checkpoint support ---------------------------------------
+    # A preempted stream's pending uploads move into its host-side
+    # checkpoint and come back verbatim at resume.  Neither direction is a
+    # wire event (the packets crossed the wire when first uploaded), so
+    # these bypass the received/consumed/released counters on purpose —
+    # the stats of a preempted run stay comparable to an un-preempted one.
+    def pending_positions(self, device_id: str):
+        c = self._clients.get(device_id)
+        return sorted(c.pending_uploads) if c else []
+
+    def take_all_uploads(self, device_id: str):
+        """Checkpoint: pop every pending upload, oldest first."""
+        c = self._clients.get(device_id)
+        if c is None:
+            return []
+        out = [(p, c.pending_uploads.pop(p))
+               for p in sorted(c.pending_uploads)]
+        return out
+
+    def restore_uploads(self, device_id: str, items) -> None:
+        """Resume: re-insert a checkpoint's pending uploads."""
+        c = self._client(device_id)
+        for pos, packet in items:
+            c.pending_uploads[pos] = packet
+
     # -- per-client cloud cache ----------------------------------------------
     def get_cache(self, device_id: str) -> Optional[Pytree]:
         return self._client(device_id).cache

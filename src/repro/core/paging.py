@@ -17,10 +17,19 @@ The paged layout instead carves KV storage into fixed-size *pages* of
 Physical page 0 is reserved as the **trash page**: rows without a mapping
 (inactive slots, masked cloud rows) have their writes redirected there with
 ``pos = -1``, which keeps the jitted step shape-stable without a cache
-merge.  Admission *reserves* the worst-case page count for a request
-(``ceil((prompt + max_new) / page_size)``) so a stream admitted under
-backpressure can always finish; the lazy physical allocation still means
-short streams touch few pages.
+merge.
+
+Admission is **optimistic**: the pool no longer keeps a worst-case
+reservation ledger — a stream is admitted when its *prompt* pages (plus a
+configurable ``watermark`` of held-back headroom pages) fit the free list,
+and a decode-time ``alloc`` may therefore fail with ``OutOfPages``.  The
+scheduler resolves that by **preempting** a victim stream chosen by
+``select_victim`` (youngest-first / fewest-pages / LRU-arrival), freeing
+its pages, and resuming it later by re-prefill or swap-in (see
+``SwapPool`` and docs/kv_paging.md §Preemption).  Schedulers that want
+the old never-preempt guarantee (``CollmConfig.preemption = "off"``)
+re-derive the conservative worst-case admission check from
+``owned_pages`` — the ledger just no longer lives in the allocator.
 
 This module is pure host-side bookkeeping (numpy block table + Python free
 list); the device-side paged cache layout lives in
@@ -30,15 +39,22 @@ steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Any, Dict, List, Sequence, Tuple
 
 import numpy as np
 
 TRASH_PAGE = 0
 
+PREEMPT_POLICIES = ("youngest", "fewest-pages", "lru")
+
 
 def pages_needed(tokens: int, page_size: int) -> int:
     return -(-tokens // page_size)
+
+
+class OutOfPages(RuntimeError):
+    """``alloc`` found an empty free list — the caller must preempt a
+    victim (or fail) before retrying."""
 
 
 @dataclasses.dataclass
@@ -53,21 +69,27 @@ class PagePool:
 
     ``num_pages`` counts usable pages (the trash page is extra and never
     allocated).  ``max_logical`` bounds the logical context of one slot:
-    ``block_table`` is ``(num_slots, max_logical)`` int32.
+    ``block_table`` is ``(num_slots, max_logical)`` int32.  ``watermark``
+    pages are held back from admission (``can_admit``) so in-flight
+    streams keep some alloc-on-write headroom before the scheduler has to
+    preempt; it never blocks ``alloc`` itself.
     """
 
     def __init__(self, num_pages: int, page_size: int, num_slots: int,
-                 max_logical: int):
+                 max_logical: int, watermark: int = 0):
         if num_pages < 1:
             raise ValueError("PagePool needs at least one usable page")
+        if not 0 <= watermark < num_pages:
+            raise ValueError(
+                f"watermark must be in [0, num_pages): {watermark}")
         self.num_pages = num_pages
         self.page_size = page_size
         self.num_slots = num_slots
         self.max_logical = max_logical
+        self.watermark = watermark
         # physical ids 1..num_pages; 0 is the trash page
         self._free: List[int] = list(range(num_pages, 0, -1))
         self._owned: List[List[int]] = [[] for _ in range(num_slots)]
-        self._reserved = np.zeros((num_slots,), np.int64)
         self.block_table = np.full((num_slots, max_logical), -1, np.int32)
         self.stats = PagePoolStats()
 
@@ -77,42 +99,43 @@ class PagePool:
         return len(self._free)
 
     @property
-    def reserved_pages(self) -> int:
-        return int(self._reserved.sum())
-
-    @property
     def available_pages(self) -> int:
-        """Pages not yet allocated and not promised to an admitted slot."""
-        return self.free_pages - self.reserved_pages
+        """Pages admission may take right now (free minus the watermark
+        held back as decode headroom)."""
+        return self.free_pages - self.watermark
 
     def pages_in_use(self) -> int:
         return self.num_pages - self.free_pages
 
+    def owned_pages(self, slot: int) -> int:
+        """Physical pages currently allocated to one slot."""
+        return len(self._owned[slot])
+
     def can_admit(self, tokens: int) -> bool:
+        """Optimistic admission: do ``tokens`` worth of pages fit the free
+        list right now (watermark respected)?  Callers decide what
+        ``tokens`` means — the prompt for optimistic admission, the full
+        ``prompt + max_new`` worst case for conservative admission."""
         return pages_needed(tokens, self.page_size) <= self.available_pages
 
     # -- slot lifecycle ----------------------------------------------------
-    def reserve(self, slot: int, tokens: int) -> int:
-        """Promise the worst-case page count for a request; returns it."""
-        need = pages_needed(tokens, self.page_size)
-        if need > self.max_logical:
-            raise ValueError(
-                f"request needs {need} pages but a slot maps at most "
-                f"{self.max_logical} (page_size={self.page_size})")
-        if need > self.available_pages:
-            raise RuntimeError(
-                f"out of pages: need {need}, available {self.available_pages}")
-        self._reserved[slot] += need
-        return need
-
     def alloc(self, slot: int, logical: int) -> int:
-        """Map ``block_table[slot, logical]`` to a fresh physical page."""
+        """Map ``block_table[slot, logical]`` to a fresh physical page.
+
+        Raises ``OutOfPages`` when the free list is empty — under
+        optimistic admission this is an expected event the scheduler
+        answers with preemption, not a bookkeeping bug."""
         if self.block_table[slot, logical] != -1:
             return int(self.block_table[slot, logical])
-        if self._reserved[slot] <= 0:
-            raise RuntimeError(f"slot {slot}: allocation beyond reservation")
+        if logical >= self.max_logical:
+            raise ValueError(
+                f"slot {slot}: logical page {logical} beyond max_logical "
+                f"{self.max_logical}")
+        if not self._free:
+            raise OutOfPages(
+                f"slot {slot}: no free pages for logical page {logical} "
+                f"({self.pages_in_use()}/{self.num_pages} in use)")
         page = self._free.pop()
-        self._reserved[slot] -= 1
         self._owned[slot].append(page)
         self.block_table[slot, logical] = page
         self.stats.allocs += 1
@@ -121,12 +144,111 @@ class PagePool:
         return page
 
     def free_slot(self, slot: int) -> List[int]:
-        """Bulk-free a retired slot's pages; returns the freed ids (the
-        engine must invalidate their ``pos`` markers on device)."""
+        """Bulk-free a retired (or preempted) slot's pages; returns the
+        freed ids (the engine must invalidate their ``pos`` markers on
+        device)."""
         freed = self._owned[slot]
         self._free.extend(freed)
         self.stats.frees += len(freed)
         self._owned[slot] = []
-        self._reserved[slot] = 0
         self.block_table[slot, :] = -1
         return freed
+
+
+# ---------------------------------------------------------------------------
+# victim selection (preemption policy)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class VictimCandidate:
+    """One preemptible stream as the policy sees it."""
+    slot: int
+    admit_seq: int               # monotonically increasing admission order
+    owned_pages: int
+
+
+def select_victim(cands: Sequence[VictimCandidate], policy: str) -> int:
+    """Pick the slot to preempt.  Candidates must own at least one page
+    (preempting a page-less slot frees nothing).
+
+      * ``youngest``      — most recently admitted first (vLLM default:
+                            the oldest streams are closest to finishing);
+      * ``fewest-pages``  — smallest checkpoint/restore cost first;
+      * ``lru``           — least-recently-*arrived* (oldest admission)
+                            first: long-running hogs yield to fresh work.
+
+    Ties break on admission order (youngest), then slot index, so victim
+    choice is deterministic."""
+    if policy not in PREEMPT_POLICIES:
+        raise ValueError(f"unknown preemption policy {policy!r} "
+                         f"(choose from {PREEMPT_POLICIES})")
+    cands = [c for c in cands if c.owned_pages > 0]
+    if not cands:
+        raise OutOfPages("no preemptible stream owns any pages")
+    if policy == "youngest":
+        key = lambda c: (-c.admit_seq, c.slot)
+    elif policy == "fewest-pages":
+        key = lambda c: (c.owned_pages, -c.admit_seq, c.slot)
+    else:  # lru
+        key = lambda c: (c.admit_seq, c.slot)
+    return min(cands, key=key).slot
+
+
+# ---------------------------------------------------------------------------
+# host-side swap store
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class SwapPoolStats:
+    swapped_out: int = 0
+    swapped_in: int = 0
+    bytes_out: int = 0
+    bytes_in: int = 0
+
+    @property
+    def held(self) -> int:
+        return self.swapped_out - self.swapped_in
+
+
+class SwapPool:
+    """Host-side page store for ``CollmConfig.preemption = "swap"``.
+
+    A preempted stream's device pages are copied here (numpy, host RAM)
+    and restored bit-identically into freshly allocated physical pages at
+    resume — no recompute, at the cost of PCIe/host traffic.  Snapshots
+    are opaque pytrees of numpy arrays keyed by a caller-chosen id."""
+
+    def __init__(self):
+        self._store: Dict[Any, Any] = {}
+        self.stats = SwapPoolStats()
+
+    @staticmethod
+    def _nbytes(snapshot: Any) -> int:
+        total = 0
+        stack = [snapshot]
+        while stack:
+            node = stack.pop()
+            if isinstance(node, dict):
+                stack.extend(node.values())
+            elif isinstance(node, (list, tuple)):
+                stack.extend(node)
+            elif isinstance(node, np.ndarray):
+                total += node.nbytes
+        return total
+
+    def put(self, key: Any, snapshot: Any) -> None:
+        if key in self._store:
+            raise KeyError(f"swap key {key!r} already held")
+        self._store[key] = snapshot
+        self.stats.swapped_out += 1
+        self.stats.bytes_out += self._nbytes(snapshot)
+
+    def take(self, key: Any) -> Any:
+        snapshot = self._store.pop(key)
+        self.stats.swapped_in += 1
+        self.stats.bytes_in += self._nbytes(snapshot)
+        return snapshot
+
+    def __contains__(self, key: Any) -> bool:
+        return key in self._store
+
+    def __len__(self) -> int:
+        return len(self._store)

@@ -44,6 +44,20 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--kv-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="paged: block-paged KV pool shared across slots")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged pool size; below the worst-case demand it "
+                         "oversubscribes (pair with --preemption)")
+    ap.add_argument("--preemption", default="off",
+                    choices=["off", "recompute", "swap"],
+                    help="optimistic paged admission: preempt victim "
+                         "streams on OutOfPages and resume by re-prefill "
+                         "(recompute) or host page swap (swap)")
+    ap.add_argument("--preempt-policy", default="youngest",
+                    choices=["youngest", "fewest-pages", "lru"],
+                    help="victim selection under --preemption")
     ap.add_argument("--channel", default="sync", choices=["sync", "sim"],
                     help="sim: WiFi-class async channel in virtual time")
     ap.add_argument("--deadline", type=float, default=math.inf,
@@ -64,6 +78,18 @@ def main():
                     help="virtual cost of one cloud service step "
                          "(--channel sim)")
     args = ap.parse_args()
+    if args.cloud_batch and (args.preemption != "off"
+                             or args.num_pages is not None):
+        # multi-client mode runs one single-slot engine per client: a lone
+        # slot has no victim to preempt, and generate_multi sizes its own
+        # pools — fail loudly instead of silently ignoring the flags
+        ap.error("--preemption/--num-pages apply to the single-engine "
+                 "scheduler; drop --cloud-batch to use them")
+    if args.kv_layout != "paged" and (args.preemption != "off"
+                                      or args.num_pages is not None):
+        # dense slots own fixed rings: there is no page pool to
+        # oversubscribe, so these flags could never take effect
+        ap.error("--preemption/--num-pages need --kv-layout paged")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -76,7 +102,8 @@ def main():
                for _ in range(args.clients)]
     system = ServingSystem(model, params, CollmConfig(
         theta=args.theta, wire_format=args.wire, backfill=args.backfill,
-        speculative=args.speculative))
+        speculative=args.speculative, kv_layout=args.kv_layout,
+        preemption=args.preemption, preempt_policy=args.preempt_policy))
     if args.cloud_batch:
         gen_kw = {}
         if args.channel == "sim":
@@ -100,6 +127,8 @@ def main():
             gen_kw = {"channel": AsyncSimChannel(NetworkParams(),
                                                  deadline_s=args.deadline),
                       "tick_time_s": args.tick_time}
+        if args.num_pages is not None:
+            gen_kw["num_pages"] = args.num_pages
         r = system.generate(prompts, args.max_new, mode=args.mode, **gen_kw)
     st = r["stats"]
     print(f"mode={args.mode} theta={args.theta} wire={args.wire} "
@@ -109,6 +138,9 @@ def main():
           f"request_rate={st.request_rate:.2%}")
     print(f"upload={st.upload_bytes/1e3:.1f}KB edge_t={st.edge_time:.2f}s "
           f"cloud_t={st.cloud_time:.2f}s")
+    if args.preemption != "off":
+        print(f"preemptions={st.preemptions} policy={args.preempt_policy} "
+              f"mode={args.preemption}")
     if args.channel == "sim":
         print(f"virtual_t={r['virtual_time']:.3f}s "
               f"deadline_misses={st.deadline_misses} "

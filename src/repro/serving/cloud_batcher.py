@@ -50,6 +50,17 @@ from repro.models.attention import paged_reset_pages, paged_scatter_prefill
 Pytree = Any
 
 
+def _pad_pages(phys: np.ndarray) -> np.ndarray:
+    """Pad a physical-page id list to its power-of-two bucket by repeating
+    the last id (duplicate scatter writes of identical data are no-ops),
+    bounding the compile count of the swap gather/write graphs."""
+    n = len(phys)
+    padded = np.empty((_bucket(n, floor=1),), np.int32)
+    padded[:n] = phys
+    padded[n:] = phys[n - 1]
+    return padded
+
+
 # ---------------------------------------------------------------------------
 # pooled-cache helpers (shared with the edge engine)
 # ---------------------------------------------------------------------------
@@ -111,12 +122,116 @@ def _reset_pages_tree(caches: Pytree, pages: jax.Array) -> Pytree:
     return {si: go(c) for si, c in caches.items()}
 
 
+def build_upload_ring(entries, batch: int):
+    """Assemble the dense upload ring for ``ring_cloud_steps`` from
+    per-row packet lists.
+
+    ``entries``: [(row, [(pos, StatePacket), ...]), ...] — one entry per
+    pool row, packets in consumption order.  Returns ``(ring, ring_pos,
+    valid)`` device arrays with the ring depth bucketed to a power of two
+    (bounds the scan compile count).  Shared by the engine's backfill
+    dispatch, the preemption replay paths, and the CloudBatcher's wave
+    compute, so the ring layout can never drift between them."""
+    depth = _bucket(max((len(p) for _, p in entries), default=1), floor=1)
+    first = next(p for _, pkts in entries for _, p in pkts)
+    keys = first.hidden.keys()
+    ring = {k: np.zeros((depth, batch) + np.shape(first.hidden[k])[1:],
+                        np.asarray(first.hidden[k]).dtype) for k in keys}
+    ring_pos = np.zeros((depth, batch), np.int32)
+    valid = np.zeros((depth, batch), bool)
+    for row, pkts in entries:
+        for i, (p, pkt) in enumerate(pkts):
+            for k in keys:
+                ring[k][i, row] = np.asarray(pkt.hidden[k])[0]
+            ring_pos[i, row] = p
+            valid[i, row] = True
+    return ({k: jnp.asarray(v) for k, v in ring.items()},
+            jnp.asarray(ring_pos), jnp.asarray(valid))
+
+
+def _page_axis(node: Pytree) -> int:
+    """Batch/page axis of a paged node's leaves: stacked segments carry a
+    leading layer axis (kp: (L, P, ps, KV, d)), shared ones don't."""
+    return 1 if node["kp"].ndim == 5 else 0
+
+
+def _gather_pages_tree(caches: Pytree, phys: jax.Array) -> Pytree:
+    """Swap-out: slice the given physical pages out of every paged cache
+    node (``{si: {kp, vp, pos}}`` page-axis slices, same tree shape)."""
+    def go(c: Pytree) -> Pytree:
+        if isinstance(c, dict):
+            if "kp" in c:
+                ax = _page_axis(c)
+                return {k: jnp.take(v, phys, axis=ax) for k, v in c.items()}
+            return {k: go(v) for k, v in c.items()}
+        return None
+    return {si: go(c) for si, c in caches.items()}
+
+
+def _write_pages_tree(caches: Pytree, phys: jax.Array,
+                      data: Pytree) -> Pytree:
+    """Swap-in: write snapshotted page contents into (freshly allocated)
+    physical pages.  Duplicate ids in ``phys`` carry identical data
+    (``_pad_pages``), so overlapping scatters are benign."""
+    def go(c: Pytree, d: Pytree) -> Pytree:
+        if isinstance(c, dict):
+            if "kp" in c:
+                if _page_axis(c) == 1:
+                    return {k: c[k].at[:, phys].set(
+                        d[k].astype(c[k].dtype)) for k in c}
+                return {k: c[k].at[phys].set(d[k].astype(c[k].dtype))
+                        for k in c}
+            return {k: go(c[k], d[k]) for k in c}
+        return c
+    return {si: go(c, data[si]) for si, c in caches.items()}
+
+
+def gather_slot_pages(pool: PagePool, slot: int, caches: Pytree):
+    """Swap-out core: slice one slot's physical pages out of a paged
+    cache tree.  Returns ``(logical, host_tree)`` — the slot's logical
+    page indices and the device-fetched page contents (None when the slot
+    owns nothing)."""
+    tbl_row = pool.block_table[slot]
+    logical = np.nonzero(tbl_row >= 0)[0].astype(np.int32)
+    if not len(logical):
+        return logical, None
+    padded = jnp.asarray(_pad_pages(tbl_row[logical].astype(np.int32)))
+    return logical, jax.device_get(GATHER_PAGES(caches, padded))
+
+
+def rebind_slot_pages(pool: PagePool, slot: int,
+                      logical: np.ndarray) -> jax.Array:
+    """Swap-in core: re-allocate a snapshot's logical pages for ``slot``
+    (pages are row-agnostic — the block table re-binds them to whatever
+    physical ids are free) and return the padded id vector to
+    ``WRITE_PAGES`` the snapshot into."""
+    for lp in logical:
+        pool.alloc(slot, int(lp))
+    phys = pool.block_table[slot][logical].astype(np.int32)
+    return jnp.asarray(_pad_pages(phys))
+
+
+def all_paged(caches: Pytree) -> bool:
+    """True when every cache leaf lives under a paged ("kp") node — the
+    precondition for swap preemption (a dense leaf — recurrent state,
+    cross-attention — would be silently lost by a page-only snapshot)."""
+    def go(c: Pytree) -> bool:
+        if isinstance(c, dict):
+            if "kp" in c:
+                return True
+            return bool(c) and all(go(v) for v in c.values())
+        return False
+    return all(go(c) for c in caches.values())
+
+
 # one jitted wrapper per process, shared by every scheduler and batcher —
 # schedulers are spawned per client in multi-engine mode and must not each
 # re-trace the scatter/invalidate graphs
 SCATTER = jax.jit(_scatter_row)
 SCATTER_PAGED = jax.jit(_scatter_row_paged)
 RESET_PAGES = jax.jit(_reset_pages_tree)
+GATHER_PAGES = jax.jit(_gather_pages_tree)
+WRITE_PAGES = jax.jit(_write_pages_tree)
 
 
 def _jit(collm: CoLLM, name: str):
@@ -152,6 +267,8 @@ class BatcherStats:
     rows: int = 0               # summed rows served by those calls
     cancelled: int = 0
     prefills: int = 0
+    restores: int = 0           # preempted-stream cloud-KV replays
+    swaps: int = 0              # cloud rows swapped out to host
     # host seconds spent in batched wave compute.  Prefill time is NOT
     # included: the admitting engine times admit() and charges it to the
     # admitting stream's GenStats, so summing the two never double-counts.
@@ -165,6 +282,7 @@ class BatcherStats:
         return {"requests": self.requests, "steps": self.steps,
                 "mean_batch": round(self.mean_batch, 2),
                 "cancelled": self.cancelled, "prefills": self.prefills,
+                "restores": self.restores, "swaps": self.swaps,
                 "cloud_time_s": round(self.cloud_time, 4)}
 
 
@@ -214,20 +332,35 @@ class CloudBatcher:
         self._reset_pages = RESET_PAGES
 
         self._pending: List[_Entry] = []
+        self._budget: Dict[str, int] = {}   # device_id -> prompt+max_new
         self.stats = BatcherStats()
 
     # -- capacity / lifecycle ----------------------------------------------
+    def _outstanding_pages(self) -> int:
+        """Worst-case pages still owed to admitted streams.  The pool no
+        longer keeps a reservation ledger; the batcher stays conservative
+        (its rows are not preemptible) by re-deriving the same number from
+        each active client's token budget minus what it already owns."""
+        out = 0
+        for dev, budget in self._budget.items():
+            slot = self.cm.cloud_slot(dev)
+            if slot is None:
+                continue
+            out += max(0, pages_needed(budget, self.pool.page_size)
+                       - self.pool.owned_pages(slot))
+        return out
+
     def can_admit(self, budget_tokens: int) -> bool:
         """One more stream of ``prompt + max_new`` tokens, right now?"""
         if self.cm.cloud_slots_free() <= 0:
             return False
         if self.pool is not None:
-            if pages_needed(budget_tokens, self.pool.page_size) \
-                    > self.pool.num_pages:
+            need = pages_needed(budget_tokens, self.pool.page_size)
+            if need > self.pool.num_pages:
                 raise ValueError(
                     f"stream of {budget_tokens} tokens needs more pages "
                     f"than the cloud pool has ({self.pool.num_pages})")
-            return self.pool.can_admit(budget_tokens)
+            return need <= self.pool.free_pages - self._outstanding_pages()
         return True
 
     def admit(self, device_id: str, h1_seq: jax.Array, true_len: int,
@@ -237,9 +370,9 @@ class CloudBatcher:
         the true last position (the cloud answer for the first token),
         still on device."""
         slot = self.cm.assign_cloud_slot(device_id)
+        self._budget[device_id] = budget_tokens
         pages = None
         if self.pool is not None:
-            self.pool.reserve(slot, budget_tokens)
             n_prompt = pages_needed(true_len, self.pool.page_size)
             for lp in range(n_prompt):
                 self.pool.alloc(slot, lp)
@@ -259,9 +392,10 @@ class CloudBatcher:
         return logits
 
     def release(self, device_id: str) -> None:
-        """Stream finished: cancel its queued requests, free its pages
-        (invalidated on device), return its pool row."""
+        """Stream finished (or was preempted): cancel its queued requests,
+        free its pages (invalidated on device), return its pool row."""
         self.cancel(device_id, 0)
+        self._budget.pop(device_id, None)
         slot = self.cm.release_cloud_slot(device_id)
         if slot is None or self.pool is None:
             return
@@ -275,11 +409,13 @@ class CloudBatcher:
 
     # -- request path -------------------------------------------------------
     def submit(self, device_id: str, pos: int, *, backfill: bool = False):
-        """Queue one single-token cloud request; returns the reply payload
-        ``(group, row)`` the engine hands to its channel.  The uploaded
-        packet(s) are popped from the ContentManager NOW (submit order =
-        per-client pos order), so a later flush computes exactly what a
-        per-engine call would have."""
+        """Queue one single-token cloud request; returns ``(group, row,
+        packets)`` — the engine hands ``(group, row)`` to its channel as
+        the reply payload and may retain ``packets`` (the consumed
+        uploads) for a preemption checkpoint.  The uploaded packet(s) are
+        popped from the ContentManager NOW (submit order = per-client pos
+        order), so a later flush computes exactly what a per-engine call
+        would have."""
         slot = self.cm.cloud_slot(device_id)
         if slot is None:
             raise KeyError(f"{device_id} has no cloud slot (admit first)")
@@ -297,7 +433,7 @@ class CloudBatcher:
         self._pending.append(_Entry(device_id=device_id, slot=slot, pos=pos,
                                     packets=packets, group=group))
         self.stats.requests += 1
-        return group, slot
+        return group, slot, packets
 
     def cancel(self, device_id: str, min_pos: int) -> int:
         """Drop queued (not yet computed) requests of one client at
@@ -321,6 +457,77 @@ class CloudBatcher:
         cut[slot] = cut_pos
         self.caches = self._invalidate_rows(self.caches, jnp.asarray(cut),
                                             self._block_tbl())
+
+    # -- preemption lifecycle ----------------------------------------------
+    def restore(self, device_id: str, packets) -> None:
+        """Resume (recompute mode): replay a checkpointed stream's
+        consumed cloud uploads — positions strictly below the resume
+        point — through the cloud partition, rebuilding its pooled-row KV
+        to the exact pre-preemption state (release-semantics gaps
+        included).  The caller re-``admit``s the prompt prefill first;
+        positions at/after the resume point are NOT replayed — re-decode
+        re-submits them through the normal request path."""
+        slot = self.cm.cloud_slot(device_id)
+        if slot is None:
+            raise KeyError(f"{device_id} has no cloud slot (admit first)")
+        if not packets:
+            return
+        if self.pool is not None:
+            for p, _ in packets:
+                lp = p // self.pool.page_size
+                if self.pool.block_table[slot, lp] == -1:
+                    self.pool.alloc(slot, lp)
+                    self._tbl_device = None
+        t0 = time.perf_counter()
+        ring, ring_pos, valid = build_upload_ring([(slot, packets)], self.B)
+        _, self.caches = self._ring_cloud(
+            self.params, ring, ring_pos, valid, self.caches,
+            self._block_tbl())
+        self.stats.restores += 1
+        self.stats.cloud_time += time.perf_counter() - t0
+
+    def swap_out(self, device_id: str):
+        """Preempt (swap mode): snapshot the stream's cloud-KV pages to
+        host memory, then release its row/pages/budget.  Returns the
+        snapshot for ``swap_in`` (None when the stream owned nothing).
+
+        Flushes the request queue first: a queued-but-uncomputed entry
+        (lazy flush) has consumed its uploads without writing their KV
+        yet — snapshotting before the wave runs would freeze the gap and
+        ``release``'s cancel would drop the only copy of the packets
+        (backfill rings cover positions re-decode never re-uploads).  The
+        un-preempted run computes those entries at the next
+        materialization anyway, so flushing early changes wave grouping,
+        never values."""
+        slot = self.cm.cloud_slot(device_id)
+        if slot is None or self.pool is None:
+            self.release(device_id)
+            return None
+        if self._pending:
+            self.flush()
+        logical, pages = gather_slot_pages(self.pool, slot, self.caches)
+        if pages is not None:
+            self.stats.swaps += 1
+        snap = {"logical": logical, "pages": pages,
+                "budget": self._budget.get(device_id)}
+        self.release(device_id)
+        return snap
+
+    def swap_in(self, device_id: str, snap) -> None:
+        """Resume (swap mode): re-acquire a cloud row (possibly a
+        different one — pages are row-agnostic, the block table re-binds
+        them) and write the snapshot back into freshly allocated pages."""
+        self.cm.assign_cloud_slot(device_id)
+        if snap is None:
+            return
+        if snap["budget"] is not None:
+            self._budget[device_id] = snap["budget"]
+        if snap["pages"] is None:
+            return
+        slot = self.cm.cloud_slot(device_id)
+        padded = rebind_slot_pages(self.pool, slot, snap["logical"])
+        self.caches = WRITE_PAGES(self.caches, padded, snap["pages"])
+        self._tbl_device = None
 
     def flush(self) -> None:
         """Drain the queue in waves: each wave serves at most one request
@@ -355,21 +562,10 @@ class CloudBatcher:
         first = wave[0].packets[0][1]
         keys = first.hidden.keys()
         if backfill:
-            depth = _bucket(max(len(e.packets) for e in wave), floor=1)
-            ring = {k: np.zeros(
-                (depth, self.B) + np.shape(first.hidden[k])[1:],
-                np.asarray(first.hidden[k]).dtype) for k in keys}
-            ring_pos = np.zeros((depth, self.B), np.int32)
-            valid = np.zeros((depth, self.B), bool)
-            for e in wave:
-                for i, (p, pkt) in enumerate(e.packets):
-                    for k in keys:
-                        ring[k][i, e.slot] = np.asarray(pkt.hidden[k])[0]
-                    ring_pos[i, e.slot] = p
-                    valid[i, e.slot] = True
+            ring, ring_pos, valid = build_upload_ring(
+                [(e.slot, e.packets) for e in wave], self.B)
             logits, self.caches = self._ring_cloud(
-                self.params, {k: jnp.asarray(v) for k, v in ring.items()},
-                jnp.asarray(ring_pos), jnp.asarray(valid), self.caches,
+                self.params, ring, ring_pos, valid, self.caches,
                 self._block_tbl())
         else:
             dense = {k: np.zeros((self.B,) + np.shape(first.hidden[k])[1:],

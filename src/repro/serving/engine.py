@@ -65,14 +65,20 @@ import numpy as np
 from repro.core.collm import CoLLM, CollmConfig
 from repro.core.content_manager import ContentManager
 from repro.core.exits import select_exit_logits
-from repro.core.paging import PagePool, pages_needed
+from repro.core.paging import (PREEMPT_POLICIES, OutOfPages, PagePool,
+                               SwapPool, VictimCandidate, pages_needed,
+                               select_victim)
 from repro.core.transport import (TOKEN_BYTES, ChannelStats, CloudChannel,
                                   StatePacket, SyncChannel,
                                   hidden_wire_bytes)
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
-from repro.serving.cloud_batcher import (RESET_PAGES, SCATTER, SCATTER_PAGED,
-                                         CloudBatcher, _bucket, _jit)
+from repro.serving.cloud_batcher import (RESET_PAGES, SCATTER,
+                                         SCATTER_PAGED, WRITE_PAGES,
+                                         CloudBatcher, _bucket, _jit,
+                                         all_paged, build_upload_ring,
+                                         gather_slot_pages,
+                                         rebind_slot_pages)
 
 Pytree = Any
 
@@ -86,6 +92,7 @@ class GenStats:
     deadline_misses: int = 0      # replies that missed their deadline
     spec_rewinds: int = 0         # speculative reconciles that disagreed
     fallbacks: int = 0            # switches to standalone fallback
+    preemptions: int = 0          # times this stream was checkpointed out
     upload_bytes: int = 0
     edge_time: float = 0.0
     cloud_time: float = 0.0
@@ -262,6 +269,37 @@ class _Slot:
     events: List[str] = dataclasses.field(default_factory=list)
     miss_streak: int = 0
     standalone: bool = False     # latency fallback engaged (stops uploading)
+    admit_seq: int = 0           # global admission order (victim policies)
+    # uploads the cloud actually consumed for this stream, in consumption
+    # order — a preemption checkpoint replays them to rebuild the cloud KV
+    # (gaps included) without recomputing the hidden states.  Tracked only
+    # when preemption is enabled.
+    cloud_pkts: List[tuple] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class _Checkpoint:
+    """A preempted stream, frozen between its slot generations.
+
+    Everything needed to resume is host-side: the emitted tokens (the
+    resume point is ``len(prompt) + len(tokens) - 1`` — the last emitted
+    token is re-fed, so an interrupted in-flight edge pass is simply
+    re-run), the per-stream stats/events, the ContentManager uploads that
+    were still pending, and the cloud-consumed upload packets whose replay
+    reconstructs the cloud KV exactly (release-semantics gaps included).
+    ``swap_key`` points into the scheduler's ``SwapPool`` when the device
+    pages were swapped out instead of dropped."""
+    req: Request
+    stats: GenStats
+    tokens: List[int]
+    events: List[str]
+    cloud_pkts: List[tuple]               # [(pos, StatePacket)] pos < resume
+    uploads: List[tuple]                  # pending CM uploads, pos < resume
+    standalone: bool
+    miss_streak: int
+    swap_key: Optional[int] = None        # SwapPool key (swap mode)
+    swap_pages: int = 0                   # pages the snapshot restores
+    batcher_swap: Optional[dict] = None   # CloudBatcher.swap_out snapshot
 
 
 class BatchScheduler:
@@ -273,13 +311,20 @@ class BatchScheduler:
     finished slots are refilled from the queue without recompiling.
 
     With ``CollmConfig.kv_layout="paged"`` the scheduler also owns a
-    ``PagePool``: admission reserves the worst-case page count (and
-    back-pressures when the pool is exhausted), prefill scatters the
-    prompt's K/V into freshly allocated pages, each decode tick allocates a
-    page only when a row crosses a page boundary, and retirement bulk-frees
-    the slot's pages and invalidates them on device.  The block table is
-    shared by the edge/cloud/full cache pools (same token positions) and is
-    passed into every jitted step.
+    ``PagePool``: prefill scatters the prompt's K/V into freshly allocated
+    pages, each decode tick allocates a page only when a row crosses a
+    page boundary, and retirement bulk-frees the slot's pages and
+    invalidates them on device.  Admission follows
+    ``CollmConfig.preemption``: ``"off"`` keeps the conservative
+    worst-case check (an admitted stream can always finish), while
+    ``"recompute"``/``"swap"`` admit optimistically on the prompt's pages
+    alone and answer a decode-time ``OutOfPages`` by preempting a victim
+    stream — checkpoint, free its pages, resume later by re-prefill or a
+    host-side page swap (docs/kv_paging.md §Preemption).  Preemption is
+    invisible in output space: greedy streams are token-identical to an
+    un-preempted run.  The block table is shared by the edge/cloud/full
+    cache pools (same token positions) and is passed into every jitted
+    step.
 
     Cloud requests travel through ``channel`` (a
     ``transport.CloudChannel``) and each tick is a two-stage pipeline:
@@ -315,7 +360,9 @@ class BatchScheduler:
                  channel: Optional[CloudChannel] = None,
                  tick_time_s: float = 0.0, overlap: bool = True,
                  fallback_after: int = 0,
-                 cloud_batcher: Optional[CloudBatcher] = None):
+                 cloud_batcher: Optional[CloudBatcher] = None,
+                 watermark: int = 0,
+                 preempt_schedule: Optional[Sequence] = None):
         if mode not in ("collm", "standalone", "cloud"):
             raise ValueError(mode)
         # cloud compute delegated to a shared CloudBatcher (multi-engine
@@ -374,12 +421,45 @@ class BatchScheduler:
             self.max_ctx = max_ctx or max_seq
             n_pages = num_pages or num_slots * pages_needed(max_seq, ps)
             self.pool = PagePool(n_pages, ps, num_slots,
-                                 pages_needed(self.max_ctx, ps))
+                                 pages_needed(self.max_ctx, ps),
+                                 watermark=watermark)
             row_seq = _bucket(self.max_ctx)
         else:
             self.max_ctx = max_seq
             row_seq = max_seq
         self._row_seq = row_seq        # single-row prefill cache capacity
+
+        # preemption (docs/kv_paging.md §Preemption): admission is
+        # optimistic — a decode-time OutOfPages checkpoints a victim
+        # stream and resumes it later by re-prefill ("recompute") or a
+        # host-side page round-trip ("swap").  "off" restores the old
+        # conservative worst-case admission check.
+        self.preemption = self.ccfg.preemption
+        if self.preemption not in ("off", "recompute", "swap"):
+            raise ValueError(f"preemption {self.preemption!r}")
+        self.preempt_policy = self.ccfg.preempt_policy
+        if self.preempt_policy not in PREEMPT_POLICIES:
+            raise ValueError(f"preempt_policy {self.preempt_policy!r} "
+                             f"(choose from {PREEMPT_POLICIES})")
+        if self.preemption != "off" and sampler != "greedy":
+            raise ValueError(
+                "preemption requires greedy sampling: per-stream sampler "
+                "state cannot be checkpointed out of the shared rng")
+        if self.preemption == "swap" and self.layout != "paged":
+            raise ValueError('preemption="swap" swaps KV pages and needs '
+                             'kv_layout="paged" (use "recompute" on dense)')
+        self._preempted: "collections.deque[_Checkpoint]" = collections.deque()
+        self.swap = SwapPool() if self.preemption == "swap" else None
+        self._swap_key = 0
+        self._admit_counter = 0
+        self._tick_no = 0
+        self.preemptions = 0          # scheduler-lifetime preempt events
+        self._preempt_schedule: Dict[int, List[int]] = {}
+        if preempt_schedule:
+            if self.preemption == "off":
+                raise ValueError("preempt_schedule needs preemption enabled")
+            for t, idx in preempt_schedule:
+                self._preempt_schedule.setdefault(int(t), []).append(int(idx))
 
         # pooled caches (compiled once per pool size; refills only scatter)
         if mode == "cloud":
@@ -395,6 +475,7 @@ class BatchScheduler:
                     collm.init_cloud_cache, collm.init_cloud_cache_paged)
                 self._cloud_row0 = collm.init_cloud_cache(1, row_seq)
 
+        self._write_pages = WRITE_PAGES
         self._edge_step = _jit(collm, "edge_step")
         self._edge_masked = _jit(collm, "edge_step_masked")
         self._full_step = _jit(collm, "full_step")
@@ -410,6 +491,20 @@ class BatchScheduler:
         # recurrent segments can't absorb right-padding (their state would
         # advance through pad tokens) -> exact-length prefill for them
         self._pad_ok = self.model.attention_only()
+
+        if self.preemption == "swap":
+            # a page-only snapshot would silently lose dense cache leaves
+            # (recurrent state, cross-attention) — gate swap to trees where
+            # everything lives in pages; recompute covers the rest
+            trees = [getattr(self, n) for n in
+                     ("main_caches", "edge_caches", "cloud_caches")
+                     if getattr(self, n, None) is not None]
+            if self._batcher is not None:
+                trees.append(self._batcher.caches)
+            if not all(all_paged(t) for t in trees):
+                raise ValueError(
+                    'preemption="swap" requires every cache node to be '
+                    'paged (attention-only models); use "recompute"')
 
     def _init_pool_cache(self, dense_init, paged_init):
         if self.layout == "paged":
@@ -448,9 +543,37 @@ class BatchScheduler:
             temperature=self.temperature, top_k=self.top_k))
 
     # -- admission ----------------------------------------------------------
+    def _outstanding_pages(self) -> int:
+        """Worst-case pages still owed to the active streams — the
+        never-preempt (``preemption="off"``) admission check re-derives the
+        old reservation-ledger number from slot state so an admitted
+        stream can always finish."""
+        out = 0
+        for s in self.slots:
+            if not s.active or s.req is None:
+                continue
+            worst = pages_needed(len(s.req.prompt) + s.req.max_new,
+                                 self.pool.page_size)
+            out += max(0, worst - self.pool.owned_pages(s.index))
+        return out
+
+    def _fits_now(self, need_pages: int) -> bool:
+        """Optimistic admission: do ``need_pages`` fit the free list right
+        now?  The watermark holds back decode headroom — except when
+        nothing is running, where it would wedge the pool instead of
+        protecting it (last-resort progress guarantee)."""
+        free = self.pool.available_pages
+        if not any(s.active for s in self.slots):
+            free = self.pool.free_pages
+        return need_pages <= free
+
     def _admissible(self, req: Request, p_len: int, pad: int) -> bool:
         """Capacity check.  Impossible requests raise; a request the paged
-        pool could serve but not *right now* stays queued (back-pressure)."""
+        pool could serve but not *right now* stays queued (back-pressure).
+        With preemption enabled the check is optimistic — only the
+        *prompt's* pages must fit (decode pages come from alloc-on-write,
+        backstopped by preemption); with ``preemption="off"`` it stays the
+        conservative worst case, so a decode alloc can never fail."""
         if p_len + req.max_new > self.max_ctx or pad > self._row_seq:
             raise ValueError(
                 f"request {req.device_id}: prompt {p_len} + max_new "
@@ -460,20 +583,25 @@ class BatchScheduler:
             return False        # shared cloud pool full: wait for a release
         if self.pool is None:
             return True
-        need = pages_needed(p_len + req.max_new, self.pool.page_size)
-        if need > self.pool.num_pages:
+        need_worst = pages_needed(p_len + req.max_new, self.pool.page_size)
+        if need_worst > self.pool.num_pages:
             raise ValueError(
-                f"request {req.device_id}: needs {need} pages but the pool "
-                f"only has {self.pool.num_pages}")
-        return self.pool.can_admit(p_len + req.max_new)
+                f"request {req.device_id}: needs {need_worst} pages but the "
+                f"pool only has {self.pool.num_pages}")
+        if self.preemption == "off":
+            return need_worst <= (self.pool.free_pages
+                                  - self._outstanding_pages())
+        return self._fits_now(pages_needed(p_len, self.pool.page_size))
 
-    def _admit_pages(self, slot: _Slot, p_len: int, pad: int,
-                     max_new: int) -> np.ndarray:
-        """Reserve the worst case, allocate the prompt's pages now, and
-        return the scatter table (one physical id per logical bucket page;
-        -1 = trash for bucket padding past the prompt)."""
+    def _next_admit_seq(self) -> int:
+        self._admit_counter += 1
+        return self._admit_counter
+
+    def _admit_pages(self, slot: _Slot, p_len: int, pad: int) -> np.ndarray:
+        """Allocate the prompt's pages now (later pages are alloc-on-write)
+        and return the scatter table (one physical id per logical bucket
+        page; -1 = trash for bucket padding past the prompt)."""
         pool = self.pool
-        pool.reserve(slot.index, p_len + max_new)
         n_prompt = pages_needed(p_len, pool.page_size)
         for lp in range(n_prompt):
             pool.alloc(slot.index, lp)
@@ -489,7 +617,12 @@ class BatchScheduler:
         return self._scatter_paged(full, row, slot.index, jnp.asarray(pages))
 
     def _admit(self, queue) -> bool:
-        admitted = False
+        # preempted streams resume first (they hold finished work and the
+        # head-of-line must not starve behind fresh admissions); while any
+        # still waits for pages, new requests stay queued
+        admitted = self._resume_preempted()
+        if self._preempted:
+            return admitted
         for slot in self.slots:
             if slot.active or slot.req is not None or not queue:
                 # a finished-but-uncollected slot keeps its req until
@@ -502,7 +635,7 @@ class BatchScheduler:
             if not self._admissible(req, p_len, pad):
                 break                       # FIFO back-pressure: wait for pages
             queue.popleft()
-            pages = (self._admit_pages(slot, p_len, pad, req.max_new)
+            pages = (self._admit_pages(slot, p_len, pad)
                      if self.pool is not None else None)
             tokens = np.zeros((1, pad), np.int32)
             tokens[0, :p_len] = prompt
@@ -557,6 +690,8 @@ class BatchScheduler:
             slot.pending = {}
             slot.miss_streak = 0
             slot.standalone = False
+            slot.admit_seq = self._next_admit_seq()
+            slot.cloud_pkts = []
             admitted = True
             self._maybe_finish(slot)
         return admitted
@@ -632,6 +767,252 @@ class BatchScheduler:
             if c is not None:
                 setattr(self, name, self._reset_pages(c, ids))
 
+    # -- preemption ---------------------------------------------------------
+    # Admission is optimistic, so a decode-time alloc can find the free
+    # list empty.  The scheduler then checkpoints a victim stream (tokens,
+    # events, stats, pending ContentManager uploads, the cloud-consumed
+    # upload packets, the CloudBatcher row) and frees its pages; the
+    # stream resumes later by re-prefill of its token prefix ("recompute")
+    # or a host round-trip of its pages ("swap").  The resume point is
+    # always ``len(prompt) + len(tokens) - 1``: the last emitted token is
+    # re-fed, so an interrupted in-flight edge pass is simply re-run and
+    # re-dispatched — greedy decode makes the re-run bit-deterministic,
+    # which is why preemption is invisible in output space.
+
+    def _ensure_page(self, s: _Slot, lp: int) -> None:
+        """Alloc-on-write with preemption: keep freeing victims until the
+        page for ``s``'s next write exists."""
+        while True:
+            try:
+                self.pool.alloc(s.index, lp)
+                self._tbl_device = None
+                return
+            except OutOfPages:
+                if self.preemption == "off":
+                    raise RuntimeError(
+                        f"slot {s.index}: out of pages mid-decode with "
+                        f"preemption off — the conservative admission "
+                        f"check should make this impossible") from None
+                cands = [VictimCandidate(v.index, v.admit_seq,
+                                         self.pool.owned_pages(v.index))
+                         for v in self.slots if v.active and v is not s]
+                try:
+                    victim = select_victim(cands, self.preempt_policy)
+                except OutOfPages:
+                    raise RuntimeError(
+                        f"slot {s.index}: out of pages and no preemptible "
+                        f"victim (pool of {self.pool.num_pages} pages too "
+                        f"small for one stream?)") from None
+                self._preempt(self.slots[victim])
+
+    def _preempt(self, s: _Slot) -> None:
+        """Checkpoint one active stream and free its slot + pages.
+
+        In-flight cloud replies are abandoned — the ``seq`` bump makes
+        them late-drop — and queued CloudBatcher requests are cancelled
+        before any KV is invalidated (cancel-before-invalidate), exactly
+        the speculative-rewind lifecycle."""
+        req, st = s.req, s.stats
+        if s.pending and self._spec:
+            # provisional tokens past the earliest unvalidated position
+            # would never be reconciled: rewind the checkpoint to the
+            # validated prefix (re-decode re-speculates them identically)
+            cut = min(p.tok_index for p in s.pending.values())
+            for kind in reversed(s.events[cut:]):
+                self._unwind_event(s, kind)
+            del s.tokens[cut:]
+            del s.events[cut:]
+        s.pending = {}
+        resume_pos = len(req.prompt) + len(s.tokens) - 1
+        # cloud KV at/after the resume point is re-created by re-decode;
+        # everything before it replays from the consumed-upload log
+        ck_pkts = [e for e in s.cloud_pkts if e[0] < resume_pos]
+        uploads = []
+        if self.mode == "collm":
+            uploads = [u for u in self.cm.take_all_uploads(req.device_id)
+                       if u[0] < resume_pos]
+        batcher_swap = None
+        if self._batcher is not None:
+            if self.preemption == "swap":
+                batcher_swap = self._batcher.swap_out(req.device_id)
+            else:
+                self._batcher.release(req.device_id)
+        swap_key, swap_pages = None, 0
+        if self.pool is not None:
+            if self.preemption == "swap":
+                swap_key, swap_pages = self._swap_out_slot(s)
+            self._free_pages(s)
+        self._preempted.append(_Checkpoint(
+            req=req, stats=st, tokens=list(s.tokens), events=list(s.events),
+            cloud_pkts=ck_pkts, uploads=uploads, standalone=s.standalone,
+            miss_streak=s.miss_streak, swap_key=swap_key,
+            swap_pages=swap_pages, batcher_swap=batcher_swap))
+        st.preemptions += 1
+        self.preemptions += 1
+        s.seq += 1               # outstanding replies must never land here
+        s.active = False
+        s.req = None
+        s.stats = None
+        s.tokens = []
+        s.events = []
+        s.cloud_pkts = []
+
+    def _swap_out_slot(self, s: _Slot) -> tuple:
+        """Copy the slot's physical pages (every cache tree this engine
+        holds) to the host-side SwapPool; returns (key, n_pages)."""
+        key = self._swap_key
+        self._swap_key += 1
+        logical, trees = np.zeros((0,), np.int32), {}
+        for name in ("main_caches", "edge_caches", "cloud_caches"):
+            c = getattr(self, name, None)
+            if c is None:
+                continue
+            logical, t = gather_slot_pages(self.pool, s.index, c)
+            if t is not None:
+                trees[name] = t
+        self.swap.put(key, {"logical": logical, "trees": trees or None})
+        return key, len(logical)
+
+    def _resume_preempted(self) -> bool:
+        """FIFO-resume checkpointed streams into free slots while their
+        pages (and, in collm mode, a cloud row) are available."""
+        resumed = False
+        while self._preempted:
+            slot = next((s for s in self.slots
+                         if not s.active and s.req is None), None)
+            if slot is None or not self._resumable(self._preempted[0]):
+                break
+            self._resume(self._preempted.popleft(), slot)
+            resumed = True
+        return resumed
+
+    def _resumable(self, ck: _Checkpoint) -> bool:
+        req = ck.req
+        p_len = len(req.prompt)
+        if self._batcher is not None \
+                and not self._batcher.can_admit(p_len + req.max_new):
+            return False
+        if self.pool is None:
+            return True
+        need = (ck.swap_pages if ck.swap_key is not None
+                else pages_needed(p_len + len(ck.tokens) - 1,
+                                  self.pool.page_size))
+        return self._fits_now(need)
+
+    def _resume_pad(self, length: int) -> int:
+        """Prefill bucket for a resume prefix: the usual power-of-two
+        bucket, clamped to the single-row cache capacity (a long prefix's
+        bucket may overshoot a dense ``max_seq`` that is not a power of
+        two; the prefix itself always fits)."""
+        if not self._pad_ok:
+            return length
+        return min(_bucket(length), self._row_seq)
+
+    def _resume(self, ck: _Checkpoint, slot: _Slot) -> None:
+        req = ck.req
+        prompt = np.asarray(req.prompt, np.int32)
+        p_len = len(prompt)
+        resume_pos = p_len + len(ck.tokens) - 1
+        if self.mode == "collm":
+            self.cm.restore_uploads(req.device_id, ck.uploads)
+        if ck.swap_key is not None:
+            self._swap_in_slot(slot, self.swap.take(ck.swap_key))
+            if self._batcher is not None:
+                self._batcher.swap_in(req.device_id, ck.batcher_swap)
+        else:
+            self._reprefill(slot, ck, prompt, resume_pos)
+        slot.req, slot.stats = req, ck.stats
+        slot.tokens = list(ck.tokens)
+        slot.events = list(ck.events)
+        slot.last_token = ck.tokens[-1]
+        slot.pos = resume_pos
+        slot.active = True
+        slot.seq += 1
+        slot.pending = {}
+        slot.miss_streak = ck.miss_streak
+        slot.standalone = ck.standalone
+        slot.cloud_pkts = list(ck.cloud_pkts)
+        slot.admit_seq = self._next_admit_seq()
+        self._maybe_finish(slot)
+
+    def _swap_in_slot(self, slot: _Slot, snap: dict) -> None:
+        """Write a swap snapshot into freshly allocated physical pages and
+        re-bind the slot's block table (pages are row-agnostic)."""
+        if snap["trees"] is None or not len(snap["logical"]):
+            return
+        padded = rebind_slot_pages(self.pool, slot.index, snap["logical"])
+        self._tbl_device = None
+        for name, data in snap["trees"].items():
+            setattr(self, name,
+                    self._write_pages(getattr(self, name), padded, data))
+
+    def _reprefill(self, slot: _Slot, ck: _Checkpoint, prompt: np.ndarray,
+                   resume_pos: int) -> None:
+        """Recompute-mode resume: one prefill over ``prompt + tokens[:-1]``
+        rebuilds the edge (or full-model) KV, and the checkpointed
+        consumed-upload log replays the cloud KV — gaps at early-exited
+        positions included, exactly as the un-preempted run left them."""
+        p_len = len(prompt)
+        st = ck.stats
+        pad = self._resume_pad(resume_pos)
+        tokens = np.zeros((1, pad), np.int32)
+        tokens[0, :p_len] = prompt
+        tokens[0, p_len:resume_pos] = ck.tokens[:-1]
+        pages = (self._admit_pages(slot, resume_pos, pad)
+                 if self.pool is not None else None)
+        if self.mode == "cloud":
+            t0 = time.perf_counter()
+            _, row = self._full_prefill(self.params, tokens, resume_pos,
+                                        self._full_row0)
+            self.main_caches = self._scatter_admit(self.main_caches, row,
+                                                   slot, pages)
+            st.cloud_time += time.perf_counter() - t0
+            return
+        t0 = time.perf_counter()
+        _, h1_seq, row = self._edge_prefill(self.params, tokens, resume_pos,
+                                            self._edge_row0)
+        self.edge_caches = self._scatter_admit(self.edge_caches, row, slot,
+                                               pages)
+        st.edge_time += time.perf_counter() - t0
+        if self.mode != "collm":
+            return
+        # cloud prompt prefill (same padded hidden slice as admission) +
+        # replay of the consumed decode uploads; the re-prefill h1 is NOT
+        # re-uploaded — the wire already carried it before preemption
+        t0 = time.perf_counter()
+        pad_p = (min(_bucket(p_len), self._row_seq) if self._pad_ok
+                 else p_len)
+        h1_p = h1_seq[:, :pad_p]
+        if self._batcher is not None:
+            self._batcher.admit(req_id := ck.req.device_id, h1_p, p_len,
+                                p_len + ck.req.max_new)
+            self._batcher.restore(req_id, ck.cloud_pkts)
+        else:
+            cpages = None
+            if self.pool is not None:
+                n_prompt = pages_needed(p_len, self.pool.page_size)
+                cpages = np.full((pages_needed(pad_p, self.pool.page_size),),
+                                 -1, np.int32)
+                cpages[:n_prompt] = self.pool.block_table[slot.index,
+                                                          :n_prompt]
+            _, crow = self._cloud_prefill(self.params, h1_p, p_len,
+                                          self._cloud_row0)
+            self.cloud_caches = self._scatter_admit(self.cloud_caches, crow,
+                                                    slot, cpages)
+            self._replay_cloud(slot, ck.cloud_pkts)
+        st.cloud_time += time.perf_counter() - t0
+
+    def _replay_cloud(self, slot: _Slot, pkts: List[tuple]) -> None:
+        """Own-cloud replay of the checkpointed consumed uploads (one
+        masked ring drain over this slot's row)."""
+        if not pkts:
+            return
+        ring, ring_pos, valid = build_upload_ring([(slot.index, pkts)],
+                                                  self.B)
+        _, self.cloud_caches = self._ring_cloud(
+            self.params, ring, ring_pos, valid, self.cloud_caches,
+            self._block_tbl())
+
     # -- one decode tick ----------------------------------------------------
     def tick(self) -> None:
         """One step of the two-stage pipeline: resolve due replies, run the
@@ -641,6 +1022,10 @@ class BatchScheduler:
         the same tick).  When every active row is blocked on the channel,
         the virtual clock jumps to the next arrival/deadline instead of
         busy-waiting."""
+        self._tick_no += 1
+        for idx in self._preempt_schedule.get(self._tick_no, ()):
+            if self.slots[idx].active:     # forced-preemption test hook
+                self._preempt(self.slots[idx])
         self._resolve()
         runnable = [s for s in self.slots if self._runnable(s)]
         if not runnable:
@@ -648,19 +1033,20 @@ class BatchScheduler:
                 self._advance_idle()
                 self._resolve()
             return
+        for s in runnable:
+            if self.pool is not None and s.active:
+                # alloc-on-write: this tick writes KV at s.pos; an empty
+                # free list preempts a victim stream (never s itself)
+                lp = s.pos // self.pool.page_size
+                if self.pool.block_table[s.index, lp] == -1:
+                    self._ensure_page(s, lp)
+        runnable = [s for s in runnable if s.active]   # minus fresh victims
         tokens = np.zeros((self.B, 1), np.int32)
         pos = np.zeros((self.B,), np.int32)
         for s in self.slots:
             if s.active:     # stalled rows: placeholder decode, outputs dropped
                 tokens[s.index, 0] = s.last_token
                 pos[s.index] = s.pos
-        for s in runnable:
-            if self.pool is not None:
-                # alloc-on-write: this tick writes KV at s.pos
-                lp = s.pos // self.pool.page_size
-                if self.pool.block_table[s.index, lp] == -1:
-                    self.pool.alloc(s.index, lp)
-                    self._tbl_device = None
 
         self.vnow += self.tick_time_s    # this tick's edge compute (virtual)
         if self.mode == "cloud":
@@ -799,34 +1185,34 @@ class BatchScheduler:
         for s in needy:
             mask[s.index] = True
 
+        # the consumed-upload log backs the recompute resume's cloud
+        # replay; swap resumes restore pages directly (CloudBatcher
+        # flushes before its snapshot), so tracking there would only
+        # hoard host memory
+        track = self.preemption == "recompute"
         t0 = time.perf_counter()
         if self._batcher is not None:
             # shared cloud: queue per-row requests with the CloudBatcher —
             # it coalesces them with OTHER engines' concurrent requests
             # into one masked cloud step over the pooled cloud cache, and
             # the reply group's flush hook materializes it at the drain
-            payloads = {s.index: self._batcher.submit(
-                s.req.device_id, s.pos, backfill=ccfg.backfill)
-                for s in needy}
+            payloads = {}
+            for s in needy:
+                group, row, consumed = self._batcher.submit(
+                    s.req.device_id, s.pos, backfill=ccfg.backfill)
+                payloads[s.index] = (group, row)
+                if track:
+                    s.cloud_pkts.extend(consumed)
         elif ccfg.backfill:
             rings = self.cm.take_uploads_upto_batch(
                 [(s.req.device_id, s.pos) for s in needy])
-            depth = _bucket(max(len(r) for r in rings), floor=1)
-            keys = rings[0][0][1].hidden.keys() if rings[0] else ()
-            ring = {k: np.zeros((depth, self.B) + np.shape(
-                rings[0][0][1].hidden[k])[1:],
-                np.asarray(rings[0][0][1].hidden[k]).dtype) for k in keys}
-            ring_pos = np.zeros((depth, self.B), np.int32)
-            valid = np.zeros((depth, self.B), bool)
-            for s, pend in zip(needy, rings):
-                for i, (p, pkt) in enumerate(pend):
-                    for k in keys:
-                        ring[k][i, s.index] = np.asarray(pkt.hidden[k])[0]
-                    ring_pos[i, s.index] = p
-                    valid[i, s.index] = True
+            if track:
+                for s, pend in zip(needy, rings):
+                    s.cloud_pkts.extend(pend)
+            ring, ring_pos, valid = build_upload_ring(
+                [(s.index, pend) for s, pend in zip(needy, rings)], self.B)
             logits, self.cloud_caches = self._ring_cloud(
-                self.params, {k: jnp.asarray(v) for k, v in ring.items()},
-                jnp.asarray(ring_pos), jnp.asarray(valid), self.cloud_caches,
+                self.params, ring, ring_pos, valid, self.cloud_caches,
                 self._block_tbl())
             group = {"logits": logits, "np": None}   # materialized at drain
             payloads = {s.index: (group, s.index) for s in needy}
@@ -838,6 +1224,8 @@ class BatchScheduler:
                                  np.asarray(pkts[0].hidden[k]).dtype)
                      for k in keys}
             for s, pkt in zip(needy, pkts):
+                if track:
+                    s.cloud_pkts.append((s.pos, pkt))
                 for k in keys:
                     dense[k][s.index] = np.asarray(pkt.hidden[k])[0]
             logits, self.cloud_caches = self._cloud_masked(
@@ -1027,6 +1415,9 @@ class BatchScheduler:
         for h, p2 in list(s.pending.items()):
             if p2.pos > pend.pos:      # requests of discarded positions
                 del s.pending[h]       # (their replies will late-drop)
+        # the invalidated cloud KV must not resurface through a later
+        # preemption replay either
+        s.cloud_pkts = [e for e in s.cloud_pkts if e[0] <= pend.pos]
         if self._batcher is not None:
             # drop still-queued requests of the discarded positions FIRST
             # (a later flush would re-write the KV we are invalidating)
@@ -1064,24 +1455,27 @@ class BatchScheduler:
         stats: List[Optional[GenStats]] = [None] * len(requests)
         v0 = self.vnow
         self.late_drops = 0
+        self._tick_no = 0        # forced-preemption schedules are per-run
         # a reused channel must not leak the previous run's link/service
         # virtual times (or stale in-flight replies) into this run's trace
         self.channel.reset()
-        while queue or any(s.active for s in self.slots):
+        while queue or self._preempted or any(s.active for s in self.slots):
             admitted = self._admit(queue)
             self._collect(results, stats)     # finished at admission
             if any(s.active for s in self.slots):
                 self.tick()
                 self._collect(results, stats)
-            elif queue and not admitted:
-                # nothing active, nothing admitted, yet requests remain:
-                # no tick can ever free pages, so fail loudly instead of
-                # spinning (cannot happen with reservation accounting).
-                # (An admission that finished instantly — first token hits
-                # eos — sets ``admitted`` and simply loops to refill.)
+            elif (queue or self._preempted) and not admitted:
+                # nothing active, nothing admitted/resumed, yet work
+                # remains: no tick can ever free pages, so fail loudly
+                # instead of spinning (conservative admission makes this
+                # impossible, and an idle pool resumes ignore the
+                # watermark).  (An admission that finished instantly —
+                # first token hits eos — sets ``admitted`` and refills.)
                 raise RuntimeError(
-                    f"scheduler wedged: {len(queue)} queued, 0 active, "
-                    f"pool {self.pool and self.pool.available_pages} pages")
+                    f"scheduler wedged: {len(queue)} queued, "
+                    f"{len(self._preempted)} preempted, 0 active, "
+                    f"pool {self.pool and self.pool.free_pages} pages free")
         # replies still in flight belong to retired slots — drop them now
         # so a reused channel can never leak them into a later run
         self.late_drops += len(self.channel.poll(math.inf))
@@ -1111,6 +1505,7 @@ def run_multi(scheds: Sequence[BatchScheduler],
     services = {}
     for s in scheds:
         s.late_drops = 0
+        s._tick_no = 0
         s.channel.reset()
         svc = getattr(s.channel, "service", None)
         if svc is not None:
@@ -1119,7 +1514,8 @@ def run_multi(scheds: Sequence[BatchScheduler],
         svc.reset()      # shared points are reset once per run, not per channel
 
     def busy(i: int) -> bool:
-        return bool(queues[i]) or any(sl.active for sl in scheds[i].slots)
+        return (bool(queues[i]) or bool(scheds[i]._preempted)
+                or any(sl.active for sl in scheds[i].slots))
 
     while any(busy(i) for i in range(len(scheds))):
         progressed = False
@@ -1166,7 +1562,9 @@ class ServingSystem:
                  num_pages: Optional[int] = None,
                  channel: Optional[CloudChannel] = None,
                  tick_time_s: float = 0.0, overlap: bool = True,
-                 fallback_after: int = 0) -> Dict[str, Any]:
+                 fallback_after: int = 0, watermark: int = 0,
+                 preempt_schedule: Optional[Sequence] = None
+                 ) -> Dict[str, Any]:
         """mode: collm | standalone | cloud.  One client per prompt, decoded
         by the continuous-batching ``BatchScheduler`` (num_slots streams in
         flight; defaults to min(len(prompts), 8)).  The KV layout follows
@@ -1179,15 +1577,24 @@ class ServingSystem:
         to a blocking drain, and ``fallback_after`` N consecutive deadline
         misses flips a stream to standalone mode.  The result dict gains
         ``virtual_time`` (this run's virtual makespan), ``late_drops``,
-        and ``channel_stats``."""
+        and ``channel_stats``.
+
+        Under ``CollmConfig.preemption != "off"`` the paged pool admits
+        optimistically and preempts victims when pages run dry;
+        ``watermark`` holds that many free pages back from admission as
+        decode headroom, and ``preempt_schedule`` ([(tick, slot), ...])
+        force-preempts specific slots at specific ticks (test hook —
+        preemption is token-invisible either way)."""
         slots = num_slots or max(1, min(len(prompts), 8))
         longest = max(len(p) for p in prompts)
         max_seq = max_seq or (longest + max_new + 8)
         max_seq = max(max_seq, _bucket(longest))
+        sched_tuple = (tuple((int(t), int(i)) for t, i in preempt_schedule)
+                       if preempt_schedule else None)
         key = (mode, slots, max_seq, sampler, temperature, top_k, seed,
                max_ctx, num_pages,
                id(channel) if channel is not None else None,
-               tick_time_s, overlap, fallback_after)
+               tick_time_s, overlap, fallback_after, watermark, sched_tuple)
         sched = self._schedulers.get(key)
         if sched is None:
             # bounded cache: each scheduler owns pooled device caches
@@ -1199,7 +1606,8 @@ class ServingSystem:
                 mode=mode, sampler=sampler, temperature=temperature,
                 top_k=top_k, seed=seed, max_ctx=max_ctx, num_pages=num_pages,
                 channel=channel, tick_time_s=tick_time_s, overlap=overlap,
-                fallback_after=fallback_after)
+                fallback_after=fallback_after, watermark=watermark,
+                preempt_schedule=sched_tuple)
             self._schedulers[key] = sched
         reqs = [Request(device_id=f"edge-{i}", prompt=np.asarray(p),
                         max_new=max_new, eos_id=eos_id)
@@ -1220,6 +1628,7 @@ class ServingSystem:
                        cloud_batch: bool = True,
                        max_batch: Optional[int] = None,
                        channels: Optional[Sequence[CloudChannel]] = None,
+                       preempt_schedules: Optional[Sequence] = None,
                        tick_time_s: float = 0.0, overlap: bool = True,
                        fallback_after: int = 0) -> Dict[str, Any]:
         """Multi-client mode (paper §5): each edge client is its own
@@ -1255,7 +1664,9 @@ class ServingSystem:
             self.collm, self.params, self.cloud.cm, 1, max_seq, mode=mode,
             channel=(channels[i] if channels is not None else None),
             tick_time_s=tick_time_s, overlap=overlap,
-            fallback_after=fallback_after, cloud_batcher=batcher)
+            fallback_after=fallback_after, cloud_batcher=batcher,
+            preempt_schedule=(preempt_schedules[i]
+                              if preempt_schedules is not None else None))
             for i in range(n)]
         per_engine = [[] for _ in range(n)]
         assign = [[] for _ in range(n)]

@@ -7,6 +7,17 @@ import pytest
 from repro.configs.base import ModelConfig
 
 
+def pytest_collection_modifyitems(config, items):
+    """Split the suite into lanes: anything that trains the shared tiny
+    model (the ``tiny_trained`` session fixture) is ``slow`` — the fast CI
+    lane (``pytest -m "not slow"``) runs the rest in minutes.  Explicit
+    ``@pytest.mark.slow`` marks still apply to tests that are heavy
+    without the fixture (see README §Tests)."""
+    for item in items:
+        if "tiny_trained" in getattr(item, "fixturenames", ()):
+            item.add_marker(pytest.mark.slow)
+
+
 @pytest.fixture(scope="session")
 def tiny_ee_cfg() -> ModelConfig:
     return ModelConfig(name="tiny-ee", arch_type="dense", n_layers=4,

@@ -8,6 +8,9 @@ import sys
 
 import pytest
 
+# end-to-end subprocess compile: slow lane (pytest -m "not slow" skips it)
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

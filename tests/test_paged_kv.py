@@ -129,7 +129,6 @@ def test_page_reuse_no_stale_leak_property(seed, tiny_ee_cfg):
     cache = init_paged_attn_cache(tiny_ee_cfg, num_pages, ps)
 
     len_a = int(rng.randint(ps + 1, n_lp * ps))      # stream A spans pages
-    pool.reserve(0, len_a)
     pages_a = [pool.alloc(0, lp) for lp in range(pages_needed(len_a, ps))]
     kvh, hd = tiny_ee_cfg.n_kv_heads, tiny_ee_cfg.resolved_head_dim
     row = {
@@ -144,7 +143,6 @@ def test_page_reuse_no_stale_leak_property(seed, tiny_ee_cfg):
     cache = paged_reset_pages(cache, jnp.asarray(freed))
 
     len_b = int(rng.randint(1, len_a))               # B shorter than A
-    pool.reserve(1, len_b)
     pages_b = [pool.alloc(1, lp) for lp in range(pages_needed(len_b, ps))]
     assert set(pages_b) <= set(freed)                # genuinely reused
     row_b = {
@@ -239,21 +237,29 @@ def test_fused_step_paged_matches_dense(tiny_trained, theta):
 # PagePool accounting
 # ---------------------------------------------------------------------------
 def test_page_pool_accounting():
+    from repro.core.paging import OutOfPages
     pool = PagePool(6, 4, 2, 8)
     assert pool.can_admit(24) and not pool.can_admit(25)
-    assert pool.reserve(0, 10) == 3                  # ceil(10/4)
-    assert pool.available_pages == 3
     p0 = pool.alloc(0, 0)
     assert p0 != 0                                   # trash page never handed out
     assert pool.alloc(0, 0) == p0                    # idempotent re-map
-    assert pool.free_pages == 5 and pool.available_pages == 3
-    pool.alloc(0, 1)
-    pool.alloc(0, 2)
-    with pytest.raises(RuntimeError, match="beyond reservation"):
-        pool.alloc(0, 3)
-    pool.reserve(1, 12)
-    with pytest.raises(RuntimeError, match="out of pages"):
-        pool.reserve(1, 4)
+    assert pool.free_pages == 5 and pool.owned_pages(0) == 1
+    for lp in range(1, 6):
+        pool.alloc(0, lp)
+    assert pool.free_pages == 0 and not pool.can_admit(1)
+    with pytest.raises(OutOfPages):
+        pool.alloc(1, 0)                             # empty free list
     freed = pool.free_slot(0)
-    assert len(freed) == 3 and pool.free_pages == 6
+    assert len(freed) == 6 and pool.free_pages == 6
     assert np.all(pool.block_table[0] == -1)
+
+
+def test_page_pool_watermark():
+    """The watermark holds pages back from admission but never from
+    alloc-on-write."""
+    pool = PagePool(6, 4, 2, 8, watermark=2)
+    assert pool.available_pages == 4
+    assert pool.can_admit(16) and not pool.can_admit(17)
+    for lp in range(6):                              # decode ignores watermark
+        pool.alloc(0, lp)
+    assert pool.free_pages == 0

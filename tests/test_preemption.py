@@ -1,0 +1,464 @@
+"""Optimistic paged-KV admission with preemption & swap.
+
+The hard invariant under test: preemption is **invisible in output
+space** — whatever oversubscription level, victim policy, or forced
+preemption schedule the scheduler runs under, every stream's greedy token
+stream is identical to an un-preempted run, and the ``PagePool`` ends
+with every page back on the free list.
+
+The engine-level suites run on an UNTRAINED tiny model (generation is
+deterministic either way) so they stay in the fast CI lane; one
+trained-model equivalence test is marked ``slow``.
+"""
+import math
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import ModelConfig
+from repro.core.collm import CollmConfig
+from repro.core.paging import (PREEMPT_POLICIES, TRASH_PAGE, OutOfPages,
+                               PagePool, SwapPool, VictimCandidate,
+                               pages_needed, select_victim)
+from repro.core.transport import ScriptedChannel
+from repro.models.registry import build_model
+from repro.serving.engine import ServingSystem
+
+PS = 16                               # CollmConfig.page_size default
+
+
+# ---------------------------------------------------------------------------
+# shared untrained tiny model + memoized systems (one CoLLM per config so
+# hypothesis examples never re-trace the jitted steps)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="tiny-ee", arch_type="dense", n_layers=4,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=128, tie_embeddings=True,
+                      exit_layers=(1, 2)).validate()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return {"model": model, "params": params, "systems": {}}
+
+
+def _system(tiny, **ccfg_kw) -> ServingSystem:
+    key = tuple(sorted(ccfg_kw.items()))
+    if key not in tiny["systems"]:
+        tiny["systems"][key] = ServingSystem(
+            tiny["model"], tiny["params"], CollmConfig(**ccfg_kw))
+    return tiny["systems"][key]
+
+
+def _prompts(seed: int, n: int, lo: int = 6, hi: int = 14):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, 128, size=rng.randint(lo, hi + 1))
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# the tentpole property: oversubscription x policy x forced schedules
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 20),
+       policy=st.sampled_from(PREEMPT_POLICIES),
+       pre=st.sampled_from(("recompute", "swap")),
+       mode=st.sampled_from(("collm", "standalone")))
+def test_preempted_streams_token_identical(seed, policy, pre, mode, tiny):
+    """Random oversubscription levels x random preemption policies x
+    random forced-preemption schedules -> token streams identical to the
+    un-preempted sync run, and the pool drains back to fully free."""
+    rng = random.Random(seed)
+    n_streams = rng.randint(3, 5)
+    num_slots = 2
+    max_new = rng.randint(6, 14)
+    prompts = _prompts(seed, n_streams)
+    worst = max(pages_needed(len(p) + max_new, PS) for p in prompts)
+    # pool between "one worst-case stream" (max oversubscription, natural
+    # preemption every few pages) and "every slot worst-case" (only the
+    # forced schedule preempts); drawn from a small set so the paged cache
+    # shapes — and the compiled graphs — are shared across examples
+    num_pages = rng.choice([worst, worst + 1, 2 * worst])
+    schedule = [(rng.randint(1, 3 * max_new), rng.randrange(num_slots))
+                for _ in range(rng.randint(0, 4))]
+
+    ref = _system(tiny, theta=0.8, kv_layout="paged")
+    r_ref = ref.generate(prompts, max_new, mode=mode, num_slots=num_slots,
+                         max_seq=40)
+
+    sysp = _system(tiny, theta=0.8, kv_layout="paged", preemption=pre,
+                   preempt_policy=policy)
+    r = sysp.generate(prompts, max_new, mode=mode, num_slots=num_slots,
+                      max_seq=40, num_pages=num_pages,
+                      preempt_schedule=schedule)
+    assert r["tokens"] == r_ref["tokens"]
+    for sched in sysp._schedulers.values():
+        if sched.pool is not None:
+            assert sched.pool.free_pages == sched.pool.num_pages
+            assert not sched._preempted
+    st_ = r["stats"]
+    assert st_.tokens == r_ref["stats"].tokens
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2 ** 20))
+def test_forced_preemption_dense_layout(seed, tiny):
+    """Recompute-mode preemption is layout-agnostic: forced schedules on
+    the dense engine re-prefill into the slot ring and stay invisible."""
+    rng = random.Random(seed)
+    max_new = rng.randint(6, 12)
+    prompts = _prompts(seed, 4)
+    schedule = [(rng.randint(1, 2 * max_new), rng.randrange(2))
+                for _ in range(rng.randint(1, 4))]
+    ref = _system(tiny, theta=0.8)
+    r_ref = ref.generate(prompts, max_new, mode="collm", num_slots=2,
+                         max_seq=40)
+    sysp = _system(tiny, theta=0.8, preemption="recompute")
+    r = sysp.generate(prompts, max_new, mode="collm", num_slots=2,
+                      max_seq=40, preempt_schedule=schedule)
+    assert r["tokens"] == r_ref["tokens"]
+
+
+@pytest.mark.parametrize("kw,mode,pre", [
+    (dict(theta=0.8), "collm", "recompute"),
+    (dict(theta=0.8), "collm", "swap"),
+    (dict(theta=0.8, backfill=True), "collm", "recompute"),
+    (dict(theta=1.0), "collm", "swap"),   # every token cloud-served
+    (dict(theta=0.8), "standalone", "recompute"),
+    (dict(theta=0.8), "cloud", "swap"),   # undivided-model baseline rows
+])
+def test_natural_preemption_all_modes(tiny, kw, mode, pre):
+    """A pool at ~half the worst-case demand forces real (not scheduled)
+    preemptions in every serving mode; streams stay token-identical and
+    the pool drains."""
+    prompts = _prompts(7, 3, lo=8, hi=12)
+    max_new = 12
+    base = _system(tiny, kv_layout="paged", **kw)
+    rb = base.generate(prompts, max_new, mode=mode, num_slots=2, max_seq=40)
+    sysp = _system(tiny, kv_layout="paged", preemption=pre, **kw)
+    r = sysp.generate(prompts, max_new, mode=mode, num_slots=2, max_seq=40,
+                      num_pages=3)
+    assert r["tokens"] == rb["tokens"]
+    sched = next(iter(sysp._schedulers.values()))
+    assert sched.preemptions > 0
+    assert r["stats"].preemptions == sched.preemptions
+    assert sched.pool.free_pages == sched.pool.num_pages
+    if pre == "swap":
+        assert sched.swap.stats.swapped_out == sched.preemptions
+        assert len(sched.swap) == 0       # every snapshot swapped back in
+
+
+def test_speculative_preemption(tiny):
+    """Forced preemption composes with speculative decode: provisional
+    tokens past the earliest unvalidated position are rewound into the
+    checkpoint and re-speculated identically after resume."""
+    prompts = _prompts(11, 3, lo=8, hi=12)
+    ref = _system(tiny, theta=0.8, speculative=True)
+    r_ref = ref.generate(prompts, 10, mode="collm", num_slots=2, max_seq=40)
+    sysp = _system(tiny, theta=0.8, speculative=True,
+                   preemption="recompute")
+    r = sysp.generate(prompts, 10, mode="collm", num_slots=2, max_seq=40,
+                      preempt_schedule=[(3, 0), (6, 1)])
+    assert r["tokens"] == r_ref["tokens"]
+
+
+def test_watermark_holds_back_admission(tiny):
+    """With a watermark, admission leaves headroom pages untouched, but
+    the streams still finish token-identically."""
+    prompts = _prompts(5, 4, lo=8, hi=12)
+    base = _system(tiny, theta=0.8, kv_layout="paged")
+    rb = base.generate(prompts, 10, mode="collm", num_slots=2, max_seq=40)
+    sysp = _system(tiny, theta=0.8, kv_layout="paged",
+                   preemption="recompute")
+    r = sysp.generate(prompts, 10, mode="collm", num_slots=2, max_seq=40,
+                      num_pages=4, watermark=1)
+    assert r["tokens"] == rb["tokens"]
+
+
+def test_preemption_config_validation(tiny):
+    with pytest.raises(ValueError, match="paged"):
+        _system(tiny, theta=0.8, preemption="swap").generate(
+            _prompts(0, 1), 4, mode="collm")
+    with pytest.raises(ValueError, match="greedy"):
+        _system(tiny, theta=0.8, kv_layout="paged",
+                preemption="recompute").generate(
+            _prompts(0, 1), 4, mode="collm", sampler="topk", top_k=4)
+    with pytest.raises(ValueError, match="preempt_policy"):
+        _system(tiny, theta=0.8, kv_layout="paged", preemption="recompute",
+                preempt_policy="nope").generate(
+            _prompts(0, 1), 4, mode="collm")
+    with pytest.raises(ValueError, match="preemption enabled"):
+        _system(tiny, theta=0.8, kv_layout="paged").generate(
+            _prompts(0, 1), 4, mode="collm", preempt_schedule=[(1, 0)])
+
+
+# ---------------------------------------------------------------------------
+# preemption x cloud batcher (multi-engine, in-flight requests)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pre,backfill", [
+    ("recompute", False), ("swap", False),
+    # backfill x swap is the lazy-flush corner: a queued-but-uncomputed
+    # backfill entry holds the only copy of ring positions re-decode
+    # never re-uploads — CloudBatcher.swap_out must flush before its
+    # page snapshot or the resumed stream reads a gap
+    ("recompute", True), ("swap", True),
+])
+def test_preempted_inflight_cloud_request(tiny, pre, backfill):
+    """A stream preempted with a cloud reply in flight: the late reply is
+    dropped by the slot-generation guard, the CloudBatcher row is
+    released, and the stream re-registers on resume — with no leaked
+    pooled cloud rows and token streams equal to independent sync runs."""
+    prompts = _prompts(3, 3, lo=8, hi=12)
+    max_new = 12
+    refsys = _system(tiny, theta=0.8, backfill=backfill)
+    ref = [refsys.generate([p], max_new, mode="collm", num_slots=1)
+           ["tokens"][0] for p in prompts]
+
+    sysm = _system(tiny, theta=0.8, kv_layout="paged", preemption=pre,
+                   backfill=backfill)
+    chans = [ScriptedChannel([0.05], deadline_s=math.inf) for _ in range(3)]
+    r = sysm.generate_multi(prompts, max_new, cloud_batch=True,
+                            channels=chans, tick_time_s=0.01,
+                            preempt_schedules=[[(4, 0)], None, [(6, 0)]])
+    assert r["tokens"] == ref
+    # the preempted engines' in-flight replies were dropped, not applied
+    assert r["late_drops"] >= 1
+    # every cloud row back in the pool (release on preempt AND on finish)
+    assert sysm.cloud.cm.cloud_slots_free() == 3
+    b = r["batcher"]
+    if pre == "swap":
+        assert b["swaps"] >= 1
+    else:
+        assert b["restores"] >= 1
+
+
+def test_swap_out_flushes_queued_backfill_entries(tiny):
+    """Lazy-flush corner: a queued-but-uncomputed backfill entry has
+    consumed uploads (ring positions re-decode will never re-upload)
+    without writing their KV.  ``CloudBatcher.swap_out`` must flush
+    before snapshotting, or the resumed stream reads a gap where the
+    un-preempted run had KV."""
+    from repro.core.collm import CoLLM
+    from repro.core.content_manager import ContentManager
+    from repro.core.transport import StatePacket, quantize
+    from repro.serving.cloud_batcher import CloudBatcher
+
+    model, params = tiny["model"], tiny["params"]
+    collm = CoLLM(model, CollmConfig(theta=0.8, kv_layout="paged",
+                                     backfill=True, preemption="swap"))
+    cm = ContentManager()
+    batcher = CloudBatcher(collm, params, cm, num_slots=2, max_seq=40)
+    prompt = jnp.asarray(_prompts(1, 1, lo=8, hi=8)[0][None, :])
+    p_len = prompt.shape[1]
+    _, h1_seq, _ = collm.edge_prefill(params, {"tokens": prompt},
+                                      collm.init_edge_cache(1, p_len))
+    batcher.admit("edge-0", h1_seq, p_len, p_len + 8)
+
+    rng = np.random.RandomState(0)
+    d = model.cfg.d_model
+    for p in (p_len, p_len + 1):       # two early-exited positions pending
+        cm.upload("edge-0", p, StatePacket(
+            hidden=quantize(jnp.asarray(rng.randn(1, 1, d), jnp.float32),
+                            "float16")))
+    _, _, consumed = batcher.submit("edge-0", p_len + 1, backfill=True)
+    assert len(consumed) == 2 and batcher._pending    # queued, unflushed
+
+    snap = batcher.swap_out("edge-0")
+    assert not batcher._pending                       # flushed, not dropped
+    assert batcher.stats.steps >= 1
+    markers = set()
+
+    def collect(node):
+        if isinstance(node, dict):
+            if "kp" in node:
+                markers.update(np.asarray(node["pos"]).ravel().tolist())
+            else:
+                for v in node.values():
+                    collect(v)
+
+    collect(snap["pages"])
+    # the snapshot must carry the ring positions' KV markers
+    assert {p_len, p_len + 1} <= markers
+
+    batcher.swap_in("edge-0", snap)
+    slot = cm.cloud_slot("edge-0")
+    tbl = batcher.pool.block_table[slot]
+    assert (tbl >= 0).sum() == len(snap["logical"])   # pages re-bound
+
+
+def test_preempted_batcher_rows_not_leaked_across_runs(tiny):
+    """Two back-to-back preempting multi-runs on one system: the second
+    run re-acquires rows/pages cleanly (nothing leaked by run 1)."""
+    prompts = _prompts(9, 3, lo=8, hi=12)
+    sysm = _system(tiny, theta=0.8, kv_layout="paged",
+                   preemption="recompute")
+    outs = []
+    for _ in range(2):
+        chans = [ScriptedChannel([0.03], deadline_s=math.inf)
+                 for _ in range(3)]
+        r = sysm.generate_multi(prompts, 10, cloud_batch=True,
+                                channels=chans, tick_time_s=0.01,
+                                preempt_schedules=[[(3, 0)], [(5, 0)], None])
+        outs.append(r["tokens"])
+        assert sysm.cloud.cm.cloud_slots_free() == 3
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# PagePool allocator properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_pagepool_random_ops_invariants(seed):
+    """Random alloc/free/preempt sequences: no physical page is ever
+    double-allocated, ``free + in_use == num_pages`` holds after every
+    op, and the trash page is never handed out."""
+    rng = random.Random(seed)
+    num_pages = rng.randint(2, 12)
+    ps = rng.choice([4, 8, 16])
+    num_slots = rng.randint(1, 4)
+    max_logical = rng.randint(2, 8)
+    pool = PagePool(num_pages, ps, num_slots, max_logical,
+                    watermark=rng.randint(0, num_pages - 1))
+    owned = {s: set() for s in range(num_slots)}
+    for _ in range(rng.randint(10, 60)):
+        op = rng.random()
+        slot = rng.randrange(num_slots)
+        if op < 0.6:
+            lp = rng.randrange(max_logical)
+            before = pool.block_table[slot, lp]
+            try:
+                page = pool.alloc(slot, lp)
+            except OutOfPages:
+                assert pool.free_pages == 0
+                continue
+            assert page != TRASH_PAGE
+            if before == -1:
+                assert all(page not in o for o in owned.values())
+                owned[slot].add(page)
+            else:
+                assert page == before          # idempotent re-map
+        else:
+            freed = pool.free_slot(slot)
+            assert set(freed) == owned[slot]
+            owned[slot] = set()
+        # conservation + table/ledger agreement after every op
+        in_use = sum(len(o) for o in owned.values())
+        assert pool.free_pages + in_use == pool.num_pages
+        assert pool.pages_in_use() == in_use
+        for s in range(num_slots):
+            tbl = pool.block_table[s]
+            assert set(tbl[tbl >= 0].tolist()) == owned[s]
+            assert pool.owned_pages(s) == len(owned[s])
+    # full drain
+    for s in range(num_slots):
+        pool.free_slot(s)
+    assert pool.free_pages == pool.num_pages
+
+
+def test_select_victim_policies():
+    cands = [VictimCandidate(slot=0, admit_seq=5, owned_pages=3),
+             VictimCandidate(slot=1, admit_seq=2, owned_pages=1),
+             VictimCandidate(slot=2, admit_seq=9, owned_pages=2)]
+    assert select_victim(cands, "youngest") == 2      # max admit_seq
+    assert select_victim(cands, "fewest-pages") == 1  # min owned
+    assert select_victim(cands, "lru") == 1           # oldest arrival
+    # page-less slots free nothing and are never victims
+    starved = [VictimCandidate(slot=0, admit_seq=1, owned_pages=0)]
+    with pytest.raises(OutOfPages):
+        select_victim(starved, "youngest")
+    with pytest.raises(ValueError, match="policy"):
+        select_victim(cands, "coinflip")
+
+
+def test_swap_pool_roundtrip_accounting():
+    sp = SwapPool()
+    snap = {"a": np.zeros((4, 2), np.float32), "b": [np.ones(3, np.int32)]}
+    sp.put(0, snap)
+    assert len(sp) == 1 and 0 in sp
+    assert sp.stats.bytes_out == 4 * 2 * 4 + 3 * 4
+    with pytest.raises(KeyError):
+        sp.put(0, snap)                    # keys are single-use
+    got = sp.take(0)
+    assert got is snap and len(sp) == 0
+    assert sp.stats.held == 0
+
+
+def test_swapped_slot_cannot_read_stale_pages(tiny_ee_cfg):
+    """Regression: preempt stream A (swap out), give its pages to stream
+    B, resume A into different pages — A's gather sees exactly its own
+    K/V and positions, never B's, and vice versa."""
+    from repro.models.attention import init_paged_attn_cache, paged_gather, \
+        paged_scatter_prefill, paged_reset_pages
+    from repro.serving.cloud_batcher import GATHER_PAGES, WRITE_PAGES, \
+        _pad_pages
+
+    rng = np.random.RandomState(0)
+    ps, num_pages = 8, 4
+    pool = PagePool(num_pages, ps, 2, 4)
+    kvh, hd = tiny_ee_cfg.n_kv_heads, tiny_ee_cfg.resolved_head_dim
+    cache = init_paged_attn_cache(tiny_ee_cfg, num_pages, ps)
+
+    def row(n):
+        return {"k": jnp.asarray(rng.randn(1, n, kvh, hd), jnp.float32),
+                "v": jnp.asarray(rng.randn(1, n, kvh, hd), jnp.float32),
+                "pos": jnp.arange(n, dtype=jnp.int32)[None]}
+
+    len_a = 2 * ps                                   # A fills two pages
+    row_a = row(len_a)
+    pages_a = [pool.alloc(0, lp) for lp in range(2)]
+    cache = paged_scatter_prefill(cache, row_a, jnp.asarray(pages_a))
+
+    # preempt A: swap its pages to host, free + invalidate on device
+    phys = jnp.asarray(_pad_pages(np.asarray(pages_a, np.int32)))
+    snap = jax.device_get(GATHER_PAGES({0: cache}, phys))
+    freed = pool.free_slot(0)
+    cache = paged_reset_pages(cache, jnp.asarray(freed))
+
+    # B takes over (reuses A's physical pages)
+    len_b = ps + 3
+    row_b = row(len_b)
+    pages_b = [pool.alloc(1, lp) for lp in range(2)]
+    assert set(pages_b) == set(freed)
+    cache = paged_scatter_prefill(cache, row_b, jnp.asarray(pages_b))
+
+    # A resumes into the remaining pages (B keeps its own)
+    pages_a2 = [pool.alloc(0, lp) for lp in range(2)]
+    assert not set(pages_a2) & set(pages_b)
+    phys2 = jnp.asarray(_pad_pages(np.asarray(pages_a2, np.int32)))
+    cache = WRITE_PAGES({0: cache}, phys2, snap)[0]
+
+    for slot, rw, ln in ((0, row_a, len_a), (1, row_b, len_b)):
+        tbl = jnp.asarray(pool.block_table[slot:slot + 1, :2])
+        k, _, kpos = paged_gather(cache, tbl)
+        kpos = np.asarray(kpos[0])
+        valid = kpos >= 0
+        assert valid.sum() == ln
+        assert np.array_equal(np.sort(kpos[valid]), np.arange(ln))
+        np.testing.assert_array_equal(np.asarray(k[0])[valid],
+                                      np.asarray(rw["k"][0]))
+
+
+# ---------------------------------------------------------------------------
+# trained-model confidence pass (slow lane)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("pre", ["recompute", "swap"])
+def test_preemption_trained_model_equivalence(tiny_trained, pre):
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = [data.sample_tokens(n) for n in (8, 11, 9, 12, 10)]
+    dense = ServingSystem(model, params, CollmConfig(theta=0.8,
+                                                     kv_layout="paged"))
+    d = dense.generate(prompts, 14, mode="collm", num_slots=3)
+    sysp = ServingSystem(model, params, CollmConfig(
+        theta=0.8, kv_layout="paged", preemption=pre))
+    p = sysp.generate(prompts, 14, mode="collm", num_slots=3, num_pages=4)
+    assert p["tokens"] == d["tokens"]
+    sched = next(iter(sysp._schedulers.values()))
+    assert sched.preemptions > 0
+    assert sched.pool.free_pages == sched.pool.num_pages
