@@ -10,14 +10,46 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.decode_attn.ops import flash_decode
-from repro.kernels.decode_attn.ref import decode_attn_ref
+from repro.kernels.decode_attn.ops import flash_decode, flash_decode_paged
+from repro.kernels.decode_attn.ref import (decode_attn_paged_ref,
+                                           decode_attn_ref)
 from repro.kernels.exit_head.ops import exit_confidence
 from repro.kernels.exit_head.ref import exit_head_ref
+from repro.kernels.exit_quant.ops import exit_quant
+from repro.kernels.exit_quant.ref import exit_quant_ref
 from repro.kernels.quantize.ops import quantize_int8
 from repro.kernels.quantize.ref import quantize_int8_ref
 
 from benchmarks.common import time_call
+
+
+def _best_call(fn, *args, iters: int = 200) -> float:
+    """Best-of-N wall time (us): the de-noised statistic for dispatch-bound
+    calls, where the median on a shared runner drowns the effect."""
+    import time as _t
+    for _ in range(5):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = _t.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, _t.perf_counter() - t0)
+    return best * 1e6
+
+
+def _paged_pool(seed: int, num_pages: int, ps: int, kvh: int, d: int,
+                b: int, n_lp: int):
+    """Random fully-mapped page pool: every slot owns ``n_lp`` pages."""
+    rng = np.random.RandomState(seed)
+    P = num_pages + 1                                    # + trash page
+    kp = jnp.asarray(rng.randn(P, ps, kvh, d).astype(np.float32))
+    vp = jnp.asarray(rng.randn(P, ps, kvh, d).astype(np.float32))
+    tbl = jnp.asarray(1 + np.arange(b * n_lp).reshape(b, n_lp) % num_pages,
+                      jnp.int32)
+    # all rows valid (pos <= cur): the timing sweep measures the full read
+    pos = jnp.broadcast_to(jnp.arange(ps)[None], (P, ps)).astype(jnp.int32)
+    cur = jnp.full((b,), n_lp * ps - 1, jnp.int32)
+    return kp, vp, pos, tbl, cur
 
 
 def run(csv=True):
@@ -62,12 +94,93 @@ def run(csv=True):
                      "derived_gbps": round(n * d * 4 / us / 1e3, 2),
                      "path": "kernel" if on_tpu else "ref(jit)"})
 
+    # paged flash decode, float32 vs int8 pages: same logical cache, the
+    # int8 pool's HBM column shrinks ~4x (int8 data + fp32 per-row scale)
+    for b, h_, kv, d, ps, n_lp in [(4, 8, 2, 128, 64, 16)]:
+        num_pages = b * n_lp
+        kp, vp, pos, tbl, cur = _paged_pool(5, num_pages, ps, kv, d, b, n_lp)
+        q = jax.random.normal(rng, (b, h_, d))
+        s = n_lp * ps
+        f32_bytes = 2 * b * s * kv * d * 4          # K+V read per call
+        ref = jax.jit(decode_attn_paged_ref)
+        us = time_call(ref, q, kp, vp, pos, tbl, cur, iters=10)
+        rows.append({"name": f"decode_attn_paged_f32_b{b}_s{s}",
+                     "us_per_call": round(us, 1),
+                     "hbm_bytes": f32_bytes,
+                     "derived_gbps": round(f32_bytes / us / 1e3, 2),
+                     "path": "kernel" if on_tpu else "ref(jit)"})
+        qk, sk = quantize_int8_ref(kp.reshape(-1, d))
+        qv, sv = quantize_int8_ref(vp.reshape(-1, d))
+        qk = qk.reshape(kp.shape)
+        sk = sk.reshape(kp.shape[:3])
+        qv = qv.reshape(vp.shape)
+        sv = sv.reshape(vp.shape[:3])
+        i8_bytes = 2 * b * s * kv * (d * 1 + 4)     # int8 data + fp32 scale
+        refq = jax.jit(lambda *a: decode_attn_paged_ref(
+            *a[:6], k_scale=a[6], v_scale=a[7]))
+        us = time_call(refq, q, qk, qv, pos, tbl, cur, sk, sv, iters=10)
+        rows.append({"name": f"decode_attn_paged_int8_b{b}_s{s}",
+                     "us_per_call": round(us, 1),
+                     "hbm_bytes": i8_bytes,
+                     "derived_gbps": round(i8_bytes / us / 1e3, 2),
+                     "path": "kernel" if on_tpu else "ref(jit)"})
+
+    # fused exit-head + quantize vs the two-launch baseline it replaces:
+    # both passes read the same (B, d) hidden; the fusion saves one
+    # dispatch and one HBM re-read of the hidden tile.  Timed at the
+    # serving hot-path shape (a handful of decode slots x one token), where
+    # the per-dispatch overhead the fusion removes is the dominant cost —
+    # and with best-of-N timing, since median wall-clock on a shared CPU
+    # runner is too noisy to resolve a dispatch
+    for b, d, v in [(8, 128, 256)]:
+        h = jax.random.normal(rng, (b, d))
+        w = jax.random.normal(jax.random.PRNGKey(6), (v, d)) * 0.02
+        ns = jnp.zeros((d,))
+        hbm = b * d * 4 + v * d * 4 + b * d         # hidden + W + int8 out
+        fused = jax.jit(exit_quant_ref)
+        us_f = _best_call(fused, h, w, ns)
+        eh = jax.jit(exit_head_ref)
+        qz = jax.jit(quantize_int8_ref)
+        two = lambda h_, w_, ns_: (eh(h_, w_, ns_), qz(h_))
+        us_2 = _best_call(two, h, w, ns)
+        rows.append({"name": f"exit_quant_fused_b{b}_d{d}_v{v}",
+                     "us_per_call": round(us_f, 1), "hbm_bytes": hbm,
+                     "derived_gbps": round(hbm / us_f / 1e3, 2),
+                     "path": "kernel" if on_tpu else "ref(jit)"})
+        rows.append({"name": f"exit_quant_twolaunch_b{b}_d{d}_v{v}",
+                     "us_per_call": round(us_2, 1),
+                     "hbm_bytes": hbm + b * d * 4,  # hidden read twice
+                     "derived_gbps": round((hbm + b * d * 4) / us_2 / 1e3, 2),
+                     "path": "ref(jit) x2"})
+        assert us_f <= us_2, (
+            f"fused exit_quant ({us_f:.1f}us) should beat the two-launch "
+            f"baseline ({us_2:.1f}us) at b={b} d={d} v={v}")
+
     # correctness cross-check (kernel interpret vs ref) on reduced shapes
     h = jax.random.normal(rng, (8, 128))
     w = jax.random.normal(jax.random.PRNGKey(4), (1024, 128)) * 0.05
     c1, t1, _ = exit_confidence(h, w, jnp.zeros(128), block_v=256)
     c2, t2, _ = exit_head_ref(h, w, jnp.zeros(128))
     assert bool(jnp.all(t1 == t2)) and float(jnp.max(jnp.abs(c1 - c2))) < 1e-5
+    cf, tf, _, qf, sf = exit_quant(h, w, jnp.zeros(128), block_v=256,
+                                   interpret=True)
+    cr, tr, _, qr, sr = exit_quant_ref(h, w, jnp.zeros(128))
+    assert bool(jnp.all(tf == tr)) and bool(jnp.all(qf == qr))
+    assert float(jnp.max(jnp.abs(cf - cr))) < 1e-5
+    kp, vp, pos, tbl, cur = _paged_pool(7, 8, 8, 2, 32, 2, 4)
+    qsm = jax.random.normal(rng, (2, 4, 32))
+    o_k = flash_decode_paged(qsm, kp, vp, pos, tbl, cur, interpret=True)
+    o_r = decode_attn_paged_ref(qsm, kp, vp, pos, tbl, cur)
+    assert float(jnp.max(jnp.abs(o_k - o_r))) < 2e-5
+    qk, sk = quantize_int8_ref(kp.reshape(-1, 32))
+    qv, sv = quantize_int8_ref(vp.reshape(-1, 32))
+    qk, sk = qk.reshape(kp.shape), sk.reshape(kp.shape[:3])
+    qv, sv = qv.reshape(vp.shape), sv.reshape(vp.shape[:3])
+    o_k8 = flash_decode_paged(qsm, qk, qv, pos, tbl, cur, k_scale=sk,
+                              v_scale=sv, interpret=True)
+    o_r8 = decode_attn_paged_ref(qsm, qk, qv, pos, tbl, cur, k_scale=sk,
+                                 v_scale=sv)
+    assert float(jnp.max(jnp.abs(o_k8 - o_r8))) < 2e-5
     rows.append({"name": "kernel_vs_ref_allclose", "us_per_call": 0,
                  "derived": "pass"})
     if csv:

@@ -6,8 +6,13 @@ Measures aggregate decode tokens/s on the tiny trained EE model for slot
 counts 1/4/8/16 against the sequential baseline (same request set), in
 co-inference mode at θ=0.8.  The acceptance bar for the batching PR is
 >= 3x aggregate tokens/s at 8 slots.  ``--kv-layout paged`` (or ``both``)
-additionally reports tokens/s and pooled-KV bytes per layout at 8/16
-slots (see docs/kv_paging.md).
+additionally reports tokens/s, pooled-KV bytes, achieved decode KV HBM
+bytes/token and the achieved-vs-roofline HBM fraction per layout at 8/16
+slots (see docs/kv_paging.md); ``--kv-dtype int8`` adds the quantized
+page pool, and with ``--check`` asserts the int8 pool cuts decode KV HBM
+bytes/token >= 1.8x vs float32 at 8 slots, that paged float32 stays
+token-identical to dense, and that the int8 exit-rate drift is bounded.
+Every sweep row is also written to ``--json`` (BENCH_throughput.json).
 
 ``--channel sim`` runs the async-transport comparison instead
 (docs/async_transport.md): the same WiFi-class ``AsyncSimChannel`` priced
@@ -33,13 +38,17 @@ token-identical streams to N independent sync runs.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
+import jax
 import numpy as np
 
 from repro.core.collm import CollmConfig
 from repro.core.transport import (AsyncSimChannel, CloudServicePoint,
                                   ScriptedChannel)
+from repro.roofline.analyze import (decode_kv_bytes_per_token,
+                                    hbm_roofline_fraction)
 from repro.serving.engine import ServingSystem
 
 from benchmarks.common import PAPER_NET, tiny_trained_model
@@ -61,11 +70,13 @@ def _tokens_per_s(fn, total_tokens: int, repeats: int) -> float:
 
 
 def run(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
-        theta: float = 0.8, repeats: int = 1, check: bool = False) -> dict:
+        theta: float = 0.8, repeats: int = 1, check: bool = False,
+        rows: list = None) -> dict:
     tiny = tiny_trained_model()
     model, params, data = tiny["model"], tiny["params"], tiny["data"]
     prompts = _requests(data, n_clients)
     total = n_clients * max_new
+    mean_ctx = float(np.mean([len(p) for p in prompts])) + max_new / 2.0
     ccfg = CollmConfig(theta=theta)
 
     # both engines are warmed with the SAME shapes they are measured at
@@ -89,6 +100,17 @@ def run(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
             lambda: sys_b.generate(prompts, max_new, mode="collm",
                                    num_slots=slots), total, repeats)
         out[slots] = tps
+        if rows is not None:
+            sched = max(sys_b._schedulers.values(),
+                        key=lambda s: s.kv_cache_bytes())
+            bpt = _kv_bytes_per_token(sched, mean_ctx)
+            rows.append({"layout": "dense", "kv_dtype": "float32",
+                         "slots": slots, "clients": n_clients,
+                         "max_new": max_new, "tokens_per_s": tps,
+                         "kv_bytes": sched.kv_cache_bytes(),
+                         "kv_bytes_per_token": bpt,
+                         "hbm_roofline_frac":
+                             hbm_roofline_fraction(bpt, tps)})
         print(f"batched,{slots},{n_clients},{max_new},{tps:.1f},"
               f"{tps / seq_tps:.2f}")
 
@@ -102,33 +124,120 @@ def run(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
 
 
 PAGED_SLOT_COUNTS = (8, 16)
+# |exit_rate(int8) - exit_rate(float32)| accuracy gate for the paged sweep:
+# int8 KV perturbs logits near θ, so a few borderline tokens may flip which
+# tier emits them — the gate bounds that drift (docs/kv_paging.md
+# §Quantized pages), it does not demand bit-identical streams.
+INT8_EXIT_DRIFT = 0.15
+# int8 pages must cut the decode KV sweep by at least this factor; the
+# analytic ratio for this model is ~3.4x (int8 data + fp32 per-row scales
+# vs fp32 data), so 1.8x has headroom without being vacuous
+INT8_BYTES_RATIO = 1.8
+
+
+def _kv_bytes_per_token(sched, mean_ctx: float) -> int:
+    """Achieved decode-step KV HBM bytes/token for one scheduler: paged
+    layouts read the mapped pages of the mean-context slot (+ write one
+    row); dense rings sweep the full per-slot ring regardless of context
+    (the masked attention reads every slot)."""
+    trees = [c for n in ("main_caches", "edge_caches", "cloud_caches")
+             if (c := getattr(sched, n, None)) is not None]
+    if sched.layout == "paged":
+        return sum(decode_kv_bytes_per_token(t, int(mean_ctx),
+                                             sched.pool.page_size)
+                   for t in trees)
+    total = sum(l.size * l.dtype.itemsize
+                for t in trees for l in jax.tree.leaves(t))
+    return total // sched.B
+
+
+def _exit_rate(r: dict, total: int) -> float:
+    st = r["stats"]
+    return (st.exits_l1 + st.exits_l2) / total
 
 
 def run_paged(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
-              theta: float = 0.8, repeats: int = 1) -> dict:
-    """Dense vs. block-paged KV at 8/16 slots: aggregate decode tokens/s
-    and pooled-KV device bytes per layout (the paged pool is sized to the
-    dense-equivalent page count, so the bytes column isolates layout
-    overhead; shrinking ``num_pages`` below that is the memory win)."""
+              theta: float = 0.8, repeats: int = 1,
+              kv_dtype: str = "float32", check: bool = False,
+              rows: list = None) -> dict:
+    """Dense vs. block-paged KV at 8/16 slots: aggregate decode tokens/s,
+    pooled-KV device bytes, achieved decode KV HBM bytes/token, and the
+    achieved-vs-roofline HBM fraction per (layout, kv_dtype).
+
+    ``--kv-dtype int8`` (or ``both``) adds the int8 paged pool next to the
+    float32 one.  With ``--check``:
+
+      * paged float32 streams must be greedy token-identical to dense;
+      * int8 paged KV must cut decode HBM bytes/token by >=
+        ``INT8_BYTES_RATIO`` vs float32 paged at 8 slots;
+      * the int8 exit-rate drift vs float32 stays within
+        ``INT8_EXIT_DRIFT`` (bounded accuracy gate, not bit-identity)."""
     tiny = tiny_trained_model()
     model, params, data = tiny["model"], tiny["params"], tiny["data"]
     prompts = _requests(data, n_clients)
     total = n_clients * max_new
+    mean_ctx = float(np.mean([len(p) for p in prompts])) + max_new / 2.0
+    variants = [("dense", "float32"), ("paged", "float32")]
+    if kv_dtype in ("int8", "both"):
+        variants.append(("paged", "int8"))
     out: dict = {}
-    print("layout,slots,clients,max_new,tokens_per_s,kv_bytes")
-    for layout in ("dense", "paged"):
-        ccfg = CollmConfig(theta=theta, kv_layout=layout)
+    print("layout,kv_dtype,slots,clients,max_new,tokens_per_s,kv_bytes,"
+          "kv_bytes_per_token,hbm_roofline_frac,exit_rate")
+    for layout, dtype in variants:
+        ccfg = CollmConfig(theta=theta, kv_layout=layout,
+                           kv_dtype=dtype if layout == "paged" else "float32")
         for slots in PAGED_SLOT_COUNTS:
             sys_b = ServingSystem(model, params, ccfg)
             sys_b.generate(prompts[:slots], max_new, num_slots=slots)  # warm
-            tps = _tokens_per_s(
-                lambda: sys_b.generate(prompts, max_new, mode="collm",
-                                       num_slots=slots), total, repeats)
-            kv_bytes = max(s.kv_cache_bytes()
-                           for s in sys_b._schedulers.values())
-            out[(layout, slots)] = {"tokens_per_s": tps, "kv_bytes": kv_bytes}
-            print(f"{layout},{slots},{n_clients},{max_new},{tps:.1f},"
-                  f"{kv_bytes}")
+            res = {}
+            def go():
+                res["r"] = sys_b.generate(prompts, max_new, mode="collm",
+                                          num_slots=slots)
+            tps = _tokens_per_s(go, total, repeats)
+            r = res["r"]
+            sched = max(sys_b._schedulers.values(),
+                        key=lambda s: s.kv_cache_bytes())
+            kv_bytes = sched.kv_cache_bytes()
+            bpt = _kv_bytes_per_token(sched, mean_ctx)
+            frac = hbm_roofline_fraction(bpt, tps)
+            row = {"layout": layout, "kv_dtype": dtype, "slots": slots,
+                   "clients": n_clients, "max_new": max_new,
+                   "tokens_per_s": tps, "kv_bytes": kv_bytes,
+                   "kv_bytes_per_token": bpt, "hbm_roofline_frac": frac,
+                   "exit_rate": _exit_rate(r, total)}
+            out[(layout, dtype, slots)] = dict(row, tokens=r["tokens"])
+            if rows is not None:
+                rows.append(row)
+            print(f"{layout},{dtype},{slots},{n_clients},{max_new},"
+                  f"{tps:.1f},{kv_bytes},{bpt},{frac:.3e},"
+                  f"{row['exit_rate']:.3f}")
+
+    if check:
+        for slots in PAGED_SLOT_COUNTS:
+            d, p = out[("dense", "float32", slots)], \
+                out[("paged", "float32", slots)]
+            assert p["tokens"] == d["tokens"], (
+                f"paged float32 streams must be greedy token-identical to "
+                f"dense at {slots} slots")
+        if ("paged", "int8", 8) in out:
+            f32, i8 = out[("paged", "float32", 8)], out[("paged", "int8", 8)]
+            ratio = f32["kv_bytes_per_token"] / i8["kv_bytes_per_token"]
+            assert ratio >= INT8_BYTES_RATIO, (
+                f"int8 paged KV cuts decode HBM bytes/token only "
+                f"{ratio:.2f}x vs float32 at 8 slots "
+                f"(gate: {INT8_BYTES_RATIO}x)")
+            for slots in PAGED_SLOT_COUNTS:
+                drift = abs(out[("paged", "int8", slots)]["exit_rate"]
+                            - out[("paged", "float32", slots)]["exit_rate"])
+                assert drift <= INT8_EXIT_DRIFT, (
+                    f"int8 exit-rate drift {drift:.3f} at {slots} slots "
+                    f"exceeds the {INT8_EXIT_DRIFT} accuracy gate")
+            print(f"# check passed: paged f32 token-identical to dense; "
+                  f"int8 bytes/token ratio {ratio:.2f}x >= "
+                  f"{INT8_BYTES_RATIO}x; exit-rate drift within "
+                  f"{INT8_EXIT_DRIFT}")
+        else:
+            print("# check passed: paged f32 token-identical to dense")
     return out
 
 
@@ -368,6 +477,13 @@ def main() -> None:
     ap.add_argument("--kv-layout", choices=("dense", "paged", "both"),
                     default="dense",
                     help="paged/both: compare KV layouts at 8/16 slots")
+    ap.add_argument("--kv-dtype", choices=("float32", "int8", "both"),
+                    default="float32",
+                    help="int8/both: add the int8 paged pool to the layout "
+                         "sweep (bytes/token + accuracy gates with --check)")
+    ap.add_argument("--json", default="BENCH_throughput.json",
+                    help="machine-readable output of the slot/layout/dtype "
+                         "sweeps (written by the sync + paged paths)")
     ap.add_argument("--channel", choices=("sync", "sim"), default="sync",
                     help="sim: async-transport comparison (overlap vs "
                          "blocking + deadline-miss trace) instead of the "
@@ -392,12 +508,18 @@ def main() -> None:
         run_channel(n_clients=args.clients, max_new=args.max_new,
                     theta=args.theta, check=args.check)
         return
+    rows: list = []
     if args.kv_layout in ("dense", "both"):
         run(n_clients=args.clients, max_new=args.max_new, theta=args.theta,
-            repeats=args.repeats, check=args.check)
+            repeats=args.repeats, check=args.check, rows=rows)
     if args.kv_layout in ("paged", "both"):
         run_paged(n_clients=args.clients, max_new=args.max_new,
-                  theta=args.theta, repeats=args.repeats)
+                  theta=args.theta, repeats=args.repeats,
+                  kv_dtype=args.kv_dtype, check=args.check, rows=rows)
+    if rows:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
 
 
 if __name__ == "__main__":

@@ -71,6 +71,17 @@ class CollmConfig:
     # page slot whose pos marker was never written.
     kv_layout: str = "dense"
     page_size: int = 16               # tokens per KV page (paged layout)
+    # Storage dtype of the paged KV pool.  "int8" quantizes K/V per
+    # page-row on write (one absmax scale per (token, kv_head) row, the
+    # transport quantizer's scaling) and dequantizes at gather — in-kernel
+    # for the Pallas paged flash-decode, so int8 pages cut decode HBM
+    # traffic instead of being expanded in XLA first.  Swap snapshots and
+    # admission scatters carry the quantized pages + scales verbatim, so
+    # preemption swap bytes shrink by the same factor.  float32 stays
+    # bit-identical to the dense layout; int8 trades bounded quantization
+    # error (see docs/kv_paging.md §Quantized pages) for ~3.4x less KV
+    # traffic.  Only meaningful with kv_layout="paged".
+    kv_dtype: str = "float32"         # "float32" | "int8"
     # Paged-KV preemption (docs/kv_paging.md §Preemption).  "off" keeps the
     # conservative worst-case admission check (a stream admitted under
     # backpressure can always finish, but the pool is sized for worst
@@ -108,6 +119,12 @@ class CoLLM:
         cfg = model.cfg
         if len(cfg.exit_layers) < 1:
             raise ValueError("CE-CoLLM requires at least one exit layer")
+        if ccfg.kv_dtype not in ("float32", "int8"):
+            raise ValueError(f"kv_dtype must be 'float32' or 'int8', "
+                             f"got {ccfg.kv_dtype!r}")
+        if ccfg.kv_dtype == "int8" and ccfg.kv_layout != "paged":
+            raise ValueError('kv_dtype="int8" requires kv_layout="paged" '
+                             "(dense rings stay full precision)")
         self.model = model
         self.ccfg = ccfg
         self.l_ee1 = cfg.exit_layers[0]
@@ -132,12 +149,14 @@ class CoLLM:
     def init_edge_cache_paged(self, batch: int, num_pages: int,
                               page_size: int, dtype=None):
         return self.model.init_paged_cache(batch, num_pages, page_size,
-                                           self.edge_segs, dtype=dtype)
+                                           self.edge_segs, dtype=dtype,
+                                           kv_dtype=self.ccfg.kv_dtype)
 
     def init_cloud_cache_paged(self, batch: int, num_pages: int,
                                page_size: int, dtype=None):
         return self.model.init_paged_cache(batch, num_pages, page_size,
-                                           self.cloud_segs, dtype=dtype)
+                                           self.cloud_segs, dtype=dtype,
+                                           kv_dtype=self.ccfg.kv_dtype)
 
     # ------------------------------------------------------------------
     # prefill (prompt processing)
@@ -229,6 +248,30 @@ class CoLLM:
         tok, exited, _ = first_confident_exit(decisions, self.ccfg.theta)
         upload = quantize(exit_h[self.l_ee1], self.ccfg.wire_format)
         return EdgeStepOut(decisions, tok, exited, upload, new_caches)
+
+    def fused_exit_upload(self, params: Params, hidden: jax.Array, *,
+                          interpret: Optional[bool] = None,
+                          use_kernel: bool = True):
+        """TPU hot path for the l_ee1 exit + upload: ONE Pallas launch
+        (``kernels/exit_quant``) over the hidden tile computes the exit
+        decision (confidence + argmax token) AND the int8 wire packet,
+        replacing the two-launch exit_logits -> evaluate_exit -> quantize
+        sequence of ``edge_step`` when ``wire_format="int8"``.
+
+        ``hidden``: (B, 1, d) or (B, d).  Returns (confidence (B,),
+        token (B,), packet) where ``packet`` has exactly the layout of
+        ``transport.quantize(hidden, "int8")`` — the cloud opens it with
+        the unmodified ``dequantize``."""
+        from repro.kernels.exit_quant.ops import exit_quant
+        shape = hidden.shape
+        h2 = hidden.reshape(shape[0], shape[-1])
+        conf, tok, _, q, s = exit_quant(
+            h2, self.model.unembed_weight(params),
+            params["exit_norms"][str(self.l_ee1)],
+            eps=self.model.cfg.norm_eps, interpret=interpret,
+            use_kernel=use_kernel)
+        return conf, tok, {"data": q.reshape(shape),
+                           "scale": s.reshape(shape[:-1] + (1,))}
 
     def cloud_step(self, params: Params, upload: Dict[str, jax.Array],
                    caches: Dict[int, Pytree], pos: jax.Array,

@@ -84,6 +84,34 @@ def packet_bytes(packet: Pytree) -> int:
     return int(sum(l.size * l.dtype.itemsize for l in leaves))
 
 
+def packet_breakdown(packet: Pytree) -> Dict[str, int]:
+    """Wire bytes of a (possibly nested) packet split by role:
+    ``{"data": ..., "scale": ...}``.
+
+    Every int8 leaf packet is a ``{"data", "scale"}`` dict, so a recurrent
+    ``states`` tree quantized with ``quantize_tree`` carries one fp32
+    scale tensor PER LEAF — those scales are real wire bytes and must be
+    billed per-leaf, not assumed amortized into the data payload.  Keyed
+    dicts are walked explicitly (``jax.tree.leaves`` would flatten the
+    roles away)."""
+    out = {"data": 0, "scale": 0}
+
+    def walk(node):
+        if isinstance(node, dict) and "data" in node:
+            for key, leaf in node.items():
+                role = "scale" if key == "scale" else "data"
+                out[role] += int(leaf.size * leaf.dtype.itemsize)
+            return
+        for child in (node.values() if isinstance(node, dict) else
+                      node if isinstance(node, (list, tuple)) else ()):
+            walk(child)
+        if not isinstance(node, (dict, list, tuple)):
+            out["data"] += int(node.size * node.dtype.itemsize)
+
+    walk(packet)
+    return out
+
+
 def quantize_tree(tree: Pytree, fmt: str) -> Pytree:
     """Quantize every array leaf of a state snapshot."""
     return jax.tree.map(lambda x: quantize(x, fmt), tree)
@@ -105,15 +133,27 @@ class StatePacket:
     pos: Optional[jax.Array] = None                # token position
 
     def nbytes(self) -> int:
-        n = packet_bytes(self.hidden)
+        return sum(self.wire_breakdown().values())
+
+    def wire_breakdown(self) -> Dict[str, int]:
+        """Wire bytes split into ``{"data", "scale", "pos"}``.
+
+        ``scale`` bills every per-leaf fp32 scale tensor of int8 packets
+        explicitly — for an SSM/hybrid ``states`` tree each quantized leaf
+        carries its own scale, and those add up (a (B,1,d) hidden has one
+        (B,1,1) scale, but a states tree with K leaves has K of them).
+        ``nbytes`` is the sum, so total billing can never drift from the
+        audited breakdown."""
+        bd = packet_breakdown(self.hidden)
         if self.states is not None:
-            n += packet_bytes(self.states)
-        if self.pos is not None:
-            # positions go over the wire as int32 — one per row.  A batched
-            # upload carries a (B,) position vector and must bill all B
-            # entries, not a flat 4 bytes.
-            n += 4 * int(np.asarray(self.pos).size)
-        return n
+            sbd = packet_breakdown(self.states)
+            bd = {k: bd[k] + sbd[k] for k in bd}
+        # positions go over the wire as int32 — one per row.  A batched
+        # upload carries a (B,) position vector and must bill all B
+        # entries, not a flat 4 bytes.
+        bd["pos"] = (4 * int(np.asarray(self.pos).size)
+                     if self.pos is not None else 0)
+        return bd
 
 
 def make_packet(hidden: jax.Array, fmt: str, *, states: Pytree = None,

@@ -113,9 +113,14 @@ def decode_attn_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(b, h, d)
 
 
-def _decode_attn_paged_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, cur_ref,
-                              o_ref, acc_scr, m_scr, l_scr, *, n_lp: int,
-                              window: int, scale: float):
+def _decode_attn_paged_kernel(tbl_ref, q_ref, k_ref, v_ref, *rest,
+                              n_lp: int, window: int, scale: float,
+                              quantized: bool = False):
+    if quantized:
+        (ks_ref, vs_ref, pos_ref, cur_ref, o_ref,
+         acc_scr, m_scr, l_scr) = rest
+    else:
+        pos_ref, cur_ref, o_ref, acc_scr, m_scr, l_scr = rest
     bi = pl.program_id(0)
     pi = pl.program_id(2)
 
@@ -128,6 +133,12 @@ def _decode_attn_paged_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, cur_ref,
     q = q_ref[0, 0].astype(jnp.float32)            # (G, d)
     k = k_ref[0, :, 0, :].astype(jnp.float32)      # (ps, d)
     v = v_ref[0, :, 0, :].astype(jnp.float32)      # (ps, d)
+    if quantized:
+        # int8 pages: dequantize in-VMEM with the per-row absmax scales
+        # that rode in next to the block-table-indexed page DMA.  HBM
+        # traffic for this tile is ps*d int8 + ps fp32, not ps*d fp32.
+        k = k * ks_ref[0, :, 0][:, None]           # (ps, d)
+        v = v * vs_ref[0, :, 0][:, None]
     pos = pos_ref[0]                               # (ps,)
     cur = cur_ref[0]
     mapped = tbl_ref[bi, pi] >= 0                  # unallocated -> all invalid
@@ -159,14 +170,20 @@ def _decode_attn_paged_kernel(tbl_ref, q_ref, k_ref, v_ref, pos_ref, cur_ref,
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def decode_attn_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
                              pos_pages: jax.Array, block_tbl: jax.Array,
-                             cur_pos: jax.Array, *, window: int = 0,
+                             cur_pos: jax.Array, *, k_scale=None,
+                             v_scale=None, window: int = 0,
                              interpret: bool = True) -> jax.Array:
     """q: (B,H,d); kp/vp: (P,page_size,KV,d); pos_pages: (P,page_size);
     block_tbl: (B,n_lp) int32 (-1 = unallocated); cur_pos: scalar or (B,).
 
     The KV tile of grid point (b, k, pi) is DMA'd from physical page
     ``block_tbl[b, pi]`` via scalar-prefetch index maps; unmapped pages
-    read page 0 and are masked out."""
+    read page 0 and are masked out.
+
+    With int8 pages, pass ``k_scale``/``v_scale`` (P,page_size,KV) fp32:
+    the per-row absmax scales ride through the SAME block-table index maps
+    as the pages and dequantization happens in-kernel, after the DMA — the
+    HBM read per token shrinks ~4x instead of being re-expanded in XLA."""
     b, h, d = q.shape
     kvh, ps = kp.shape[2], kp.shape[1]
     n_lp = block_tbl.shape[1]
@@ -174,26 +191,40 @@ def decode_attn_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
     qg = q.reshape(b, kvh, g, d)
     cur = jnp.broadcast_to(jnp.asarray(cur_pos, jnp.int32), (b,))
     tbl = block_tbl.astype(jnp.int32)
+    quantized = k_scale is not None
 
     def page_map(bi, ki, pi, tbl_ref):
         return (jnp.maximum(tbl_ref[bi, pi], 0), 0, ki, 0)
+
+    def scale_map(bi, ki, pi, tbl_ref):
+        return (jnp.maximum(tbl_ref[bi, pi], 0), 0, ki)
 
     def pos_map(bi, ki, pi, tbl_ref):
         return (jnp.maximum(tbl_ref[bi, pi], 0), 0)
 
     kernel = functools.partial(_decode_attn_paged_kernel, n_lp=n_lp,
-                               window=window, scale=1.0 / math.sqrt(d))
+                               window=window, scale=1.0 / math.sqrt(d),
+                               quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d),
+                     lambda bi, ki, pi, tbl_ref: (bi, ki, 0, 0)),
+        pl.BlockSpec((1, ps, 1, d), page_map),
+        pl.BlockSpec((1, ps, 1, d), page_map),
+    ]
+    operands = [qg, kp, vp]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, ps, 1), scale_map),
+                     pl.BlockSpec((1, ps, 1), scale_map)]
+        operands += [k_scale, v_scale]
+    in_specs += [
+        pl.BlockSpec((1, ps), pos_map),
+        pl.BlockSpec((1,), lambda bi, ki, pi, tbl_ref: (bi,)),
+    ]
+    operands += [pos_pages, cur]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, kvh, n_lp),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda bi, ki, pi, tbl_ref: (bi, ki, 0, 0)),
-            pl.BlockSpec((1, ps, 1, d), page_map),
-            pl.BlockSpec((1, ps, 1, d), page_map),
-            pl.BlockSpec((1, ps), pos_map),
-            pl.BlockSpec((1,), lambda bi, ki, pi, tbl_ref: (bi,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d),
                                lambda bi, ki, pi, tbl_ref: (bi, ki, 0, 0)),
         scratch_shapes=[
@@ -207,5 +238,5 @@ def decode_attn_paged_pallas(q: jax.Array, kp: jax.Array, vp: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, d), q.dtype),
         interpret=interpret,
-    )(tbl, qg, kp, vp, pos_pages, cur)
+    )(tbl, *operands)
     return out.reshape(b, h, d)

@@ -30,16 +30,23 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def flash_decode_paged(q: jax.Array, kp: jax.Array, vp: jax.Array,
                        pos_pages: jax.Array, block_tbl: jax.Array, cur_pos,
-                       *, window: int = 0, interpret: bool = None,
+                       *, k_scale=None, v_scale=None, window: int = 0,
+                       interpret: bool = None,
                        use_kernel: bool = True) -> jax.Array:
     """q: (B,H,d) one new token; kp/vp: (P,page_size,KV,d) page pool;
     block_tbl: (B,n_lp) per-row physical page ids -> (B,H,d).  The Pallas
     path DMAs one physical page per grid step through a scalar-prefetched
-    block table (block size = page_size)."""
+    block table (block size = page_size).
+
+    int8 pools pass ``k_scale``/``v_scale`` (P,page_size,KV) fp32 per-row
+    scales; dequantization then happens inside the kernel, after the page
+    DMA, so the HBM read stays int8-sized."""
     if interpret is None:
         interpret = _default_interpret()
     if not use_kernel:
         return decode_attn_paged_ref(q, kp, vp, pos_pages, block_tbl,
-                                     cur_pos, window=window)
+                                     cur_pos, window=window,
+                                     k_scale=k_scale, v_scale=v_scale)
     return decode_attn_paged_pallas(q, kp, vp, pos_pages, block_tbl, cur_pos,
+                                    k_scale=k_scale, v_scale=v_scale,
                                     window=window, interpret=interpret)

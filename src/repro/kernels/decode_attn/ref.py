@@ -33,21 +33,32 @@ def decode_attn_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def decode_attn_paged_ref(q: jax.Array, kp: jax.Array, vp: jax.Array,
                           pos_pages: jax.Array, block_tbl: jax.Array,
-                          cur_pos: jax.Array, window: int = 0) -> jax.Array:
+                          cur_pos: jax.Array, window: int = 0, *,
+                          k_scale: jax.Array = None,
+                          v_scale: jax.Array = None) -> jax.Array:
     """q: (B,H,d); kp/vp: (P,page,KV,d) physical pages; pos_pages: (P,page)
     (-1 = empty slot); block_tbl: (B,n_lp) physical page ids (-1 =
     unallocated); cur_pos: scalar or per-row (B,) int.  Returns (B,H,d).
 
     Gathers the logical K/V view through the block table (unmapped pages
     read page 0, masked via pos = -1), then the attention itself IS the
-    ring oracle — one masked-softmax implementation for both layouts."""
+    ring oracle — one masked-softmax implementation for both layouts.
+
+    For int8 pages, ``k_scale``/``v_scale`` (P,page,KV) fp32 dequantize the
+    gathered view (materialized here; the Pallas kernel dequantizes
+    in-VMEM instead)."""
     b = q.shape[0]
     kvh, ps = kp.shape[2], kp.shape[1]
     n_lp = block_tbl.shape[1]
     d = kp.shape[3]
     phys = jnp.where(block_tbl >= 0, block_tbl, 0)
-    k = kp[phys].reshape(b, n_lp * ps, kvh, d)
-    v = vp[phys].reshape(b, n_lp * ps, kvh, d)
+    k = kp[phys]
+    v = vp[phys]
+    if k_scale is not None:
+        k = k.astype(jnp.float32) * k_scale[phys][..., None]
+        v = v.astype(jnp.float32) * v_scale[phys][..., None]
+    k = k.reshape(b, n_lp * ps, kvh, d)
+    v = v.reshape(b, n_lp * ps, kvh, d)
     pos = jnp.where(block_tbl[:, :, None] >= 0, pos_pages[phys],
                     -1).reshape(b, n_lp * ps)
     return decode_attn_ref(q, k, v, pos, cur_pos, window=window)

@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the fused exit-head + quantize kernel.
+
+On CPU (this container) the kernel runs in interpret mode; on TPU set
+``interpret=False`` (default resolves from the backend)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.exit_quant.kernel import exit_quant_pallas
+from repro.kernels.exit_quant.ref import exit_quant_ref
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def exit_quant(hidden: jax.Array, weight: jax.Array, norm_scale: jax.Array,
+               *, block_b: int = 8, block_v: int = 512, eps: float = 1e-5,
+               interpret: bool = None, use_kernel: bool = True):
+    """(B,d) hidden + (V,d) unembedding ->
+    (confidence, token, logsumexp, q int8 (B,d), scale fp32 (B,1)).
+
+    One launch for the below-θ hot path: the exit decision AND the int8
+    wire packet of the same hidden tile.  Falls back to the jnp oracle for
+    shapes the kernel's tiling cannot cover evenly (the oracle IS the
+    reference semantics)."""
+    b, d = hidden.shape
+    v = weight.shape[0]
+    if interpret is None:
+        interpret = _default_interpret()
+    bb = min(block_b, b)
+    bv = min(block_v, v)
+    if not use_kernel or b % bb or v % bv:
+        return exit_quant_ref(hidden, weight, norm_scale, eps)
+    return exit_quant_pallas(hidden, weight, norm_scale, block_b=bb,
+                             block_v=bv, eps=eps, interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused exit-head + wire-quantize kernel.
+
+Reference semantics = the two-launch baseline the kernel fuses: the
+exit-head confidence pass (``exit_head_ref``) followed by the transport
+int8 quantizer (``quantize_int8_ref``) over the SAME raw hidden tile.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from repro.kernels.exit_head.ref import exit_head_ref
+from repro.kernels.quantize.ref import quantize_int8_ref
+
+
+def exit_quant_ref(hidden: jax.Array, weight: jax.Array,
+                   norm_scale: jax.Array, eps: float = 1e-5
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                              jax.Array, jax.Array]:
+    """hidden: (B, d); weight: (V, d); norm_scale: (d,).
+
+    Returns (confidence (B,), token (B,), logsumexp (B,),
+    q int8 (B, d), scale fp32 (B, 1)) — the exit decision plus the int8
+    wire packet of the raw (pre-norm) hidden, exactly what a below-θ row
+    uploads to the cloud."""
+    conf, tok, lse = exit_head_ref(hidden, weight, norm_scale, eps)
+    q, scale = quantize_int8_ref(hidden)
+    return conf, tok, lse, q, scale

@@ -47,6 +47,10 @@ def main():
     ap.add_argument("--kv-layout", default="dense",
                     choices=["dense", "paged"],
                     help="paged: block-paged KV pool shared across slots")
+    ap.add_argument("--kv-dtype", default="float32",
+                    choices=["float32", "int8"],
+                    help="int8: quantized KV pages with per-row absmax "
+                         "scales (needs --kv-layout paged)")
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged pool size; below the worst-case demand it "
                          "oversubscribes (pair with --preemption)")
@@ -90,6 +94,8 @@ def main():
         # dense slots own fixed rings: there is no page pool to
         # oversubscribe, so these flags could never take effect
         ap.error("--preemption/--num-pages need --kv-layout paged")
+    if args.kv_layout != "paged" and args.kv_dtype != "float32":
+        ap.error("--kv-dtype int8 needs --kv-layout paged")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -103,7 +109,8 @@ def main():
     system = ServingSystem(model, params, CollmConfig(
         theta=args.theta, wire_format=args.wire, backfill=args.backfill,
         speculative=args.speculative, kv_layout=args.kv_layout,
-        preemption=args.preemption, preempt_policy=args.preempt_policy))
+        kv_dtype=args.kv_dtype, preemption=args.preemption,
+        preempt_policy=args.preempt_policy))
     if args.cloud_batch:
         gen_kw = {}
         if args.channel == "sim":

@@ -246,14 +246,42 @@ def _cache_write(cache: Params, k: jax.Array, v: jax.Array,
 # ---------------------------------------------------------------------------
 # Paged caches (block tables; see repro.core.paging)
 # ---------------------------------------------------------------------------
+def quantize_kv_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-row int8 quantization of K/V entries: one absmax scale per
+    ``(..., kv_head)`` row over ``head_dim`` — the same scaling as the
+    transport quantizer (``repro.kernels.quantize``).
+
+    x: (..., KV, d) -> (q int8 (..., KV, d), scale fp32 (..., KV))."""
+    from repro.kernels.quantize.ref import quantize_int8_ref
+    q, s = quantize_int8_ref(x)
+    return q, s[..., 0]
+
+
 def init_paged_attn_cache(cfg: ModelConfig, num_pages: int, page_size: int,
-                          *, dtype=jnp.float32) -> Params:
+                          *, dtype=jnp.float32,
+                          kv_dtype: str = "float32") -> Params:
     """Page-pool KV storage for ONE layer.  Physical page 0 is the trash
     page (writes of unmapped rows land there); ``pos = -1`` marks an empty
     page slot, so a freshly (re)allocated page is invisible to attention
-    until it is written."""
+    until it is written.
+
+    ``kv_dtype="int8"`` stores pages quantized per page-row: ``kp``/``vp``
+    become int8 and per-row absmax scales ride alongside as ``ks``/``vs``
+    ``(P+1, page_size, KV)`` float32 — page axis 0 like ``kp``, so every
+    page-axis consumer (gather/scatter/swap) handles them generically."""
     kvh, hd = cfg.n_kv_heads, cfg.resolved_head_dim
     p = num_pages + 1                              # + trash page
+    if kv_dtype == "int8":
+        return {
+            "kp": jnp.zeros((p, page_size, kvh, hd), jnp.int8),
+            "vp": jnp.zeros((p, page_size, kvh, hd), jnp.int8),
+            "ks": jnp.zeros((p, page_size, kvh), jnp.float32),
+            "vs": jnp.zeros((p, page_size, kvh), jnp.float32),
+            "pos": jnp.full((p, page_size), -1, jnp.int32),
+        }
+    if kv_dtype != "float32":
+        raise ValueError(f"kv_dtype must be 'float32' or 'int8', "
+                         f"got {kv_dtype!r}")
     return {
         "kp": jnp.zeros((p, page_size, kvh, hd), dtype),
         "vp": jnp.zeros((p, page_size, kvh, hd), dtype),
@@ -282,14 +310,21 @@ def paged_scatter_prefill(cache: Params, row: Params,
             x = jnp.pad(x, cfgpad, constant_values=fill)
         return x.reshape((n_lp, ps) + x.shape[1:])
 
-    return {
-        "kp": cache["kp"].at[dest].set(tiles(row["k"], 0).astype(
-            cache["kp"].dtype)),
-        "vp": cache["vp"].at[dest].set(tiles(row["v"], 0).astype(
-            cache["vp"].dtype)),
-        "pos": cache["pos"].at[dest].set(tiles(row["pos"], -1).astype(
-            jnp.int32)),
-    }
+    out = {"pos": cache["pos"].at[dest].set(tiles(row["pos"], -1).astype(
+        jnp.int32))}
+    if "ks" in cache:                              # int8 pages + scales
+        qk, sk = quantize_kv_rows(row["k"])
+        qv, sv = quantize_kv_rows(row["v"])
+        out["kp"] = cache["kp"].at[dest].set(tiles(qk, 0))
+        out["vp"] = cache["vp"].at[dest].set(tiles(qv, 0))
+        out["ks"] = cache["ks"].at[dest].set(tiles(sk, 0.0))
+        out["vs"] = cache["vs"].at[dest].set(tiles(sv, 0.0))
+    else:
+        out["kp"] = cache["kp"].at[dest].set(tiles(row["k"], 0).astype(
+            cache["kp"].dtype))
+        out["vp"] = cache["vp"].at[dest].set(tiles(row["v"], 0).astype(
+            cache["vp"].dtype))
+    return out
 
 
 def paged_reset_pages(cache: Params, pages: jax.Array) -> Params:
@@ -308,8 +343,12 @@ def paged_gather(cache: Params, block_tbl: jax.Array
     b, n_lp = block_tbl.shape
     ps = cache["kp"].shape[1]
     phys = jnp.where(block_tbl >= 0, block_tbl, 0)
-    k = cache["kp"][phys].reshape(b, n_lp * ps, *cache["kp"].shape[2:])
-    v = cache["vp"][phys].reshape(b, n_lp * ps, *cache["vp"].shape[2:])
+    k, v = cache["kp"][phys], cache["vp"][phys]
+    if "ks" in cache:                              # dequantize int8 pages
+        k = k.astype(jnp.float32) * cache["ks"][phys][..., None]
+        v = v.astype(jnp.float32) * cache["vs"][phys][..., None]
+    k = k.reshape(b, n_lp * ps, *k.shape[3:])
+    v = v.reshape(b, n_lp * ps, *v.shape[3:])
     kpos = jnp.where(block_tbl[:, :, None] >= 0, cache["pos"][phys],
                      -1).reshape(b, n_lp * ps)
     return k, v, kpos
@@ -473,13 +512,21 @@ def decode_attention_paged(params: Params, cfg: ModelConfig, x: jax.Array,
         ok &= write_mask
     dest = jnp.where(ok, page, 0)
     slot = (pos_b % ps).astype(jnp.int32)
-    cache = {
-        "kp": cache["kp"].at[dest, slot].set(
-            knew[:, 0].astype(cache["kp"].dtype)),
-        "vp": cache["vp"].at[dest, slot].set(
-            vnew[:, 0].astype(cache["vp"].dtype)),
-        "pos": cache["pos"].at[dest, slot].set(jnp.where(ok, pos_b, -1)),
-    }
+    new_cache = {"pos": cache["pos"].at[dest, slot].set(
+        jnp.where(ok, pos_b, -1))}
+    if "ks" in cache:                              # quantize on write
+        qk, sk = quantize_kv_rows(knew[:, 0])      # (B,KV,d) int8, (B,KV)
+        qv, sv = quantize_kv_rows(vnew[:, 0])
+        new_cache["kp"] = cache["kp"].at[dest, slot].set(qk)
+        new_cache["vp"] = cache["vp"].at[dest, slot].set(qv)
+        new_cache["ks"] = cache["ks"].at[dest, slot].set(sk)
+        new_cache["vs"] = cache["vs"].at[dest, slot].set(sv)
+    else:
+        new_cache["kp"] = cache["kp"].at[dest, slot].set(
+            knew[:, 0].astype(cache["kp"].dtype))
+        new_cache["vp"] = cache["vp"].at[dest, slot].set(
+            vnew[:, 0].astype(cache["vp"].dtype))
+    cache = new_cache
 
     k, v, kpos = paged_gather(cache, block_tbl)
     g = h // kvh

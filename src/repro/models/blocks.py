@@ -136,13 +136,16 @@ def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int,
 
 def init_block_cache_paged(cfg: ModelConfig, kind: str, batch: int,
                            num_pages: int, page_size: int,
-                           dtype=jnp.float32) -> Params:
+                           dtype=jnp.float32,
+                           kv_dtype: str = "float32") -> Params:
     """Paged variant: self-attention K/V lives in the shared page pool
     (no batch axis — rows address it through their block table); cross-attn
-    and recurrent state stay dense per-row (fixed size, nothing to page)."""
+    and recurrent state stay dense per-row (fixed size, nothing to page).
+    ``kv_dtype="int8"`` stores the pages quantized with per-row scales."""
     if kind in (DENSE, SHARED_ATTN, MOE):
         c: Params = {"self": init_paged_attn_cache(cfg, num_pages, page_size,
-                                                   dtype=dtype)}
+                                                   dtype=dtype,
+                                                   kv_dtype=kv_dtype)}
         if cfg.is_encdec and kind != MOE:
             c["cross"] = init_attn_cache(cfg, batch, cfg.encoder_seq,
                                          kv_len=cfg.encoder_seq, dtype=dtype)

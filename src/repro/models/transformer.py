@@ -317,11 +317,13 @@ class Model:
 
     def init_paged_cache(self, batch: int, num_pages: int, page_size: int,
                          seg_indices: Optional[Sequence[int]] = None,
-                         dtype=None) -> Dict[int, Params]:
+                         dtype=None, kv_dtype: str = "float32"
+                         ) -> Dict[int, Params]:
         """Block-paged caches: self-attention K/V is pooled across rows in
         ``num_pages`` pages of ``page_size`` tokens (plus a trash page) and
         addressed through a per-row block table passed to ``decode_step``;
-        cross-attention / recurrent state stays dense per row."""
+        cross-attention / recurrent state stays dense per row.
+        ``kv_dtype="int8"`` stores pages quantized with per-row scales."""
         cfg = self.cfg
         dt = dtype or self.compute_dtype
         seg_indices = (range(len(self.segments)) if seg_indices is None
@@ -330,7 +332,8 @@ class Model:
         for si in seg_indices:
             seg = self.segments[si]
             per_layer = [init_block_cache_paged(cfg, seg.kind, batch,
-                                                num_pages, page_size, dt)
+                                                num_pages, page_size, dt,
+                                                kv_dtype=kv_dtype)
                          for _ in range(seg.length)]
             caches[si] = _stack(per_layer) if not seg.shared else per_layer[0]
         return caches

@@ -67,6 +67,68 @@ class RooflineTerms:
         }
 
 
+# ---------------------------------------------------------------------------
+# Decode KV traffic (docs/kv_paging.md §Quantized pages)
+#
+# The decode step's HBM floor is the KV cache sweep: every new token reads
+# all mapped pages of its slot across every layer, and writes one K/V row
+# per layer.  These helpers derive that floor from a LIVE cache pytree, so
+# int8 pools (int8 kp/vp + fp32 per-row scales) are billed at their actual
+# leaf dtypes — the number ``throughput_bench --kv-dtype`` gates on.
+# ---------------------------------------------------------------------------
+def _paged_nodes(tree):
+    """Yield every paged attention-cache node (dict with "kp") of a pytree."""
+    if isinstance(tree, dict):
+        if "kp" in tree:
+            yield tree
+            return
+        for v in tree.values():
+            yield from _paged_nodes(v)
+    elif isinstance(tree, (list, tuple)):
+        for v in tree:
+            yield from _paged_nodes(v)
+
+
+def kv_page_bytes(tree) -> int:
+    """HBM bytes one decode token reads per mapped logical page: the page's
+    slice of EVERY paged leaf (kp/vp, int8 scales, pos), summed across
+    layers (stacked (L,P,...) leaves count all L)."""
+    total = 0
+    for node in _paged_nodes(tree):
+        ax = 1 if node["kp"].ndim == 5 else 0
+        for leaf in node.values():
+            total += leaf.size // leaf.shape[ax] * leaf.dtype.itemsize
+    return total
+
+
+def kv_token_write_bytes(tree) -> int:
+    """HBM bytes one decode token writes: one K/V row (plus scales + pos
+    entry) per layer."""
+    total = 0
+    for node in _paged_nodes(tree):
+        ax = 1 if node["kp"].ndim == 5 else 0
+        for leaf in node.values():
+            rows = leaf.shape[ax] * leaf.shape[ax + 1]   # pages x page_size
+            total += leaf.size // rows * leaf.dtype.itemsize
+    return total
+
+
+def decode_kv_bytes_per_token(tree, ctx: int, page_size: int) -> int:
+    """Achieved KV HBM bytes per decoded token at context length ``ctx``:
+    read all mapped pages + write one row, per layer."""
+    pages = -(-int(ctx) // int(page_size))               # pages_needed
+    return pages * kv_page_bytes(tree) + kv_token_write_bytes(tree)
+
+
+def hbm_roofline_fraction(bytes_per_token: float, tokens_per_s: float
+                          ) -> float:
+    """Achieved KV-sweep HBM bandwidth as a fraction of the chip roofline
+    (``hw.HBM_BW``).  On the CPU CI runner this is a tiny number — the
+    point is the RATIO between layouts/dtypes, and that the achieved
+    bytes/token column itself is what the ``--check`` gate compares."""
+    return bytes_per_token * tokens_per_s / hw.HBM_BW
+
+
 def count_params(cfg) -> float:
     """Total (rough) and active parameter counts for MODEL_FLOPS."""
     d, v, L = cfg.d_model, cfg.vocab_size, cfg.n_layers

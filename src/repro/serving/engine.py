@@ -463,8 +463,10 @@ class BatchScheduler:
 
         # pooled caches (compiled once per pool size; refills only scatter)
         if mode == "cloud":
-            self.main_caches = self._init_pool_cache(self.model.init_cache,
-                                                     self.model.init_paged_cache)
+            self.main_caches = self._init_pool_cache(
+                self.model.init_cache,
+                lambda b, n, ps: self.model.init_paged_cache(
+                    b, n, ps, kv_dtype=self.ccfg.kv_dtype))
             self._full_row0 = self.model.init_cache(1, row_seq)
         else:
             self.edge_caches = self._init_pool_cache(

@@ -53,6 +53,39 @@ def test_statepacket_bills_per_row_positions():
     assert StatePacket(hidden=hidden, pos=pos).nbytes() == base + 4 * 4
 
 
+def test_statepacket_bills_int8_scales_per_leaf():
+    """int8 packets carry one fp32 scale tensor PER quantized leaf — a
+    recurrent ``states`` tree with K leaves ships K scale tensors, and
+    ``nbytes`` must bill them all explicitly (the wire_breakdown audit),
+    not fold them into the data payload."""
+    import jax.numpy as jnp
+    from repro.core.transport import quantize_tree
+
+    b, d = 4, 16
+    hidden = quantize(jnp.zeros((b, 1, d), jnp.float32), "int8")
+    # hybrid-style recurrent snapshot: two boundary layers, two leaves each
+    states = {"layer0": {"c": jnp.zeros((b, 8, d)), "n": jnp.zeros((b, d))},
+              "layer3": {"c": jnp.zeros((b, 8, d)), "n": jnp.zeros((b, d))}}
+    qstates = quantize_tree(states, "int8")
+    pkt = StatePacket(hidden=hidden, states=qstates,
+                      pos=jnp.arange(b, dtype=jnp.int32))
+
+    bd = pkt.wire_breakdown()
+    # data: int8 payloads, one byte per element
+    data_elems = b * 1 * d + 2 * (b * 8 * d + b * d)
+    assert bd["data"] == data_elems
+    # scales: fp32, one per row of each quantized leaf — 1 hidden leaf +
+    # 4 states leaves, each with its own (rows, 1) scale tensor
+    scale_elems = b * 1 + 2 * (b * 8 + b)
+    assert bd["scale"] == 4 * scale_elems
+    assert bd["pos"] == 4 * b
+    assert pkt.nbytes() == bd["data"] + bd["scale"] + bd["pos"]
+    # float16 states carry no scales at all
+    pkt16 = StatePacket(hidden=quantize(jnp.zeros((b, 1, d)), "float16"),
+                        states=quantize_tree(states, "float16"))
+    assert pkt16.wire_breakdown()["scale"] == 0
+
+
 # ---------------------------------------------------------------------------
 # bugfix 2: backfill requests bill consumed uploads exactly once
 # ---------------------------------------------------------------------------

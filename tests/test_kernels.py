@@ -10,6 +10,8 @@ from repro.kernels.decode_attn.ref import (decode_attn_paged_ref,
                                            decode_attn_ref)
 from repro.kernels.exit_head.ops import exit_confidence
 from repro.kernels.exit_head.ref import exit_head_ref
+from repro.kernels.exit_quant.ops import exit_quant
+from repro.kernels.exit_quant.ref import exit_quant_ref
 from repro.kernels.quantize.ops import quantize_int8
 from repro.kernels.quantize.ref import dequantize_int8_ref, quantize_int8_ref
 
@@ -167,6 +169,67 @@ def test_decode_attn_paged_property(seed, gaps):
 
 
 # ---------------------------------------------------------------------------
+# decode_attn, paged layout, int8 pages (in-kernel dequant)
+# ---------------------------------------------------------------------------
+def _quantize_pool(kp, vp):
+    """Per-(slot, kv_head)-row int8 quantization of a page pool — the same
+    scaling the engine applies on page write."""
+    from repro.models.attention import quantize_kv_rows
+    qk, sk = quantize_kv_rows(kp)
+    qv, sv = quantize_kv_rows(vp)
+    return qk, qv, sk, sv
+
+
+@pytest.mark.parametrize("b,h,kv,d,pages,ps,n_lp,window", [
+    (2, 8, 2, 64, 33, 16, 8, 0),
+    (3, 4, 4, 32, 17, 8, 4, 0),
+    (2, 16, 2, 64, 65, 32, 8, 48),
+])
+def test_decode_attn_paged_int8_sweep(b, h, kv, d, pages, ps, n_lp, window):
+    """int8 pages + in-kernel dequant == the gather-dequant oracle."""
+    q = jnp.asarray(np.random.RandomState(11).randn(b, h, d), jnp.float32)
+    kp, vp, pos, tbl, cur = _paged_fixture(b, kv, d, pages, ps, n_lp,
+                                           seed=pages + 1)
+    qk, qv, sk, sv = _quantize_pool(kp, vp)
+    o1 = flash_decode_paged(q, qk, qv, pos, tbl, cur, k_scale=sk, v_scale=sv,
+                            window=window, interpret=True)
+    o2 = decode_attn_paged_ref(q, qk, qv, pos, tbl, cur, k_scale=sk,
+                               v_scale=sv, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_decode_attn_paged_int8_close_to_f32():
+    """Dequantized int8 attention stays near the float32 result — the
+    per-row absmax quantizer bounds the K/V perturbation, so the softmax
+    output moves by O(1/127), not O(1)."""
+    b, h, kv, d, pages, ps, n_lp = 2, 8, 2, 64, 33, 16, 8
+    q = jnp.asarray(np.random.RandomState(13).randn(b, h, d), jnp.float32)
+    kp, vp, pos, tbl, cur = _paged_fixture(b, kv, d, pages, ps, n_lp, seed=5)
+    qk, qv, sk, sv = _quantize_pool(kp, vp)
+    o_f32 = flash_decode_paged(q, kp, vp, pos, tbl, cur, interpret=True)
+    o_i8 = flash_decode_paged(q, qk, qv, pos, tbl, cur, k_scale=sk,
+                              v_scale=sv, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_i8), np.asarray(o_f32),
+                               atol=0.15)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), gaps=st.booleans())
+def test_decode_attn_paged_int8_property(seed, gaps):
+    """Property: int8 kernel == oracle for random allocations + gaps."""
+    b, h, kv, d, pages, ps, n_lp = 2, 4, 2, 32, 17, 8, 6
+    q = jnp.asarray(np.random.RandomState(seed).randn(b, h, d), jnp.float32)
+    kp, vp, pos, tbl, cur = _paged_fixture(b, kv, d, pages, ps, n_lp,
+                                           seed=seed, gaps=gaps)
+    qk, qv, sk, sv = _quantize_pool(kp, vp)
+    o1 = flash_decode_paged(q, qk, qv, pos, tbl, cur, k_scale=sk, v_scale=sv,
+                            interpret=True)
+    o2 = decode_attn_paged_ref(q, qk, qv, pos, tbl, cur, k_scale=sk,
+                               v_scale=sv)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # quantize
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("n,d,bn", [(256, 128, 64), (128, 512, 128),
@@ -204,3 +267,111 @@ def test_exit_head_property(b, v, seed):
     c2, t2, _ = exit_head_ref(h, w, jnp.zeros(d))
     np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
     assert bool(jnp.all(t1 == t2))
+
+
+# ---------------------------------------------------------------------------
+# exit_quant (fused exit head + wire quantize)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,d,v,bb,bv", [
+    (8, 64, 512, 8, 256),
+    (16, 128, 1024, 8, 512),
+    (4, 32, 256, 4, 128),
+])
+def test_exit_quant_sweep(b, d, v, bb, bv):
+    h = jax.random.normal(jax.random.PRNGKey(b + v), (b, d)) * 3
+    w = jax.random.normal(jax.random.PRNGKey(1), (v, d)) * 0.05
+    ns = jax.random.normal(jax.random.PRNGKey(2), (d,)) * 0.1
+    ker = exit_quant(h, w, ns, block_b=bb, block_v=bv, interpret=True)
+    ref = exit_quant_ref(h, w, ns)
+    np.testing.assert_allclose(np.asarray(ker[0]), np.asarray(ref[0]),
+                               atol=1e-5)                       # confidence
+    assert bool(jnp.all(ker[1] == ref[1]))                      # token
+    np.testing.assert_allclose(np.asarray(ker[2]), np.asarray(ref[2]),
+                               atol=1e-4)                       # logsumexp
+    assert bool(jnp.all(ker[3] == ref[3]))                      # int8 data
+    np.testing.assert_allclose(np.asarray(ker[4]), np.asarray(ref[4]),
+                               rtol=1e-6)                       # scale
+
+
+def test_exit_quant_ref_is_two_launch_composition():
+    """The fused oracle == exit_head_ref + quantize_int8_ref verbatim (it
+    must quantize the RAW pre-norm hidden, not the exit head's normalized
+    view)."""
+    b, d, v = 8, 64, 512
+    h = jax.random.normal(jax.random.PRNGKey(9), (b, d)) * 2
+    w = jax.random.normal(jax.random.PRNGKey(10), (v, d)) * 0.05
+    ns = jnp.zeros((d,))
+    conf, tok, lse, q, s = exit_quant_ref(h, w, ns)
+    c2, t2, l2 = exit_head_ref(h, w, ns)
+    q2, s2 = quantize_int8_ref(h)
+    assert bool(jnp.all(tok == t2)) and bool(jnp.all(q == q2))
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(c2), rtol=1e-7)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-7)
+
+
+def test_exit_quant_fallback_on_indivisible_shapes():
+    """Shapes the tiling can't cover fall back to the oracle, same outputs."""
+    b, d, v = 5, 48, 300                    # 5 % 4 != 0, 300 % 128 != 0
+    h = jax.random.normal(jax.random.PRNGKey(3), (b, d))
+    w = jax.random.normal(jax.random.PRNGKey(4), (v, d)) * 0.05
+    ns = jnp.zeros((d,))
+    out = exit_quant(h, w, ns, block_b=4, block_v=128, interpret=True)
+    ref = exit_quant_ref(h, w, ns)
+    for a, r in zip(out, ref):
+        assert a.shape == r.shape and a.dtype == r.dtype
+        assert bool(jnp.all(a == r))
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.sampled_from([4, 8]), v=st.sampled_from([256, 512]),
+       seed=st.integers(0, 2 ** 16))
+def test_exit_quant_property(b, v, seed):
+    """Property: fused kernel agrees with BOTH unfused kernels on random
+    inputs — exit decision with exit_head, packet with quantize."""
+    d = 64
+    h = jax.random.normal(jax.random.PRNGKey(seed), (b, d)) * 4
+    w = jax.random.normal(jax.random.PRNGKey(seed + 1), (v, d)) * 0.1
+    conf, tok, _, q, s = exit_quant(h, w, jnp.zeros(d), block_b=b,
+                                    block_v=v // 2, interpret=True)
+    c2, t2, _ = exit_head_ref(h, w, jnp.zeros(d))
+    q2, s2 = quantize_int8_ref(h)
+    np.testing.assert_allclose(np.asarray(conf), np.asarray(c2), atol=1e-5)
+    assert bool(jnp.all(tok == t2)) and bool(jnp.all(q == q2))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-6)
+
+
+def test_fused_exit_upload_matches_edge_step_decision():
+    """CoLLM.fused_exit_upload == evaluate_exit(exit_logits) + the
+    transport int8 quantizer, packet layout included."""
+    from repro.configs.base import ModelConfig
+    from repro.core.collm import CoLLM, CollmConfig
+    from repro.core.exits import evaluate_exit
+    from repro.core.transport import dequantize, quantize
+    from repro.models.registry import build_model
+
+    cfg = ModelConfig(name="tiny-ee", arch_type="dense", n_layers=4,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=128, tie_embeddings=True,
+                      exit_layers=(1, 2)).validate()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    collm = CoLLM(model, CollmConfig(theta=0.8))
+    hid = jax.random.normal(jax.random.PRNGKey(5), (3, 1, cfg.d_model))
+    for use_kernel in (False, True):
+        conf, tok, pkt = collm.fused_exit_upload(params, hid,
+                                                 use_kernel=use_kernel,
+                                                 interpret=True)
+        dec = evaluate_exit(model.exit_logits(params, collm.l_ee1, hid))
+        ref_pkt = quantize(hid, "int8")
+        np.testing.assert_allclose(np.asarray(conf),
+                                   np.asarray(dec.confidence.reshape(-1)),
+                                   atol=1e-5)
+        assert bool(jnp.all(tok == dec.token.reshape(-1)))
+        assert pkt["data"].shape == ref_pkt["data"].shape
+        assert pkt["scale"].shape == ref_pkt["scale"].shape
+        assert bool(jnp.all(pkt["data"] == ref_pkt["data"]))
+        np.testing.assert_allclose(np.asarray(pkt["scale"]),
+                                   np.asarray(ref_pkt["scale"]), rtol=1e-6)
+        # the packet opens through the standard transport dequantizer
+        back = dequantize(pkt)
+        assert back.shape == hid.shape

@@ -263,3 +263,89 @@ def test_page_pool_watermark():
     for lp in range(6):                              # decode ignores watermark
         pool.alloc(0, lp)
     assert pool.free_pages == 0
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized pages (kv_dtype="int8")
+# ---------------------------------------------------------------------------
+def test_int8_cache_layout_and_roundtrip(tiny_ee_cfg):
+    """int8 pools carry per-row fp32 scales next to the pages; the
+    prefill-scatter -> gather round trip dequantizes to within the per-row
+    absmax bound (|err| <= scale/2)."""
+    rng = np.random.RandomState(0)
+    ps, num_pages = 8, 6
+    pool = PagePool(num_pages, ps, 2, 3)
+    cache = init_paged_attn_cache(tiny_ee_cfg, num_pages, ps,
+                                  kv_dtype="int8")
+    assert cache["kp"].dtype == jnp.int8 and cache["vp"].dtype == jnp.int8
+    kvh, hd = tiny_ee_cfg.n_kv_heads, tiny_ee_cfg.resolved_head_dim
+    assert cache["ks"].shape == (num_pages + 1, ps, kvh)
+    assert cache["vs"].dtype == jnp.float32
+
+    n = 19
+    pages = [pool.alloc(0, lp) for lp in range(pages_needed(n, ps))]
+    row = {
+        "k": jnp.asarray(rng.randn(1, n, kvh, hd) * 3, jnp.float32),
+        "v": jnp.asarray(rng.randn(1, n, kvh, hd) * 3, jnp.float32),
+        "pos": jnp.arange(n, dtype=jnp.int32)[None],
+    }
+    cache = paged_scatter_prefill(cache, row, jnp.asarray(pages))
+    tbl = jnp.asarray(pool.block_table[0:1])
+    k, v, kpos = paged_gather(cache, tbl)
+    valid = np.asarray(kpos[0]) >= 0
+    assert valid.sum() == n
+    k_got = np.asarray(k[0])[valid]
+    k_want = np.asarray(row["k"][0])
+    bound = np.abs(k_want).max(axis=-1, keepdims=True) / 127.0 * 0.5 + 1e-6
+    assert np.all(np.abs(k_got - k_want) <= bound)
+
+
+def test_int8_requires_paged_layout(tiny_trained):
+    model, params = tiny_trained["model"], tiny_trained["params"]
+    with pytest.raises(ValueError, match="paged"):
+        CoLLM(model, CollmConfig(kv_dtype="int8"))        # dense ring
+    with pytest.raises(ValueError, match="kv_dtype"):
+        CoLLM(model, CollmConfig(kv_dtype="int4", kv_layout="paged"))
+
+
+def test_int8_engine_bounded_exit_drift(tiny_trained):
+    """int8 paged serving completes every stream and its exit-tier mix
+    stays near the float32 run (the docs/kv_paging.md accuracy gate: int8
+    perturbs logits near theta, it must not change WHICH tier answers by
+    much).  Also asserts the int8 pool genuinely shrinks device bytes."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [8, 11, 9, 12, 10])
+    max_new = 14
+    runs = {}
+    for dt in ("float32", "int8"):
+        sysd = ServingSystem(model, params,
+                             CollmConfig(theta=0.8, kv_layout="paged",
+                                         kv_dtype=dt))
+        runs[dt] = (sysd.generate(prompts, max_new, mode="collm",
+                                  num_slots=3),
+                    next(iter(sysd._schedulers.values())))
+    r32, s32 = runs["float32"]
+    r8, s8 = runs["int8"]
+    assert all(len(t) == max_new for t in r8["tokens"])
+    total = len(prompts) * max_new
+    rate = lambda r: (r["stats"].exits_l1 + r["stats"].exits_l2) / total
+    assert abs(rate(r8) - rate(r32)) <= 0.15
+    # attention pages dominate the tiny model's pool: int8 data + fp32
+    # scales cut it well below the float32 pool
+    assert s8.kv_cache_bytes() < 0.5 * s32.kv_cache_bytes()
+
+
+def test_int8_engine_deterministic(tiny_trained):
+    """Same requests, same int8 pool, twice -> identical streams (the
+    quantize-on-write path is deterministic and page reuse resets scales
+    along with data)."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [9, 12, 8, 10])
+    sysd = ServingSystem(model, params,
+                         CollmConfig(theta=0.8, kv_layout="paged",
+                                     kv_dtype="int8"))
+    r1 = sysd.generate(prompts, 12, mode="collm", num_slots=2)
+    r2 = sysd.generate(prompts, 12, mode="collm", num_slots=2)
+    assert r1["tokens"] == r2["tokens"]

@@ -462,3 +462,89 @@ def test_preemption_trained_model_equivalence(tiny_trained, pre):
     sched = next(iter(sysp._schedulers.values()))
     assert sched.preemptions > 0
     assert sched.pool.free_pages == sched.pool.num_pages
+
+
+# ---------------------------------------------------------------------------
+# int8 pages through the swap path
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16))
+def test_int8_swap_roundtrip_exact(seed, tiny_ee_cfg):
+    """Property: swapping an int8 slot out and back reproduces the EXACT
+    pre-preemption quantized pages — int8 data, fp32 scales, and positions
+    all bit-identical, so preemption can never re-quantize (and therefore
+    never drift) a stream's KV."""
+    from repro.core.paging import SwapPool
+    from repro.models.attention import init_paged_attn_cache, \
+        paged_reset_pages, paged_scatter_prefill
+    from repro.serving.cloud_batcher import GATHER_PAGES, WRITE_PAGES, \
+        _pad_pages
+
+    rng = np.random.RandomState(seed)
+    ps, num_pages, n_lp = 8, 6, 3
+    pool = PagePool(num_pages, ps, 2, n_lp)
+    kvh, hd = tiny_ee_cfg.n_kv_heads, tiny_ee_cfg.resolved_head_dim
+    cache = init_paged_attn_cache(tiny_ee_cfg, num_pages, ps,
+                                  kv_dtype="int8")
+
+    n = int(rng.randint(ps + 1, n_lp * ps))
+    pages = [pool.alloc(0, lp) for lp in range(pages_needed(n, ps))]
+    row = {"k": jnp.asarray(rng.randn(1, n, kvh, hd) * 2, jnp.float32),
+           "v": jnp.asarray(rng.randn(1, n, kvh, hd) * 2, jnp.float32),
+           "pos": jnp.arange(n, dtype=jnp.int32)[None]}
+    cache = paged_scatter_prefill(cache, row, jnp.asarray(pages))
+
+    phys = jnp.asarray(_pad_pages(np.asarray(pages, np.int32)))
+    before = jax.device_get(GATHER_PAGES({0: cache}, phys))
+    assert before[0]["kp"].dtype == np.int8          # swapped bytes are int8
+    assert before[0]["ks"].dtype == np.float32       # scales ride along
+
+    swap = SwapPool()
+    swap.put("slot0", before)
+    freed = pool.free_slot(0)
+    cache = paged_reset_pages(cache, jnp.asarray(freed))
+    # the reset invalidated every freed position (data is masked via
+    # pos = -1 rather than zeroed — same contract as the float32 pool)
+    cleared = jax.device_get(GATHER_PAGES({0: cache}, phys))[0]
+    assert (cleared["pos"] == -1).all()
+
+    snap = swap.take("slot0")
+    # resume into a different permutation of pages (worst case reuse)
+    pages2 = [pool.alloc(0, lp) for lp in range(pages_needed(n, ps))]
+    phys2 = jnp.asarray(_pad_pages(np.asarray(pages2, np.int32)))
+    cache = WRITE_PAGES({0: cache}, phys2, snap)[0]
+    after = jax.device_get(GATHER_PAGES({0: cache}, phys2))[0]
+    for key in ("kp", "vp", "ks", "vs", "pos"):
+        np.testing.assert_array_equal(after[key], snap[0][key])
+    # billed swap traffic reflects the quantized layout: int8 data + fp32
+    # scales, not the float32 page size
+    f32_pages = jax.device_get(GATHER_PAGES(
+        {0: init_paged_attn_cache(tiny_ee_cfg, num_pages, ps)}, phys))
+    assert swap.stats.bytes_out < 0.5 * SwapPool._nbytes(f32_pages)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2 ** 20))
+def test_int8_swap_preemption_token_identical(seed, tiny):
+    """int8 paged streams under forced swap preemption == the un-preempted
+    int8 run (the swap stores quantized pages verbatim, so preemption adds
+    zero additional quantization error)."""
+    rng = random.Random(seed)
+    max_new = rng.randint(6, 12)
+    prompts = _prompts(seed, 4)
+    worst = max(pages_needed(len(p) + max_new, PS) for p in prompts)
+    schedule = [(rng.randint(1, 2 * max_new), rng.randrange(2))
+                for _ in range(rng.randint(1, 4))]
+
+    ref = _system(tiny, theta=0.8, kv_layout="paged", kv_dtype="int8")
+    r_ref = ref.generate(prompts, max_new, mode="collm", num_slots=2,
+                         max_seq=40)
+    sysp = _system(tiny, theta=0.8, kv_layout="paged", kv_dtype="int8",
+                   preemption="swap")
+    r = sysp.generate(prompts, max_new, mode="collm", num_slots=2,
+                      max_seq=40, num_pages=2 * worst,
+                      preempt_schedule=schedule)
+    assert r["tokens"] == r_ref["tokens"]
+    for sched in sysp._schedulers.values():
+        if sched.pool is not None:
+            assert sched.pool.free_pages == sched.pool.num_pages
