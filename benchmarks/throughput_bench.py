@@ -22,6 +22,16 @@ tokens instead of stalls).  With ``--check`` it asserts the overlapped
 virtual makespan beats the blocking one and that the deadline trace
 still completes every stream.
 
+``--spec-k K`` runs the drafting sweep instead: the classic 1-token
+speculative path vs. K-token edge drafts, both overlapped at 8 slots on a
+high-RTT WAN-class channel with a per-request cloud service point.  Each
+verification request pays RTT and serializes through the service point,
+so shipping k provisional tokens per request cuts the wire/service tax
+~k-fold while the accept-prefix/rewind reconcile keeps streams greedy
+token-identical to the blocking run.  With ``--check`` it asserts the
+K-token sweep beats spec_k=1 on virtual makespan and that the acceptance
+rate is measured; per-k rows (incl. ``accept_rate``) land in ``--json``.
+
 ``--cloud-batch`` runs the multi-client sweep instead: ``--clients N``
 edge engines (one slot + one WiFi link each) share one cloud, and the
 shared ``CloudBatcher`` (one masked cloud step per wave of concurrent
@@ -34,6 +44,7 @@ token-identical streams to N independent sync runs.
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --kv-layout both
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --channel sim --check
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --clients 4 --cloud-batch --check
+    PYTHONPATH=src:. python benchmarks/throughput_bench.py --spec-k 4 --check
 """
 from __future__ import annotations
 
@@ -45,6 +56,7 @@ import jax
 import numpy as np
 
 from repro.core.collm import CollmConfig
+from repro.core.netsim import NetworkParams
 from repro.core.transport import (AsyncSimChannel, CloudServicePoint,
                                   ScriptedChannel)
 from repro.roofline.analyze import (decode_kv_bytes_per_token,
@@ -389,6 +401,93 @@ def run_oversubscribe(csv: bool = False, *, n_clients: int = 8,
     return out
 
 
+# high-RTT WAN-class link for the drafting sweep: the per-request RTT tax
+# and the per-request cloud service cost are what k-token drafts amortize
+# (k tokens per verification request instead of one request per token)
+SPEC_NET = NetworkParams(up_bw=3.8e6, down_bw=8e6, rtt=0.08)
+SPEC_SERVICE_S = 0.006
+
+
+def run_spec(csv: bool = False, *, n_clients: int = 16, max_new: int = 24,
+             theta: float = 0.8, spec_k: int = 4, check: bool = False,
+             rows: list = None) -> dict:
+    """Multi-token edge drafting vs. the classic 1-token speculative path
+    (docs/async_transport.md §Speculative): both overlapped at 8 slots on
+    the same high-RTT WAN-class channel with a per-request cloud service
+    point.  spec_k=k ships up to k provisional tokens per verification
+    request, so a below-θ burst costs ~1/k as many requests — each of
+    which pays RTT and serializes through the service point.  Streams stay
+    greedy token-identical to the blocking non-speculative run (infinite
+    deadline).  With ``--check`` asserts spec_k=k beats spec_k=1 on
+    virtual makespan at 8 slots and that the acceptance rate is reported."""
+    tiny = tiny_trained_model()
+    model, params, data = tiny["model"], tiny["params"], tiny["data"]
+    prompts = _requests(data, n_clients)
+    total = n_clients * max_new
+
+    # blocking non-speculative reference: drafting must be invisible in
+    # output space, whatever k
+    ref = ServingSystem(model, params, CollmConfig(theta=theta)).generate(
+        prompts, max_new, mode="collm", num_slots=ASYNC_SLOTS)["tokens"]
+
+    ks = sorted({1, spec_k})
+    out: dict = {}
+    print("spec_k,slots,virtual_s,virtual_ms_per_tok,requests,draft_tokens,"
+          "accepted,accept_rate,mean_accept_len,rewinds,tokens_equal")
+    for k in ks:
+        ccfg = CollmConfig(theta=theta, speculative=True, spec_k=k)
+        sysk = ServingSystem(model, params, ccfg)
+        sysk.generate(prompts[:ASYNC_SLOTS], max_new, num_slots=ASYNC_SLOTS,
+                      channel=AsyncSimChannel(SPEC_NET,
+                                              service_s=SPEC_SERVICE_S),
+                      tick_time_s=TICK_TIME_S)               # warm compile
+        ch = AsyncSimChannel(SPEC_NET, service_s=SPEC_SERVICE_S)
+        r = sysk.generate(prompts, max_new, mode="collm",
+                          num_slots=ASYNC_SLOTS, channel=ch,
+                          tick_time_s=TICK_TIME_S)
+        st = r["stats"]
+        accept_rate = (st.accepted_tokens / st.draft_tokens
+                       if st.draft_tokens else 0.0)
+        mean_len = (float(np.mean(st.accept_lens))
+                    if st.accept_lens else 0.0)
+        equal = r["tokens"] == ref
+        row = {"spec_k": k, "slots": ASYNC_SLOTS, "clients": n_clients,
+               "max_new": max_new, "virtual_s": r["virtual_time"],
+               "requests": r["channel_stats"]["requests"],
+               "draft_tokens": st.draft_tokens,
+               "accepted_tokens": st.accepted_tokens,
+               "accept_rate": accept_rate, "mean_accept_len": mean_len,
+               "spec_rewinds": st.spec_rewinds, "tokens_equal": equal}
+        out[k] = row
+        if rows is not None:
+            rows.append(row)
+        print(f"{k},{ASYNC_SLOTS},{r['virtual_time']:.3f},"
+              f"{1e3 * r['virtual_time'] / total:.2f},{row['requests']},"
+              f"{st.draft_tokens},{st.accepted_tokens},{accept_rate:.2%},"
+              f"{mean_len:.2f},{st.spec_rewinds},{equal}")
+
+    if check:
+        assert spec_k > 1, "--check needs --spec-k > 1 (nothing to compare)"
+        v1, vk = out[1]["virtual_s"], out[spec_k]["virtual_s"]
+        assert vk < v1, (
+            f"spec_k={spec_k} drafting ({vk:.3f}s virtual) should beat the "
+            f"1-token speculative path ({v1:.3f}s virtual) at "
+            f"{ASYNC_SLOTS} slots on the high-RTT link")
+        assert out[spec_k]["requests"] < out[1]["requests"], (
+            "k-token drafts must coalesce verification requests")
+        assert out[spec_k]["draft_tokens"] > 0 \
+            and out[spec_k]["accept_rate"] > 0.0, \
+            "acceptance rate must be measured and reported"
+        assert all(v["tokens_equal"] for v in out.values()), \
+            "draft streams must stay token-identical to the blocking run"
+        print(f"# check passed: spec_k={spec_k} {vk:.3f}s < spec_k=1 "
+              f"{v1:.3f}s virtual at {ASYNC_SLOTS} slots "
+              f"({out[spec_k]['requests']} vs {out[1]['requests']} requests, "
+              f"accept rate {out[spec_k]['accept_rate']:.2%}); streams "
+              f"identical to blocking")
+    return out
+
+
 # virtual cost of ONE batched cloud service step (A100-class cloud
 # partition); the batching window the cloud waits to accumulate arrivals
 CLOUD_SERVICE_S = 0.008
@@ -491,11 +590,24 @@ def main() -> None:
     ap.add_argument("--cloud-batch", action="store_true",
                     help="multi-client sweep: N edge engines sharing one "
                          "cloud, batched CloudBatcher vs per-request FIFO")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="drafting sweep: spec_k=1 vs spec_k=K overlapped "
+                         "at 8 slots on a high-RTT link (--check asserts "
+                         "K-token drafts cut the virtual makespan)")
     ap.add_argument("--oversubscribe", action="store_true",
                     help="paged-KV preemption sweep: page budget at ~60%% "
                          "of worst-case demand, optimistic+preemptive vs "
                          "admission-blocked paging")
     args = ap.parse_args()
+    if args.spec_k:
+        rows = []
+        run_spec(n_clients=args.clients, max_new=args.max_new,
+                 theta=args.theta, spec_k=args.spec_k, check=args.check,
+                 rows=rows)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+        return
     if args.oversubscribe:
         run_oversubscribe(n_clients=args.clients, max_new=args.max_new,
                           theta=args.theta, check=args.check)

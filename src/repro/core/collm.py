@@ -58,6 +58,13 @@ class CollmConfig:
     # deadline miss).  Requires greedy decoding + attention-only models in
     # the batched path (rewind re-decodes positions).
     speculative: bool = False
+    # Draft length of the speculative path: a below-θ row keeps committing
+    # up to ``spec_k`` provisional exit tokens into one *draft*, then ships
+    # the whole draft as a single verification request; the cloud scores
+    # all k positions in ONE masked ring pass and the engine accepts the
+    # longest agreeing prefix (rewinding only the rejected suffix).
+    # spec_k=1 is exactly the classic per-token speculative path.
+    spec_k: int = 1
     # Paper-faithful: the content manager RELEASES hidden states of tokens
     # that exited early, so the cloud KV cache has gaps at those positions
     # (this is why Table 2 ROUGE-L < 1 for theta < 1).  backfill=True is the
@@ -125,6 +132,11 @@ class CoLLM:
         if ccfg.kv_dtype == "int8" and ccfg.kv_layout != "paged":
             raise ValueError('kv_dtype="int8" requires kv_layout="paged" '
                              "(dense rings stay full precision)")
+        if ccfg.spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {ccfg.spec_k}")
+        if ccfg.spec_k > 1 and not ccfg.speculative:
+            raise ValueError("spec_k > 1 requires speculative=True "
+                             "(drafting generalizes the speculative path)")
         self.model = model
         self.ccfg = ccfg
         self.l_ee1 = cfg.exit_layers[0]
@@ -430,6 +442,39 @@ class CoLLM:
             body, (caches, jnp.zeros((b, vocab), jnp.float32)),
             (ring, ring_pos, ring_valid))
         return final, caches
+
+    def ring_cloud_steps_all(self, params: Params, ring: Dict[str, jax.Array],
+                             ring_pos: jax.Array, ring_valid: jax.Array,
+                             caches: Dict[int, Pytree],
+                             block_tbl: Optional[jax.Array] = None
+                             ) -> Tuple[jax.Array, jax.Array,
+                                        Dict[int, Pytree]]:
+        """``ring_cloud_steps`` that also returns EVERY entry's logits.
+
+        Multi-token draft verification scores all k draft positions of a
+        row in one masked ring pass: the engine needs the per-position
+        logits to find the longest agreeing prefix, not just the last
+        entry's.  Returns (last-valid logits (B, V) f32 — same contract as
+        ``ring_cloud_steps`` — all per-entry logits (k, B, V) f32 with
+        invalid entries zeroed, new caches)."""
+        b = ring_pos.shape[1]
+        vocab = self.model.cfg.vocab_size
+
+        def body(carry, xs):
+            c, final = carry
+            pkt_i, pos_i, valid_i = xs
+            logits_i, c = self.cloud_step_masked(params, pkt_i, c, pos_i,
+                                                 valid_i, block_tbl=block_tbl)
+            step = jnp.where(valid_i[:, None],
+                             logits_i.astype(jnp.float32), 0.0)
+            final = jnp.where(valid_i[:, None],
+                              logits_i.astype(jnp.float32), final)
+            return (c, final), step
+
+        (caches, final), all_logits = jax.lax.scan(
+            body, (caches, jnp.zeros((b, vocab), jnp.float32)),
+            (ring, ring_pos, ring_valid))
+        return final, all_logits, caches
 
     def standalone_step(self, params: Params, token: jax.Array,
                         caches: Dict[int, Pytree], pos: jax.Array,

@@ -83,6 +83,26 @@ class ContentManager:
         c.last_active = self._clock()
         return pkt
 
+    def take_upload_keep(self, device_id: str, pos: int) -> StatePacket:
+        """Pop exactly ``pos`` WITHOUT invalidating earlier pendings.
+
+        Multi-token drafting holds each draft position's packet at the
+        edge of the engine (so the window eviction in ``upload`` cannot
+        release a position still awaiting verification) while the
+        *backfill* ring of not-yet-consumed earlier uploads must survive
+        untouched until the draft's single verification request drains
+        them together.  ``take_upload`` would release those earlier
+        entries; this variant takes only ``pos``."""
+        c = self._client(device_id)
+        if pos not in c.pending_uploads:
+            raise KeyError(
+                f"client {device_id}: no uploaded state for position {pos} "
+                f"(have {sorted(c.pending_uploads)})")
+        pkt = c.pending_uploads.pop(pos)
+        c.uploads_consumed += 1
+        c.last_active = self._clock()
+        return pkt
+
     def take_uploads_upto(self, device_id: str, pos: int):
         """Backfill mode: pop ALL pending uploads with position <= pos, in
         order (beyond-paper exact-KV mode; see DESIGN.md)."""

@@ -48,6 +48,15 @@ FORMATS = ("float32", "float16", "int8")
 TOKEN_BYTES = 8
 
 
+def draft_request_bytes(k: int) -> int:
+    """Wire size of a k-token draft verification request: the k provisional
+    token ids ride the request control message (the k hidden states were
+    already billed by their per-tick ``notify_upload`` calls — parallel
+    upload, paper fig 3).  Single source of truth for the engine and the
+    wire-accounting tests."""
+    return int(k) * TOKEN_BYTES
+
+
 def hidden_wire_bytes(d_model: int, fmt: str, seq: int = 1) -> int:
     """Wire size of a ``seq``-long hidden-state upload in format ``fmt``,
     computed from the quantized packet ABSTRACTLY (eval_shape: no device

@@ -72,6 +72,10 @@ def main():
     ap.add_argument("--speculative", action="store_true",
                     help="commit provisional edge tokens while cloud "
                          "replies are in flight")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="edge draft length: ship up to k provisional "
+                         "tokens per verification request (needs "
+                         "--speculative; 1 = classic speculative path)")
     ap.add_argument("--cloud-batch", action="store_true",
                     help="multi-client mode: one engine per client, cloud "
                          "requests coalesced by the shared CloudBatcher")
@@ -96,6 +100,9 @@ def main():
         ap.error("--preemption/--num-pages need --kv-layout paged")
     if args.kv_layout != "paged" and args.kv_dtype != "float32":
         ap.error("--kv-dtype int8 needs --kv-layout paged")
+    if args.spec_k != 1 and not args.speculative:
+        ap.error("--spec-k needs --speculative (drafting generalizes the "
+                 "speculative path)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -108,9 +115,9 @@ def main():
                for _ in range(args.clients)]
     system = ServingSystem(model, params, CollmConfig(
         theta=args.theta, wire_format=args.wire, backfill=args.backfill,
-        speculative=args.speculative, kv_layout=args.kv_layout,
-        kv_dtype=args.kv_dtype, preemption=args.preemption,
-        preempt_policy=args.preempt_policy))
+        speculative=args.speculative, spec_k=args.spec_k,
+        kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
+        preemption=args.preemption, preempt_policy=args.preempt_policy))
     if args.cloud_batch:
         gen_kw = {}
         if args.channel == "sim":
@@ -148,6 +155,11 @@ def main():
     if args.preemption != "off":
         print(f"preemptions={st.preemptions} policy={args.preempt_policy} "
               f"mode={args.preemption}")
+    if args.speculative and st.draft_tokens:
+        print(f"draft: k={args.spec_k} draft_tokens={st.draft_tokens} "
+              f"accepted={st.accepted_tokens} "
+              f"accept_rate={st.accepted_tokens / st.draft_tokens:.2%} "
+              f"rewinds={st.spec_rewinds}")
     if args.channel == "sim":
         print(f"virtual_t={r['virtual_time']:.3f}s "
               f"deadline_misses={st.deadline_misses} "

@@ -12,7 +12,9 @@ service point's *compute* half.
     share a ``PagePool`` exactly like the edge engine's);
   * edge engines submit single-token cloud requests (the uploaded l_ee1
     packet is popped from the ContentManager at submit time, preserving
-    the release/backfill semantics of the per-engine path);
+    the release/backfill semantics of the per-engine path) or k-token
+    draft verification requests (``submit_draft``; the draft packets were
+    popped by the engine at draft time);
   * pending requests from *any* engine are coalesced into waves — at most
     one request per cloud slot, up to ``max_batch`` rows — and each wave
     is ONE masked ``cloud_step_masked`` (or ``ring_cloud_steps`` in
@@ -256,7 +258,8 @@ class _Entry:
     device_id: str
     slot: int                   # cloud pool row
     pos: int
-    packets: list               # [(pos, StatePacket), ...]; len > 1 = backfill
+    packets: list               # [(pos, StatePacket), ...]; len > 1 means
+                                # backfill ring and/or k-token draft
     group: dict                 # reply payload shared with the channel
 
 
@@ -325,6 +328,7 @@ class CloudBatcher:
 
         self._cloud_masked = _jit(collm, "cloud_step_masked")
         self._ring_cloud = _jit(collm, "ring_cloud_steps")
+        self._ring_cloud_all = _jit(collm, "ring_cloud_steps_all")
         self._cloud_prefill = _jit(collm, "cloud_prefill_padded")
         self._invalidate_rows = _jit(collm, "invalidate_rows_after")
         self._scatter = SCATTER
@@ -432,6 +436,42 @@ class CloudBatcher:
         group = {"logits": None, "np": None, "flush": self.flush}
         self._pending.append(_Entry(device_id=device_id, slot=slot, pos=pos,
                                     packets=packets, group=group))
+        self.stats.requests += 1
+        return group, slot, packets
+
+    def submit_draft(self, device_id: str, draft, *, backfill: bool = False):
+        """Queue one k-token draft verification request (the engine's
+        ``_flush_drafts``).  ``draft``: [(pos, StatePacket), ...] — the
+        draft positions' packets in order, popped by the engine at draft
+        time (the upload window must never evict a position awaiting
+        verification).  Backfill additionally drains the client's
+        not-yet-consumed older uploads here, so the merged ring rebuilds
+        the exact cloud KV.  Returns ``(group, row, packets)`` like
+        ``submit``; ``packets`` is the merged consumption-order list the
+        engine indexes the reply's per-position logits with (and may
+        retain for a preemption checkpoint).  The reply group carries
+        ``all`` / ``np_all``: EVERY ring entry's logits, not just the
+        last-valid row."""
+        slot = self.cm.cloud_slot(device_id)
+        if slot is None:
+            raise KeyError(f"{device_id} has no cloud slot (admit first)")
+        packets = list(draft)
+        if backfill:
+            older = self.cm.take_uploads_upto(device_id, packets[-1][0])
+            # older positions all precede the draft (the engine flushes on
+            # a confident tick, so drafts stay position-contiguous)
+            packets = older + packets
+        if self.pool is not None:
+            for p, _ in packets:
+                lp = p // self.pool.page_size
+                if self.pool.block_table[slot, lp] == -1:
+                    self.pool.alloc(slot, lp)
+                    self._tbl_device = None
+        group = {"logits": None, "all": None, "np": None, "np_all": None,
+                 "flush": self.flush}
+        self._pending.append(_Entry(device_id=device_id, slot=slot,
+                                    pos=packets[-1][0], packets=packets,
+                                    group=group))
         self.stats.requests += 1
         return group, slot, packets
 
@@ -555,18 +595,24 @@ class CloudBatcher:
 
     def _compute(self, wave: List[_Entry]) -> None:
         t0 = time.perf_counter()
-        backfill = any(len(e.packets) > 1 for e in wave)
+        # any multi-packet entry (backfill ring OR k-token draft) needs the
+        # ring pass; an all-singles wave takes the dense masked step
+        ring_mode = any(len(e.packets) > 1 for e in wave)
         mask = np.zeros((self.B,), bool)
         for e in wave:
             mask[e.slot] = True
         first = wave[0].packets[0][1]
         keys = first.hidden.keys()
-        if backfill:
+        if ring_mode:
             ring, ring_pos, valid = build_upload_ring(
                 [(e.slot, e.packets) for e in wave], self.B)
-            logits, self.caches = self._ring_cloud(
+            logits, all_logits, self.caches = self._ring_cloud_all(
                 self.params, ring, ring_pos, valid, self.caches,
                 self._block_tbl())
+            for e in wave:
+                # draft replies reconcile per position; single-token
+                # groups ignore the extra key
+                e.group["all"] = all_logits
         else:
             dense = {k: np.zeros((self.B,) + np.shape(first.hidden[k])[1:],
                                  np.asarray(first.hidden[k]).dtype)

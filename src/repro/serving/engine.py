@@ -70,7 +70,7 @@ from repro.core.paging import (PREEMPT_POLICIES, OutOfPages, PagePool,
                                select_victim)
 from repro.core.transport import (TOKEN_BYTES, ChannelStats, CloudChannel,
                                   StatePacket, SyncChannel,
-                                  hidden_wire_bytes)
+                                  draft_request_bytes, hidden_wire_bytes)
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
 from repro.serving.cloud_batcher import (RESET_PAGES, SCATTER,
@@ -93,12 +93,21 @@ class GenStats:
     spec_rewinds: int = 0         # speculative reconciles that disagreed
     fallbacks: int = 0            # switches to standalone fallback
     preemptions: int = 0          # times this stream was checkpointed out
+    # multi-token drafting (CollmConfig.spec_k): provisional tokens shipped
+    # in verification requests, and how many of them the cloud validated.
+    # Both are event counters like deadline_misses — a rewind never unwinds
+    # them — so accepted_tokens / draft_tokens is the draft acceptance rate.
+    draft_tokens: int = 0         # draft tokens dispatched for verification
+    accepted_tokens: int = 0      # draft tokens the cloud reply validated
     upload_bytes: int = 0
     edge_time: float = 0.0
     cloud_time: float = 0.0
     stall_s: float = 0.0          # virtual time stalled on in-flight replies
     overlap_s: float = 0.0        # virtual flight time hidden behind decode
     confidences: List[tuple] = dataclasses.field(default_factory=list)
+    # accepted-prefix length of each verified draft reply (0..k); the
+    # accept-length histogram of the bench / property tests
+    accept_lens: List[int] = dataclasses.field(default_factory=list)
 
     @property
     def request_rate(self) -> float:
@@ -233,14 +242,39 @@ class Request:
 
 
 @dataclasses.dataclass
+class _DraftTok:
+    """One provisional token of a slot's edge draft (speculative path).
+
+    The upload packet is popped from the ContentManager at draft time —
+    the window eviction must never release a position still awaiting
+    verification — and held here until the draft flushes into one
+    verification request.  ``ring_idx`` is the entry's index in that
+    request's upload ring (set at flush; the reply's per-position logits
+    are indexed with it)."""
+    pos: int
+    tok_index: int           # index in slot.tokens of the provisional token
+    provisional: int
+    pkt: Any                 # the popped StatePacket
+    ring_idx: int = 0
+
+
+@dataclasses.dataclass
 class _Pending:
-    """One in-flight cloud request of a slot."""
+    """One in-flight cloud request of a slot.
+
+    Speculative mode ships k-token drafts: ``draft`` lists the request's
+    provisional tokens in position order, ``tok_index``/``provisional``
+    mirror the FIRST entry (preemption cuts at the earliest unvalidated
+    token) and ``pos`` the LAST entry (a rewind's "drop requests past the
+    cut" test sees the whole group).  Non-speculative requests leave
+    ``draft`` as None."""
     pos: int                 # decode position the request serves
     tok_index: int           # index in slot.tokens its token lands at
     provisional: int         # edge l_ee2 token committed on deadline miss
     stall_from: float        # virtual submit time
     deadline_t: float
     idle_at: float = 0.0     # engine idle integral at submit (overlap_s)
+    draft: Optional[List[_DraftTok]] = None
 
 
 @dataclasses.dataclass
@@ -270,6 +304,10 @@ class _Slot:
     miss_streak: int = 0
     standalone: bool = False     # latency fallback engaged (stops uploading)
     admit_seq: int = 0           # global admission order (victim policies)
+    # buffered (not yet dispatched) draft tokens of the speculative path:
+    # up to CollmConfig.spec_k below-θ provisional tokens accumulate here,
+    # then flush as ONE verification request (_flush_drafts)
+    draft: List[_DraftTok] = dataclasses.field(default_factory=list)
     # uploads the cloud actually consumed for this stream, in consumption
     # order — a preemption checkpoint replays them to rebuild the cloud KV
     # (gaps included) without recomputing the hidden states.  Tracked only
@@ -394,6 +432,9 @@ class BatchScheduler:
         self.late_drops = 0          # replies dropped after slot moved on
         self._idle_s = 0.0           # virtual time nobody decoded (waits)
         self._spec = bool(self.ccfg.speculative) and mode == "collm"
+        # draft length of the speculative path: below-θ rows accumulate up
+        # to spec_k provisional tokens into one verification request
+        self._spec_k = int(self.ccfg.spec_k) if self._spec else 1
         if self._spec and sampler != "greedy":
             raise ValueError("speculative decode reconciles token ids and "
                              "requires greedy sampling")
@@ -484,6 +525,7 @@ class BatchScheduler:
         self._cloud_masked = _jit(collm, "cloud_step_masked")
         self._invalidate_rows = _jit(collm, "invalidate_rows_after")
         self._ring_cloud = _jit(collm, "ring_cloud_steps")
+        self._ring_cloud_all = _jit(collm, "ring_cloud_steps_all")
         self._scatter = SCATTER
         self._scatter_paged = SCATTER_PAGED
         self._reset_pages = RESET_PAGES
@@ -690,6 +732,7 @@ class BatchScheduler:
             slot.active = True
             slot.seq += 1            # late replies of the predecessor drop
             slot.pending = {}
+            slot.draft = []
             slot.miss_streak = 0
             slot.standalone = False
             slot.admit_seq = self._next_admit_seq()
@@ -726,8 +769,10 @@ class BatchScheduler:
                     and slot.tokens[-1] == req.eos_id))
         # speculative: the tail tokens are provisional until their cloud
         # replies reconcile (or miss their deadline) — a rewind may yet
-        # resume decoding below max_new / replace the EOS
-        done = done and not slot.pending
+        # resume decoding below max_new / replace the EOS.  A buffered
+        # draft counts too: its flush (at-end rule in _draft_tick) must
+        # run before the slot can retire.
+        done = done and not slot.pending and not slot.draft
         if done:
             if self.mode == "collm":
                 if self._batcher is not None:
@@ -815,16 +860,24 @@ class BatchScheduler:
         before any KV is invalidated (cancel-before-invalidate), exactly
         the speculative-rewind lifecycle."""
         req, st = s.req, s.stats
-        if s.pending and self._spec:
+        if (s.pending or s.draft) and self._spec:
             # provisional tokens past the earliest unvalidated position
             # would never be reconciled: rewind the checkpoint to the
-            # validated prefix (re-decode re-speculates them identically)
-            cut = min(p.tok_index for p in s.pending.values())
+            # validated prefix (re-decode re-speculates them identically).
+            # Buffered draft tokens are always newer than any dispatched
+            # group, but cover the case where only a draft is outstanding.
+            cand = [p.tok_index for p in s.pending.values()]
+            if s.draft:
+                cand.append(s.draft[0].tok_index)
+            cut = min(cand)
             for kind in reversed(s.events[cut:]):
                 self._unwind_event(s, kind)
             del s.tokens[cut:]
             del s.events[cut:]
         s.pending = {}
+        # dropped draft packets sit at/after the resume point — re-decode
+        # re-creates (and re-uploads) them, so they are NOT checkpointed
+        s.draft = []
         resume_pos = len(req.prompt) + len(s.tokens) - 1
         # cloud KV at/after the resume point is re-created by re-decode;
         # everything before it replays from the consumed-upload log
@@ -931,6 +984,7 @@ class BatchScheduler:
         slot.active = True
         slot.seq += 1
         slot.pending = {}
+        slot.draft = []
         slot.miss_streak = ck.miss_streak
         slot.standalone = ck.standalone
         slot.cloud_pkts = list(ck.cloud_pkts)
@@ -1152,7 +1206,12 @@ class BatchScheduler:
         # below-θ rows the last exit's logits on the sampling path)
         prov_toks = tok2 if self.sampler == "greedy" else exit_toks
         needy = [s for s in uploaders if not bool(exited[s.index])]
-        if needy:
+        if self._spec:
+            # multi-token drafting (spec_k=1 ≡ the classic speculative
+            # path): below-θ rows buffer provisional tokens and ship them
+            # in k-sized verification requests
+            self._draft_tick(needy, uploaders, prov_toks)
+        elif needy:
             self._dispatch_cloud(needy, pos, prov_toks)
         for s in runnable:
             if bool(exited[s.index]):
@@ -1251,10 +1310,6 @@ class BatchScheduler:
                 deadline_t=self.vnow + self.channel.deadline_s,
                 idle_at=self._idle_s)
             handles.append(h)
-            if self._spec:
-                # latency hiding: commit the edge token provisionally and
-                # keep decoding; _resolve reconciles it on arrival
-                self._emit(s, int(prov_toks[s.index]), "spec")
         if not self.overlap:
             # blocking baseline: the whole pool waits for this tick's
             # replies (still paying the channel's virtual latency) — the
@@ -1263,6 +1318,169 @@ class BatchScheduler:
             target = max([self.vnow] + [a for a in arr if a is not None])
             self._idle_s += target - self.vnow
             self.vnow = target
+
+    # -- multi-token drafting (speculative path) ----------------------------
+    def _draft_tick(self, needy: List[_Slot], uploaders: List[_Slot],
+                    prov_toks: np.ndarray) -> None:
+        """Speculative drafting: every below-θ row commits its provisional
+        l_ee2 token into the slot's draft buffer — popping the
+        just-uploaded packet so the ContentManager window can never evict
+        a position still awaiting verification — then full drafts, drafts
+        whose row took a confident tick (drafts stay position-contiguous),
+        and drafts whose row just reached its end flush as single
+        verification requests (_flush_drafts)."""
+        ccfg = self.ccfg
+        needy_idx = set()
+        for s in needy:
+            needy_idx.add(s.index)
+            dev = s.req.device_id
+            # release mode keeps today's semantics (consuming pos releases
+            # earlier confident-tick uploads); backfill must preserve them
+            # for the flush-time drain
+            pkt = (self.cm.take_upload_keep(dev, s.pos) if ccfg.backfill
+                   else self.cm.take_upload(dev, s.pos))
+            s.draft.append(_DraftTok(
+                pos=s.pos, tok_index=len(s.tokens),
+                provisional=int(prov_toks[s.index]), pkt=pkt))
+            # latency hiding: commit the edge token provisionally and keep
+            # decoding; the verification reply reconciles it (_resolve)
+            self._emit(s, int(prov_toks[s.index]), "spec")
+        flush = []
+        for s in uploaders:
+            if not s.draft:
+                continue
+            eos = s.req.eos_id
+            at_end = (len(s.tokens) >= s.req.max_new
+                      or (eos is not None and s.tokens[-1] == eos))
+            if (len(s.draft) >= self._spec_k
+                    or s.index not in needy_idx   # confident tick ends it
+                    or at_end):                   # the row won't tick again
+                flush.append(s)
+        if flush:
+            self._flush_drafts(flush)
+
+    def _flush_drafts(self, rows: List[_Slot]) -> None:
+        """Ship each row's buffered draft as ONE verification request: the
+        k draft packets join the upload ring (backfill additionally drains
+        the not-yet-consumed older uploads so the cloud KV stays exact)
+        and one masked ring pass scores every draft position
+        (``ring_cloud_steps_all``); the reply carries per-position logits
+        for the accept-prefix reconcile.  An all-singles wave (spec_k=1,
+        release mode) takes the dense masked step — bit-identical to the
+        classic speculative path."""
+        ccfg = self.ccfg
+        track = self.preemption == "recompute"
+        t0 = time.perf_counter()
+        ring_maps: Dict[int, Dict[int, int]] = {}
+        if self._batcher is not None:
+            payloads = {}
+            for s in rows:
+                group, row, consumed = self._batcher.submit_draft(
+                    s.req.device_id, [(d.pos, d.pkt) for d in s.draft],
+                    backfill=ccfg.backfill)
+                payloads[s.index] = (group, row)
+                ring_maps[s.index] = {p: i for i, (p, _)
+                                      in enumerate(consumed)}
+                if track:
+                    s.cloud_pkts.extend(consumed)
+        else:
+            entries = []
+            for s in rows:
+                pkt_list = [(d.pos, d.pkt) for d in s.draft]
+                if ccfg.backfill:
+                    older = self.cm.take_uploads_upto(
+                        s.req.device_id, s.draft[-1].pos)
+                    # a confident tick flushes, so drafts are contiguous:
+                    # every not-yet-consumed older upload precedes them
+                    pkt_list = older + pkt_list
+                if track:
+                    s.cloud_pkts.extend(pkt_list)
+                entries.append((s.index, pkt_list))
+                ring_maps[s.index] = {p: i for i, (p, _)
+                                      in enumerate(pkt_list)}
+            depth = max(len(pl) for _, pl in entries)
+            if depth == 1 and not ccfg.backfill:
+                # all-singles wave: dense masked step (same code path the
+                # classic speculative dispatch takes)
+                mask = np.zeros((self.B,), bool)
+                posv = np.zeros((self.B,), np.int32)
+                pkts0 = [pl[0][1] for _, pl in entries]
+                keys = pkts0[0].hidden.keys()
+                dense = {k: np.zeros(
+                    (self.B,) + np.shape(pkts0[0].hidden[k])[1:],
+                    np.asarray(pkts0[0].hidden[k]).dtype) for k in keys}
+                for s, pkt in zip(rows, pkts0):
+                    mask[s.index] = True
+                    posv[s.index] = s.draft[0].pos
+                    for k in keys:
+                        dense[k][s.index] = np.asarray(pkt.hidden[k])[0]
+                logits, self.cloud_caches = self._cloud_masked(
+                    self.params,
+                    {k: jnp.asarray(v) for k, v in dense.items()},
+                    self.cloud_caches, jnp.asarray(posv),
+                    jnp.asarray(mask), self._block_tbl())
+                group = {"logits": logits, "all": None,
+                         "np": None, "np_all": None}
+            else:
+                ring, ring_pos, valid = build_upload_ring(entries, self.B)
+                logits, all_logits, self.cloud_caches = \
+                    self._ring_cloud_all(self.params, ring, ring_pos, valid,
+                                         self.cloud_caches,
+                                         self._block_tbl())
+                group = {"logits": logits, "all": all_logits,
+                         "np": None, "np_all": None}
+            payloads = {s.index: (group, s.index) for s in rows}
+
+        dt = (time.perf_counter() - t0) / len(rows)
+        handles = []
+        for s in rows:
+            s.stats.cloud_time += dt
+            kk = len(s.draft)
+            rm = ring_maps[s.index]
+            for d in s.draft:
+                d.ring_idx = rm[d.pos]
+            # wire: the k hidden rows were billed by their per-tick
+            # notify_upload calls (parallel upload); the request carries
+            # the k provisional ids up and k verified ids down
+            h = self.channel.submit(
+                slot=s.index, seq=s.seq, pos=s.draft[-1].pos,
+                reply=payloads[s.index], now=self.vnow,
+                nbytes_up=draft_request_bytes(kk),
+                nbytes_down=TOKEN_BYTES * kk)
+            s.pending[h] = _Pending(
+                pos=s.draft[-1].pos, tok_index=s.draft[0].tok_index,
+                provisional=s.draft[0].provisional,
+                stall_from=self.vnow,
+                deadline_t=self.vnow + self.channel.deadline_s,
+                idle_at=self._idle_s, draft=s.draft)
+            s.stats.draft_tokens += kk
+            s.draft = []
+            handles.append(h)
+        if not self.overlap:
+            # blocking baseline: the whole pool waits for this flush's
+            # replies (still paying the channel's virtual latency)
+            arr = [self.channel.arrival_of(h) for h in handles]
+            target = max([self.vnow] + [a for a in arr if a is not None])
+            self._idle_s += target - self.vnow
+            self.vnow = target
+
+    def _draft_tokens(self, rep) -> np.ndarray:
+        """Materialize a verification reply's per-position greedy tokens
+        — shape (depth,) for this row; the accept-prefix reconcile indexes
+        it with each draft entry's ``ring_idx``."""
+        group, row = rep.reply
+        if group.get("np_all") is None:
+            if group["logits"] is None and group.get("all") is None:
+                # lazy CloudBatcher wave: first materialization computes it
+                group["flush"]()
+            if group.get("all") is not None:
+                group["np_all"] = np.argmax(np.asarray(group["all"]),
+                                            axis=-1)        # (depth, B)
+            else:
+                # dense all-singles wave: depth-1 view of the final logits
+                group["np_all"] = np.argmax(
+                    np.asarray(group["logits"]), axis=-1)[None, :]
+        return group["np_all"][:, row]
 
     # -- reply drain --------------------------------------------------------
     def _reply_token(self, rep) -> int:
@@ -1299,9 +1517,16 @@ class BatchScheduler:
         s.stats.deadline_misses += 1
         s.miss_streak += 1
         if self._spec:
-            # the provisional token becomes final
-            s.events[pend.tok_index] = "l2"
-            s.stats.exits_l2 += 1
+            if pend.draft is not None:
+                # the whole edge draft becomes final: every position the
+                # reply would have reconciled commits as an l2 exit
+                for d in pend.draft:
+                    s.events[d.tok_index] = "l2"
+                    s.stats.exits_l2 += 1
+            else:
+                # the provisional token becomes final
+                s.events[pend.tok_index] = "l2"
+                s.stats.exits_l2 += 1
         else:
             s.stats.stall_s += self.vnow - pend.stall_from
             s.stats.overlap_s += self._hidden_s(pend)
@@ -1312,6 +1537,13 @@ class BatchScheduler:
                 and not s.standalone):
             s.standalone = True
             s.stats.fallbacks += 1
+            # a buffered draft can never flush once the row goes
+            # standalone (it stops uploading): its provisional tokens
+            # become final l2 exits, never billed as draft_tokens
+            for d in s.draft:
+                s.events[d.tok_index] = "l2"
+                s.stats.exits_l2 += 1
+            s.draft = []
 
     def _resolve(self) -> None:
         """Drain arrived replies, then expire deadlines, at the current
@@ -1333,18 +1565,29 @@ class BatchScheduler:
                 self.late_drops += 1
                 self._maybe_finish(s)
                 continue
-            tok = self._reply_token(rep)
             if self._spec:
                 s.stats.overlap_s += self._hidden_s(pend)
                 s.miss_streak = 0
-                if tok == s.tokens[pend.tok_index]:
-                    # speculation validated: the provisional token IS the
-                    # cloud token
-                    s.events[pend.tok_index] = "cloud"
-                    s.stats.cloud_requests += 1
-                else:
-                    self._rewind(s, pend, tok)
+                toks = self._draft_tokens(rep)
+                accepted = 0
+                for d in pend.draft:
+                    cloud_tok = int(toks[d.ring_idx])
+                    if cloud_tok == s.tokens[d.tok_index]:
+                        # validated: the provisional token IS the cloud
+                        # token
+                        s.events[d.tok_index] = "cloud"
+                        s.stats.cloud_requests += 1
+                        s.stats.accepted_tokens += 1
+                        accepted += 1
+                    else:
+                        # first disagreement: correct it and discard the
+                        # rejected suffix (later positions' scores were
+                        # conditioned on a wrong token)
+                        self._rewind(s, d, cloud_tok)
+                        break
+                s.stats.accept_lens.append(accepted)
             else:
+                tok = self._reply_token(rep)
                 s.stats.cloud_requests += 1
                 s.stats.stall_s += self.vnow - pend.stall_from
                 s.stats.overlap_s += self._hidden_s(pend)
@@ -1417,6 +1660,9 @@ class BatchScheduler:
         for h, p2 in list(s.pending.items()):
             if p2.pos > pend.pos:      # requests of discarded positions
                 del s.pending[h]       # (their replies will late-drop)
+        # buffered draft tokens of discarded positions are gone too (a
+        # buffered draft is always newer than any dispatched group)
+        s.draft = [d for d in s.draft if d.pos <= pend.pos]
         # the invalidated cloud KV must not resurface through a later
         # preemption replay either
         s.cloud_pkts = [e for e in s.cloud_pkts if e[0] <= pend.pos]

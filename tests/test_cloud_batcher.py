@@ -360,3 +360,80 @@ def test_cloud_slot_pool_lifecycle():
     assert cm.cloud_slot("a") is None
     assert cm.assign_cloud_slot("c") == a          # recycled
     assert cm.release_cloud_slot("nobody") is None
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: k-token draft verification requests
+# ---------------------------------------------------------------------------
+def test_draft_request_bytes_unit():
+    """A k-token verification request is k token ids of control traffic —
+    the k hidden rows were already billed by their per-tick uploads.
+    ``draft_request_bytes`` is the single source of truth, and k=1 must
+    cost exactly the classic speculative request."""
+    from repro.core.transport import draft_request_bytes
+    assert draft_request_bytes(1) == TOKEN_BYTES
+    for k in (2, 4, 8):
+        assert draft_request_bytes(k) == k * TOKEN_BYTES
+
+
+@pytest.mark.parametrize("backfill", [False, True])
+@pytest.mark.parametrize("k", [1, 4])
+def test_draft_request_bills_k_tokens_once(tiny_trained, backfill, k):
+    """Channel-level accounting with drafting: uploaded hidden rows are
+    billed once at notify time (the draft buffer holds packets at the
+    engine — they must never be re-billed at flush), and each
+    verification request adds exactly its k token ids up and k verified
+    ids down.  Holds identically in backfill mode, where the flush-time
+    ring drain rides the SAME request (no extra control message, no
+    re-billed hiddens)."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data, [9, 11])
+    ch = SyncChannel()
+    ccfg = CollmConfig(theta=0.8, speculative=True, spec_k=k,
+                       backfill=backfill)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 10, mode="collm", num_slots=2, channel=ch)
+    st = r["stats"]
+    assert st.draft_tokens > 0
+    prompt_bytes = sum(hidden_wire_bytes(model.cfg.d_model, "float16",
+                                         seq=len(p)) for p in prompts)
+    # bytes_up = notified per-token uploads + k token ids per request;
+    # the admission prompt upload never crosses this channel
+    assert ch.stats.bytes_up == (st.upload_bytes - prompt_bytes
+                                 + TOKEN_BYTES * st.draft_tokens)
+    # every reply ships its group's k verified ids back down
+    assert ch.stats.bytes_down == TOKEN_BYTES * st.draft_tokens
+    # the content manager received each uploaded packet exactly once
+    cm_bytes = sum(c["bytes_received"] for c in r["cm_stats"].values())
+    assert cm_bytes == st.upload_bytes - prompt_bytes
+
+
+def test_draft_resubmit_after_cancel_not_double_billed(tiny_trained):
+    """Rewinds cancel in-flight draft groups and the rejected suffix is
+    re-decoded, re-uploaded and re-verified: the re-submitted positions
+    are new wire events on BOTH sides of the ledger, so the equality
+    bytes_up == uploads + k·TOKEN_BYTES·requests must survive an entire
+    rewind-heavy run (any double- or zero-billing on cancel/re-submit
+    breaks it)."""
+    import jax
+    model = tiny_trained["model"]
+    # UNTRAINED params: the exit heads disagree with the full model almost
+    # everywhere, so the run is rewind-heavy by construction (the trained
+    # model's l_ee2 head agrees with the cloud and never rewinds)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.RandomState(7)
+    prompts = [rng.randint(0, model.cfg.vocab_size, size=n)
+               for n in (8, 10, 9)]
+    ch = AsyncSimChannel(WIFI, service_s=0.004)
+    ccfg = CollmConfig(theta=0.8, speculative=True, spec_k=4)
+    r = ServingSystem(model, params, ccfg).generate(
+        prompts, 12, mode="collm", num_slots=2, channel=ch,
+        tick_time_s=0.01)
+    st = r["stats"]
+    assert st.spec_rewinds > 0          # the run actually exercised cancels
+    prompt_bytes = sum(hidden_wire_bytes(model.cfg.d_model, "float16",
+                                         seq=len(p)) for p in prompts)
+    assert ch.stats.bytes_up == (st.upload_bytes - prompt_bytes
+                                 + TOKEN_BYTES * st.draft_tokens)
+    assert ch.stats.bytes_down == TOKEN_BYTES * st.draft_tokens

@@ -15,6 +15,48 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 @pytest.mark.timeout(600)
+def test_bench_spec_k_sweep(tmp_path):
+    """``throughput_bench --spec-k`` end to end: the drafting sweep runs,
+    ``--check`` holds (k-token drafts cut the virtual makespan at 8 slots
+    on the high-RTT link), and the ``--json`` rows carry the acceptance
+    rate."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join([os.path.join(REPO, "src"), REPO])
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    out_json = tmp_path / "spec.json"
+    out = subprocess.run(
+        [sys.executable, os.path.join(REPO, "benchmarks",
+                                      "throughput_bench.py"),
+         "--spec-k", "4", "--check", "--clients", "8", "--max-new", "12",
+         "--json", str(out_json)],
+        env=env, capture_output=True, text=True, timeout=590)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rows = {r["spec_k"]: r for r in json.loads(out_json.read_text())}
+    assert set(rows) == {1, 4}
+    assert rows[4]["virtual_s"] < rows[1]["virtual_s"]
+    assert rows[4]["requests"] < rows[1]["requests"]
+    for r in rows.values():
+        assert r["tokens_equal"]
+        assert 0.0 < r["accept_rate"] <= 1.0
+        assert 0.0 <= r["mean_accept_len"] <= r["spec_k"]
+
+
+@pytest.mark.timeout(120)
+def test_serve_spec_k_needs_speculative():
+    """The launcher rejects --spec-k without --speculative instead of
+    silently ignoring the draft length."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["TF_CPP_MIN_LOG_LEVEL"] = "2"
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--smoke",
+         "--spec-k", "4"],
+        env=env, capture_output=True, text=True, timeout=110)
+    assert out.returncode != 0
+    assert "--spec-k needs --speculative" in out.stderr
+
+
+@pytest.mark.timeout(600)
 def test_dryrun_single_combo(tmp_path):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(REPO, "src")

@@ -548,3 +548,77 @@ def test_int8_swap_preemption_token_identical(seed, tiny):
     for sched in sysp._schedulers.values():
         if sched.pool is not None:
             assert sched.pool.free_pages == sched.pool.num_pages
+
+
+# ---------------------------------------------------------------------------
+# preemption x multi-token drafting (spec_k > 1, draft in flight)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pre,kv_kw", [
+    ("recompute", {}),
+    ("recompute", {"kv_layout": "paged"}),
+    ("swap", {"kv_layout": "paged"}),
+    ("swap", {"kv_layout": "paged", "kv_dtype": "int8"}),
+])
+def test_draft_inflight_preemption(tiny, pre, kv_kw):
+    """Preempt a slot with a k-token draft outstanding (buffered AND
+    dispatched): the checkpoint rewinds to the validated prefix, the
+    resumed stream re-drafts identically, and the final tokens equal the
+    un-preempted blocking run — with every page back on the free list and
+    every pending upload drained."""
+    prompts = _prompts(13, 3, lo=8, hi=12)
+    max_new = 10
+    ref = _system(tiny, theta=0.8, **kv_kw).generate(
+        prompts, max_new, mode="collm", num_slots=2, max_seq=40)
+
+    sysp = _system(tiny, theta=0.8, speculative=True, spec_k=4,
+                   preemption=pre, **kv_kw)
+    # 0.05s replies at 0.01s ticks: drafts flush at k=4 and stay in
+    # flight across the forced preemption points
+    r = sysp.generate(prompts, max_new, mode="collm", num_slots=2,
+                      max_seq=40, preempt_schedule=[(4, 0), (7, 1)],
+                      channel=ScriptedChannel([0.05], deadline_s=math.inf),
+                      tick_time_s=0.01)
+    assert r["tokens"] == ref["tokens"]
+    st_ = r["stats"]
+    assert st_.preemptions >= 1 and st_.draft_tokens > 0
+    assert all(0 <= a <= 4 for a in st_.accept_lens)
+    assert st_.accepted_tokens == sum(st_.accept_lens)
+    for sched in sysp._schedulers.values():
+        if sched.pool is not None:
+            assert sched.pool.free_pages == sched.pool.num_pages
+        assert not sched._preempted
+    # no upload-ring entries leaked: end_of_sequence drained every client
+    assert all(c["pending"] == 0 for c in r["cm_stats"].values())
+
+
+@pytest.mark.parametrize("pre", ["recompute", "swap"])
+def test_draft_inflight_preemption_batcher(tiny, pre):
+    """Draft-in-flight preemption across the shared CloudBatcher: the
+    preempted engine's verification reply late-drops, its pooled cloud
+    row is released and re-acquired, and no cloud slot leaks."""
+    prompts = _prompts(17, 3, lo=8, hi=12)
+    max_new = 10
+    refsys = _system(tiny, theta=0.8)
+    ref = [refsys.generate([p], max_new, mode="collm", num_slots=1)
+           ["tokens"][0] for p in prompts]
+
+    sysm = _system(tiny, theta=0.8, kv_layout="paged", speculative=True,
+                   spec_k=4, preemption=pre)
+    chans = [ScriptedChannel([0.05], deadline_s=math.inf) for _ in range(3)]
+    r = sysm.generate_multi(prompts, max_new, cloud_batch=True,
+                            channels=chans, tick_time_s=0.01,
+                            preempt_schedules=[[(5, 0)], None, [(7, 0)]])
+    assert r["tokens"] == ref
+    st_ = r["stats"]
+    assert st_.preemptions >= 1 and st_.draft_tokens > 0
+    assert st_.accepted_tokens == sum(st_.accept_lens)
+    # every pooled cloud row back on the free list, all uploads drained
+    assert sysm.cloud.cm.cloud_slots_free() == 3
+    assert all(c["pending"] == 0 for c in r["cm_stats"].values())
+    b = r["batcher"]
+    # recompute checkpoints often hold ZERO consumed cloud packets here —
+    # the preempt rewinds the whole unvalidated draft, so nothing below
+    # the resume point needs replay (restores may be 0); swap always
+    # snapshots the row's pages
+    if pre == "swap":
+        assert b["swaps"] >= 1

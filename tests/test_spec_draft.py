@@ -1,0 +1,222 @@
+"""Draft-lifecycle property suite for multi-token speculative drafting
+(``CollmConfig.spec_k``).
+
+The invariant under test: k-token edge drafts with batched cloud
+verification are *invisible in output space* — for greedy decoding, the
+accept-prefix/rewind reconcile converges every stream to the exact
+blocking non-speculative token sequence, for every draft length, KV
+layout, backfill mode, and latency trace (as long as replies beat their
+deadlines).  Finite deadlines commit whole drafts as edge tokens; the
+lifecycle stays conservation-exact either way."""
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.core.collm import CoLLM, CollmConfig
+from repro.core.netsim import NetworkParams
+from repro.core.transport import AsyncSimChannel, ScriptedChannel
+from repro.serving.engine import GenStats, ServingSystem, _aggregate
+
+WIFI = NetworkParams(up_bw=3.8e6, down_bw=8e6, rtt=0.003)
+MAX_NEW = 12
+PROMPT_LENS = [8, 11, 9]
+
+# blocking non-speculative baselines, one per KV layout (module-level memo:
+# every equality test below compares against the same reference stream over
+# the same prompts — the corpus sampler is stateful, so sample once)
+_BASELINES = {}
+_PROMPTS = []
+
+
+def _prompts(data):
+    if not _PROMPTS:
+        _PROMPTS.extend(data.sample_tokens(n) for n in PROMPT_LENS)
+    return list(_PROMPTS)
+
+
+def _baseline(tiny_trained, layout):
+    if layout not in _BASELINES:
+        model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                               tiny_trained["data"])
+        _BASELINES[layout] = ServingSystem(
+            model, params, CollmConfig(theta=0.8, kv_layout=layout)
+        ).generate(_prompts(data), MAX_NEW, mode="collm", num_slots=2)
+    return _BASELINES[layout]
+
+
+def _draft_run(tiny_trained, channel, *, k, layout="dense", backfill=False,
+               fallback_after=0):
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    ccfg = CollmConfig(theta=0.8, kv_layout=layout, speculative=True,
+                       spec_k=k, backfill=backfill)
+    return ServingSystem(model, params, ccfg).generate(
+        _prompts(data), MAX_NEW, mode="collm", num_slots=2, channel=channel,
+        tick_time_s=0.01, fallback_after=fallback_after)
+
+
+def _check_accept_histogram(stats: GenStats, k: int) -> None:
+    """Accept-length sanity: every verified draft accepts a prefix of at
+    most k tokens, and the counters are the histogram's marginals."""
+    assert all(0 <= a <= k for a in stats.accept_lens)
+    assert stats.accepted_tokens == sum(stats.accept_lens)
+    assert stats.accepted_tokens <= stats.draft_tokens
+
+
+# ---------------------------------------------------------------------------
+# config validation (no decode)
+# ---------------------------------------------------------------------------
+def test_spec_k_config_validation(tiny_trained):
+    model = tiny_trained["model"]
+    assert CollmConfig().spec_k == 1               # default = classic path
+    CoLLM(model, CollmConfig(speculative=True, spec_k=8))   # fine
+    with pytest.raises(ValueError):
+        CoLLM(model, CollmConfig(speculative=True, spec_k=0))
+    with pytest.raises(ValueError):
+        CoLLM(model, CollmConfig(spec_k=2))        # needs speculative=True
+
+
+def test_draft_counters_aggregate():
+    agg = _aggregate([GenStats(draft_tokens=4, accepted_tokens=3,
+                               accept_lens=[2, 1]),
+                      None,
+                      GenStats(draft_tokens=2, accept_lens=[0, 0])])
+    assert (agg.draft_tokens, agg.accepted_tokens) == (6, 3)
+    assert agg.accept_lens == [2, 1, 0, 0]
+
+
+# ---------------------------------------------------------------------------
+# draft streams are invisible: identical to the blocking run
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("layout", ["dense", "paged"])
+@pytest.mark.parametrize("k", [1, 2, 4, 8])
+def test_spec_draft_matches_blocking(tiny_trained, layout, k):
+    base = _baseline(tiny_trained, layout)
+    r = _draft_run(tiny_trained,
+                   AsyncSimChannel(WIFI, service_s=0.004), k=k,
+                   layout=layout)
+    assert r["tokens"] == base["tokens"]
+    bs, rs = base["stats"], r["stats"]
+    # the reconcile restores the blocking run's event mix exactly: every
+    # rejected suffix was fully re-decoded, every accepted prefix was
+    # re-labelled a cloud token
+    assert (bs.tokens, bs.cloud_requests, bs.exits_l1, bs.exits_l2) == \
+        (rs.tokens, rs.cloud_requests, rs.exits_l1, rs.exits_l2)
+    assert rs.stall_s == 0.0 and rs.overlap_s > 0.0
+    assert rs.draft_tokens > 0
+    _check_accept_histogram(rs, k)
+
+
+def test_spec_k1_is_the_classic_speculative_path(tiny_trained):
+    """Regression anchor: spec_k=1 must BE today's speculative path — a
+    config that never mentions spec_k runs token- and stat-identically to
+    an explicit spec_k=1, and every verification request carries exactly
+    one draft token (requests == draft_tokens == resolved groups)."""
+    model, params, data = (tiny_trained["model"], tiny_trained["params"],
+                           tiny_trained["data"])
+    prompts = _prompts(data)
+    runs = []
+    for ccfg in (CollmConfig(theta=0.8, speculative=True),
+                 CollmConfig(theta=0.8, speculative=True, spec_k=1)):
+        runs.append(ServingSystem(model, params, ccfg).generate(
+            prompts, MAX_NEW, mode="collm", num_slots=2,
+            channel=AsyncSimChannel(WIFI, service_s=0.004),
+            tick_time_s=0.01))
+    default, explicit = runs
+    assert default["tokens"] == explicit["tokens"]
+    d, e = default["stats"], explicit["stats"]
+    assert (d.draft_tokens, d.accepted_tokens, d.accept_lens,
+            d.spec_rewinds, d.deadline_misses) == \
+        (e.draft_tokens, e.accepted_tokens, e.accept_lens,
+         e.spec_rewinds, e.deadline_misses)
+    assert default["virtual_time"] == explicit["virtual_time"]
+    # one request per draft token; one accept-length entry per RESOLVED
+    # group (a rewind discards its successors' in-flight groups, whose
+    # replies then late-drop without a histogram entry)
+    assert default["channel_stats"]["requests"] == d.draft_tokens
+    # (never-polled in-flight replies at run end keep this an inequality)
+    assert len(d.accept_lens) + default["late_drops"] <= d.draft_tokens
+    _check_accept_histogram(d, 1)
+
+
+def test_spec_draft_backfill_matches_blocking(tiny_trained):
+    """Backfill mode: the flush-time drain of older uploads keeps the
+    cloud KV exact, so k-token drafting converges to the same blocking
+    stream there too."""
+    base = _baseline(tiny_trained, "dense")
+    r = _draft_run(tiny_trained,
+                   AsyncSimChannel(WIFI, service_s=0.004), k=4,
+                   backfill=True)
+    assert r["tokens"] == base["tokens"]
+    _check_accept_histogram(r["stats"], 4)
+
+
+# ---------------------------------------------------------------------------
+# property: equality holds over arbitrary latency traces
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.sampled_from([1, 2, 4, 8]),
+       layout=st.sampled_from(["dense", "paged"]),
+       backfill=st.booleans())
+def test_draft_equivalence_over_latency_traces(tiny_trained, seed, k,
+                                               layout, backfill):
+    """Whatever the reply-latency trace, as long as no deadline fires the
+    reconcile converges every greedy stream to the blocking run — the
+    draft lifecycle (flush timing, wave grouping, accept/rewind order)
+    can shift arbitrarily without touching output space."""
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(0.0, 0.12, size=16).tolist()
+    base = _baseline(tiny_trained, layout)
+    r = _draft_run(tiny_trained, ScriptedChannel(lat, deadline_s=math.inf),
+                   k=k, layout=layout, backfill=backfill)
+    assert r["tokens"] == base["tokens"]
+    _check_accept_histogram(r["stats"], k)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000), k=st.sampled_from([1, 2, 4, 8]))
+def test_draft_lifecycle_conservation_under_deadlines(tiny_trained, seed, k):
+    """Finite deadlines: whole-draft misses, partial accepts, rewinds and
+    fallback may all fire, but the lifecycle stays conservation-exact —
+    streams complete, every token is accounted to exactly one serving
+    event, and the accept histogram's marginals match the counters."""
+    rng = np.random.default_rng(seed)
+    lat = rng.uniform(0.0, 0.08, size=16).tolist()
+    r = _draft_run(tiny_trained, ScriptedChannel(lat, deadline_s=0.03),
+                   k=k, fallback_after=3)
+    agg = r["stats"]
+    assert all(len(t) == MAX_NEW for t in r["tokens"])
+    _check_accept_histogram(agg, k)
+    served = agg.exits_l1 + agg.exits_l2 + agg.cloud_requests
+    # the admission token is uncounted when it exits at the prompt's last
+    # position, counted as a cloud request when the prefill served it
+    n = len(PROMPT_LENS)
+    assert agg.tokens - n <= served <= agg.tokens
+    # every validated draft token was billed as a cloud request, and only
+    # resolved groups contribute accept-length entries
+    assert agg.accepted_tokens <= agg.cloud_requests
+    assert len(agg.accept_lens) <= agg.draft_tokens
+
+
+# ---------------------------------------------------------------------------
+# deadline miss commits the whole edge draft
+# ---------------------------------------------------------------------------
+def test_deadline_miss_commits_whole_draft(tiny_trained):
+    """Replies far slower than the deadline: every dispatched draft
+    misses, its k provisional tokens all become final l2 exits, and the
+    late replies drop instead of reconciling."""
+    r = _draft_run(tiny_trained, ScriptedChannel([0.5], deadline_s=0.02),
+                   k=4)
+    st_ = r["stats"]
+    assert all(len(t) == MAX_NEW for t in r["tokens"])
+    assert st_.deadline_misses > 0 and st_.draft_tokens > 0
+    # no reply beat its deadline: nothing was verified, no accept-length
+    # histogram entries, and one late drop per missed verification group
+    assert st_.accepted_tokens == 0 and st_.accept_lens == []
+    assert st_.cloud_requests <= len(PROMPT_LENS)   # admission prefills only
+    assert r["late_drops"] == st_.deadline_misses
+    # whole-draft commits: every draft token ended as an l2 exit
+    assert st_.exits_l2 >= st_.draft_tokens
