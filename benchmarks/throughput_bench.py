@@ -32,6 +32,18 @@ token-identical to the blocking run.  With ``--check`` it asserts the
 K-token sweep beats spec_k=1 on virtual makespan and that the acceptance
 rate is measured; per-k rows (incl. ``accept_rate``) land in ``--json``.
 
+``--prefix-share`` runs the radix prefix-sharing sweep instead
+(docs/kv_paging.md §Prefix sharing): N streams whose prompts share a
+common system prefix, admitted via chunked prefill on the paged pool
+with and without ``prefix_share``, on float32 and int8 pools.  Sharing
+maps refcounted prefix pages into every stream's block table (skipping
+their prefill chunks and hidden-state uploads) and copy-on-writes the
+partial tail page on first divergence; exact-duplicate prompts hit a
+cached terminal.  With ``--check`` it asserts fewer prefill chunks,
+fewer page allocations, fewer uploaded bytes, >=1 CoW copy and
+token-identical streams for both dtypes, plus an all-terminal second
+wave of re-sent prompts.
+
 ``--cloud-batch`` runs the multi-client sweep instead: ``--clients N``
 edge engines (one slot + one WiFi link each) share one cloud, and the
 shared ``CloudBatcher`` (one masked cloud step per wave of concurrent
@@ -45,6 +57,7 @@ token-identical streams to N independent sync runs.
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --channel sim --check
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --clients 4 --cloud-batch --check
     PYTHONPATH=src:. python benchmarks/throughput_bench.py --spec-k 4 --check
+    PYTHONPATH=src:. python benchmarks/throughput_bench.py --prefix-share --check
 """
 from __future__ import annotations
 
@@ -401,6 +414,121 @@ def run_oversubscribe(csv: bool = False, *, n_clients: int = 8,
     return out
 
 
+PREFIX_SLOTS = 4
+PREFIX_PAGE_SIZE = 8     # small pages -> several shared chunks per prompt
+
+
+def _prefix_requests(data, n_clients: int, page_size: int):
+    """N prompts sharing a common system prefix (2 full pages + a partial
+    tail page), each with a distinct continuation, plus two exact
+    duplicates of earlier prompts (whole-prompt terminal hits)."""
+    system = np.asarray(data.sample_tokens(2 * page_size + 3))
+    prompts = []
+    for i in range(max(1, n_clients - 2)):
+        suffix = np.asarray(data.sample_tokens(4 + i % 6))
+        prompts.append(np.concatenate([system, suffix]).astype(np.int32))
+    while len(prompts) < n_clients:
+        prompts.append(prompts[len(prompts) % 2].copy())
+    return prompts
+
+
+def run_prefix_share(csv: bool = False, *, n_clients: int = 8,
+                     max_new: int = 16, theta: float = 0.8,
+                     check: bool = False, rows: list = None) -> dict:
+    """Radix prefix sharing + copy-on-write vs. plain chunked prefill
+    (docs/kv_paging.md §Prefix sharing): N streams whose prompts open with
+    a common system prefix, admitted through the chunked-prefill path on
+    the paged pool, with and without ``prefix_share``.  Sharing maps the
+    prefix pages into every stream's block table (refcounted), skips their
+    prefill chunks AND their hidden-state uploads, and copy-on-writes the
+    partial tail page when each stream's first divergent token lands.
+    Exact-duplicate prompts hit a cached terminal (zero prefill compute,
+    memoized first token).  Both variants must emit token-identical
+    streams.  ``--check`` asserts, for float32 and int8 paged pools:
+    fewer prefill chunks, fewer page allocations, fewer uploaded bytes,
+    >0 prefix-hit tokens, >=1 CoW copy, token-identical output — plus an
+    all-terminal second wave (re-sent prompts, zero prefill chunks)."""
+    tiny = tiny_trained_model()
+    model, params, data = tiny["model"], tiny["params"], tiny["data"]
+    ps = PREFIX_PAGE_SIZE
+    prompts = _prefix_requests(data, n_clients, ps)
+    max_len = max(len(p) for p in prompts)
+    max_seq = -(-(max_len + max_new) // ps) * ps + ps
+    gkw = dict(num_slots=PREFIX_SLOTS, max_seq=max_seq, max_ctx=max_seq,
+               num_pages=PREFIX_SLOTS * (max_seq // ps) * 2)
+
+    out: dict = {}
+    print("kv_dtype,variant,prefill_chunks,prefix_hit_tokens,cow_copies,"
+          "page_allocs,upload_kb,tokens_equal")
+    for kv_dtype in ("float32", "int8"):
+        ccfg = lambda **kw: CollmConfig(theta=theta, kv_layout="paged",
+                                        page_size=ps, kv_dtype=kv_dtype,
+                                        chunked_prefill=True, **kw)
+        r_un = ServingSystem(model, params, ccfg()).generate(
+            prompts, max_new, mode="collm", **gkw)
+        sys_sh = ServingSystem(model, params, ccfg(prefix_share=True))
+        r_sh = sys_sh.generate(prompts, max_new, mode="collm", **gkw)
+        # second wave on the warm system: every re-sent prompt should hit
+        # a cached terminal (zero prefill compute, memoized first token)
+        r_w2 = sys_sh.generate(prompts[:2], max_new, mode="collm", **gkw)
+        out[kv_dtype] = {}
+        for variant, r in (("unshared", r_un), ("shared", r_sh)):
+            st = r["stats"]
+            equal = r["tokens"] == r_un["tokens"]
+            row = {"mode": "prefix_share", "kv_dtype": kv_dtype,
+                   "variant": variant, "clients": n_clients,
+                   "slots": PREFIX_SLOTS, "max_new": max_new,
+                   "prefill_chunks": st.prefill_chunks,
+                   "prefix_hit_tokens": st.prefix_hit_tokens,
+                   "cow_copies": st.cow_copies,
+                   "page_allocs": r["pool_stats"]["allocs"],
+                   "upload_bytes": st.upload_bytes,
+                   "tokens_equal": equal}
+            out[kv_dtype][variant] = row
+            if rows is not None:
+                rows.append(row)
+            print(f"{kv_dtype},{variant},{st.prefill_chunks},"
+                  f"{st.prefix_hit_tokens},{st.cow_copies},"
+                  f"{row['page_allocs']},{st.upload_bytes / 1e3:.1f},"
+                  f"{equal}")
+        out[kv_dtype]["wave2"] = {
+            "prefill_chunks": r_w2["stats"].prefill_chunks,
+            "tokens_equal": r_w2["tokens"] == r_un["tokens"][:2]}
+
+    if check:
+        for kv_dtype, o in out.items():
+            un, sh, w2 = o["unshared"], o["shared"], o["wave2"]
+            assert sh["tokens_equal"], \
+                f"{kv_dtype}: shared streams diverge from unshared"
+            assert sh["prefill_chunks"] < un["prefill_chunks"], (
+                f"{kv_dtype}: sharing should skip prefix prefill chunks "
+                f"({sh['prefill_chunks']} vs {un['prefill_chunks']})")
+            assert sh["prefix_hit_tokens"] > 0, \
+                f"{kv_dtype}: no prefix hits recorded"
+            assert sh["cow_copies"] >= 1, (
+                f"{kv_dtype}: the partial tail page must be "
+                f"copy-on-written at least once")
+            assert sh["upload_bytes"] < un["upload_bytes"], (
+                f"{kv_dtype}: deduped uploads should cut wire bytes "
+                f"({sh['upload_bytes']} vs {un['upload_bytes']})")
+            assert sh["page_allocs"] < un["page_allocs"], (
+                f"{kv_dtype}: shared pages should cut fresh allocations "
+                f"({sh['page_allocs']} vs {un['page_allocs']})")
+            assert w2["tokens_equal"] and w2["prefill_chunks"] == 0, (
+                f"{kv_dtype}: wave-2 identical prompts should be "
+                f"all-terminal (got {w2['prefill_chunks']} chunks)")
+        f32 = out["float32"]
+        print(f"# check passed: {f32['shared']['prefill_chunks']} vs "
+              f"{f32['unshared']['prefill_chunks']} prefill chunks, "
+              f"{f32['shared']['page_allocs']} vs "
+              f"{f32['unshared']['page_allocs']} page allocs, "
+              f"{f32['shared']['upload_bytes']} vs "
+              f"{f32['unshared']['upload_bytes']} upload bytes "
+              f"(float32; int8 likewise); streams identical, wave 2 "
+              f"all-terminal")
+    return out
+
+
 # high-RTT WAN-class link for the drafting sweep: the per-request RTT tax
 # and the per-request cloud service cost are what k-token drafts amortize
 # (k tokens per verification request instead of one request per token)
@@ -598,7 +726,21 @@ def main() -> None:
                     help="paged-KV preemption sweep: page budget at ~60%% "
                          "of worst-case demand, optimistic+preemptive vs "
                          "admission-blocked paging")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="radix prefix sharing sweep: N streams with a "
+                         "common system prompt, shared vs. unshared "
+                         "chunked prefill on float32 + int8 paged pools "
+                         "(--check asserts fewer chunks/pages/upload "
+                         "bytes, token-identical streams)")
     args = ap.parse_args()
+    if args.prefix_share:
+        rows = []
+        run_prefix_share(n_clients=args.clients, max_new=args.max_new,
+                         theta=args.theta, check=args.check, rows=rows)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+        return
     if args.spec_k:
         rows = []
         run_spec(n_clients=args.clients, max_new=args.max_new,

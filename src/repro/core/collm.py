@@ -101,6 +101,24 @@ class CollmConfig:
     # greedy token streams are identical to an un-preempted run.
     preemption: str = "off"           # "off" | "recompute" | "swap"
     preempt_policy: str = "youngest"  # "youngest" | "fewest-pages" | "lru"
+    # Chunked prefill admission (docs/serving.md): instead of one
+    # monolithic padded prefill at admission, the prompt is prefilled in
+    # page-sized chunks interleaved with decode ticks (a per-slot
+    # ``prefill_remaining`` state machine), so a long prompt stops
+    # monopolizing an engine tick.  Requires kv_layout="paged" and an
+    # attention-only decoder-only model (the chunk step rides the paged
+    # decode write path).  Chunked runs are token-identical to each other
+    # but may differ from the monolithic path in float ulps (different
+    # reduction order) — comparisons should hold the admission mode fixed.
+    chunked_prefill: bool = False
+    # Radix prefix sharing + copy-on-write (docs/kv_paging.md §Prefix
+    # sharing): the PagePool keeps a trie of page-aligned prompt token
+    # chunks so streams whose prompts share a prefix map the SAME physical
+    # pages (refcounted); the first divergent write to a shared page
+    # triggers a copy-on-write split.  Identical whole prompts additionally
+    # cache their greedy first token, skipping prefill entirely.  Requires
+    # chunked_prefill=True (suffix-only compute) and greedy sampling.
+    prefix_share: bool = False
 
 
 class EdgeStepOut(NamedTuple):
@@ -137,6 +155,13 @@ class CoLLM:
         if ccfg.spec_k > 1 and not ccfg.speculative:
             raise ValueError("spec_k > 1 requires speculative=True "
                              "(drafting generalizes the speculative path)")
+        if ccfg.chunked_prefill and ccfg.kv_layout != "paged":
+            raise ValueError('chunked_prefill=True requires kv_layout='
+                             '"paged" (chunks ride the paged write path)')
+        if ccfg.prefix_share and not ccfg.chunked_prefill:
+            raise ValueError("prefix_share=True requires chunked_prefill="
+                             "True (suffix-only compute needs chunk-"
+                             "granular admission)")
         self.model = model
         self.ccfg = ccfg
         self.l_ee1 = cfg.exit_layers[0]
@@ -246,6 +271,55 @@ class CoLLM:
             params, jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1))
         new_caches = self.model.invalidate_cache_after(new_caches, true_len)
         return logits, new_caches
+
+    # ------------------------------------------------------------------
+    # chunked prefill (page-sized chunks interleaved with decode ticks)
+    # ------------------------------------------------------------------
+    def edge_prefill_chunk(self, params: Params, tokens: jax.Array,
+                           pos0: jax.Array, chunk_len: jax.Array,
+                           caches: Dict[int, Pytree],
+                           block_tbl: jax.Array):
+        """Edge prefill of ONE page-sized prompt chunk (tokens: (1, C),
+        right-padded to the page size; ``pos0`` is the chunk's first
+        absolute position, ``chunk_len`` its true token count).
+
+        Rides the paged decode write path (``chunk_attention_paged``): KV
+        rows land in the pages the block table maps, pad positions write to
+        the trash page via the per-token write mask.  Shapes are fixed at
+        (1, page_size) so every chunk of every stream compiles once and —
+        crucially for prefix sharing — computes bit-identical page content
+        for identical (tokens, pos0).  Returns (decisions at the chunk's
+        true last position, l_ee1 hidden chunk for upload, caches)."""
+        c = tokens.shape[1]
+        wm = (jnp.arange(c, dtype=jnp.int32)[None, :]
+              < jnp.asarray(chunk_len, jnp.int32))
+        x, exit_h, new_caches = self.model.decode_step(
+            params, tokens, caches, pos0, self.edge_segs,
+            block_tbl=block_tbl, write_mask=wm)
+        last = jnp.asarray(chunk_len, jnp.int32) - 1
+        decisions = {l: evaluate_exit(self.model.exit_logits(
+            params, l, jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1)))
+            for l, h in exit_h.items()}
+        return decisions, exit_h[self.l_ee1], new_caches
+
+    def cloud_prefill_chunk(self, params: Params, h1: jax.Array,
+                            pos0: jax.Array, chunk_len: jax.Array,
+                            caches: Dict[int, Pytree],
+                            block_tbl: jax.Array):
+        """Cloud prefill of one uploaded hidden chunk (h1: (1, C, d));
+        returns (logits at the chunk's true last position, caches).  The
+        logits only matter for the prompt's final chunk — earlier chunks
+        call this purely for the KV side effect."""
+        c = h1.shape[1]
+        wm = (jnp.arange(c, dtype=jnp.int32)[None, :]
+              < jnp.asarray(chunk_len, jnp.int32))
+        x, _, new_caches = self.model.decode_from_hidden(
+            params, h1, caches, pos0, self.cloud_segs,
+            block_tbl=block_tbl, write_mask=wm)
+        last = jnp.asarray(chunk_len, jnp.int32) - 1
+        logits = self.model.logits(
+            params, jax.lax.dynamic_slice_in_dim(x, last, 1, axis=1))
+        return logits[:, 0], new_caches
 
     # ------------------------------------------------------------------
     # decode steps

@@ -41,6 +41,8 @@ class ClientState:
     uploads_released: int = 0
     bytes_received: int = 0
     requests_served: int = 0
+    prefix_reused_tokens: int = 0   # prompt tokens deduped against another
+                                    # client's cached upload (never re-sent)
 
 
 class ContentManager:
@@ -138,6 +140,24 @@ class ContentManager:
         c = self._clients.get(device_id)
         return bool(c and pos in c.pending_uploads)
 
+    # -- prefix dedup ledger -------------------------------------------------
+    def note_prefix_reuse(self, device_id: str, tokens: int) -> None:
+        """Record that ``tokens`` prompt tokens of this client were served
+        from another client's cached cloud prefix (shared KV pages) and
+        therefore never crossed the wire.  Pure accounting — the dedup
+        decision itself lives in the engine/batcher admission path — but it
+        keeps the §4.2 content-management story auditable: received bytes +
+        reused tokens together cover every prompt position."""
+        c = self._client(device_id)
+        c.prefix_reused_tokens += tokens
+        c.last_active = self._clock()
+
+    def prefix_reused_tokens(self, device_id: Optional[str] = None) -> int:
+        if device_id is not None:
+            c = self._clients.get(device_id)
+            return 0 if c is None else c.prefix_reused_tokens
+        return sum(c.prefix_reused_tokens for c in self._clients.values())
+
     # -- preemption checkpoint support ---------------------------------------
     # A preempted stream's pending uploads move into its host-side
     # checkpoint and come back verbatim at resume.  Neither direction is a
@@ -225,6 +245,7 @@ class ContentManager:
                 "uploads_released": c.uploads_released,
                 "bytes_received": c.bytes_received,
                 "requests_served": c.requests_served,
+                "prefix_reused_tokens": c.prefix_reused_tokens,
                 "pending": len(c.pending_uploads)}
             for d, c in self._clients.items()
         }

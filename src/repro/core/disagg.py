@@ -65,6 +65,26 @@ class DeviceTransferChannel(CloudChannel):
                            now=now, nbytes_up=packet_bytes(packet))
 
 
+def stream_prompt_upload(channel: CloudChannel, h1: jax.Array, fmt: str,
+                         cloud_dev, chunk: int) -> jax.Array:
+    """Pipeline the prompt hidden-state upload in ``chunk``-token slices
+    instead of one monolithic packet: each slice is quantized and its
+    ``jax.device_put`` dispatched immediately, so slice i+1's quantize
+    overlaps slice i's DCN transfer (the chunked-prefill admission path of
+    the batched engine does the same thing one page at a time — later
+    chunks cross the wire while earlier ones compute).  Wire bytes are
+    billed per slice; quantization is per-slice too, which for int8 means
+    per-slice scales — the same positions-on-the-wire layout the batched
+    engine's per-chunk uploads produce.  Returns the dequantized on-cloud
+    hidden sequence, ready for ``cloud_prefill``."""
+    parts = []
+    for i in range(0, h1.shape[1], chunk):
+        sl = quantize(h1[:, i:i + chunk], fmt)
+        channel.notify_upload(0, packet_bytes(sl), 0.0)
+        parts.append(jax.device_put(sl, cloud_dev))
+    return jnp.concatenate([dequantize(p) for p in parts], axis=1)
+
+
 @dataclasses.dataclass
 class TierPrograms:
     edge_step: Any
@@ -151,12 +171,15 @@ class TwoTierRuntime:
         self.channel = DeviceTransferChannel(
             self._cloud, params_cloud, self.cloud_mesh.devices.flat[0])
 
-    def decode(self, prompt: jax.Array, max_new: int, max_seq: int = 256):
+    def decode(self, prompt: jax.Array, max_new: int, max_seq: int = 256,
+               upload_chunk: int = 0):
         """Single-stream decode across the two tiers.  Every cloud request
         goes submit -> poll through ``self.channel`` (the same protocol
         the batched engine's simulated channels speak); the transfer and
         the cloud program are dispatched asynchronously and the edge only
-        blocks when it materializes the reply token."""
+        blocks when it materializes the reply token.  ``upload_chunk > 0``
+        streams the prompt upload in that many-token slices
+        (``stream_prompt_upload``) instead of one monolithic packet."""
         co = self.collm
         cloud_dev = self.cloud_mesh.devices.flat[0]
         chan = self.channel
@@ -164,11 +187,15 @@ class TwoTierRuntime:
         chan.attach_caches(co.init_cloud_cache(1, max_seq))
         _, h1, e_caches = co.edge_prefill(self._pe, {"tokens": prompt},
                                           e_caches)
-        h1q = quantize(h1, self.ccfg.wire_format)
-        chan.notify_upload(0, packet_bytes(h1q), 0.0)
-        h1q = jax.device_put(h1q, cloud_dev)           # prompt upload (DCN)
-        logits, c_caches = co.cloud_prefill(self._pc, dequantize(h1q),
-                                            chan.caches)
+        if upload_chunk > 0:
+            h1c = stream_prompt_upload(chan, h1, self.ccfg.wire_format,
+                                       cloud_dev, upload_chunk)
+        else:
+            h1q = quantize(h1, self.ccfg.wire_format)
+            chan.notify_upload(0, packet_bytes(h1q), 0.0)
+            h1q = jax.device_put(h1q, cloud_dev)       # prompt upload (DCN)
+            h1c = dequantize(h1q)
+        logits, c_caches = co.cloud_prefill(self._pc, h1c, chan.caches)
         chan.attach_caches(c_caches)
         tok = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
         toks = [int(tok[0])]

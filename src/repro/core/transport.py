@@ -66,6 +66,19 @@ def hidden_wire_bytes(d_model: int, fmt: str, seq: int = 1) -> int:
     return packet_bytes(spec)
 
 
+def prompt_upload_bytes(d_model: int, fmt: str, prompt_len: int,
+                        hit_tokens: int = 0) -> int:
+    """Wire size of one stream's prompt hidden-state upload after prefix
+    dedup: only the ``prompt_len - hit_tokens`` suffix positions cross the
+    wire (the hit prefix already lives at the cloud service point as shared
+    KV pages; a whole-prompt hit uploads nothing).  Single source of truth
+    for the engine's admission billing and the bench's upload-byte gate."""
+    send = max(0, int(prompt_len) - int(hit_tokens))
+    if send == 0:
+        return 0
+    return hidden_wire_bytes(d_model, fmt, seq=send)
+
+
 def quantize(x: jax.Array, fmt: str) -> Dict[str, jax.Array]:
     if fmt == "float32":
         return {"data": x.astype(jnp.float32)}

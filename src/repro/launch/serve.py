@@ -62,6 +62,15 @@ def main():
     ap.add_argument("--preempt-policy", default="youngest",
                     choices=["youngest", "fewest-pages", "lru"],
                     help="victim selection under --preemption")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="prefill prompts one page-sized chunk per tick "
+                         "interleaved with decode (needs --kv-layout "
+                         "paged)")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="radix prefix cache: streams sharing a prompt "
+                         "prefix map the same refcounted KV pages, "
+                         "copy-on-write on divergence (needs "
+                         "--chunked-prefill)")
     ap.add_argument("--channel", default="sync", choices=["sync", "sim"],
                     help="sim: WiFi-class async channel in virtual time")
     ap.add_argument("--deadline", type=float, default=math.inf,
@@ -103,6 +112,12 @@ def main():
     if args.spec_k != 1 and not args.speculative:
         ap.error("--spec-k needs --speculative (drafting generalizes the "
                  "speculative path)")
+    if args.chunked_prefill and args.kv_layout != "paged":
+        ap.error("--chunked-prefill writes chunks through the paged "
+                 "decode path; needs --kv-layout paged")
+    if args.prefix_share and not args.chunked_prefill:
+        ap.error("--prefix-share admits the unshared suffix through "
+                 "chunked prefill; needs --chunked-prefill")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -111,13 +126,26 @@ def main():
         params, _ = load_checkpoint(args.ckpt, params)
     data = SyntheticCorpus(DataConfig(vocab_size=cfg.vocab_size, seq_len=64,
                                       batch_size=1))
-    prompts = [data.sample_tokens(args.prompt_len)
-               for _ in range(args.clients)]
-    system = ServingSystem(model, params, CollmConfig(
+    ccfg = CollmConfig(
         theta=args.theta, wire_format=args.wire, backfill=args.backfill,
         speculative=args.speculative, spec_k=args.spec_k,
         kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
-        preemption=args.preemption, preempt_policy=args.preempt_policy))
+        preemption=args.preemption, preempt_policy=args.preempt_policy,
+        chunked_prefill=args.chunked_prefill,
+        prefix_share=args.prefix_share)
+    prompts = [data.sample_tokens(args.prompt_len)
+               for _ in range(args.clients)]
+    if args.prefix_share:
+        # the workload the flag exists for: every client opens with the
+        # same system prompt (2.5 KV pages of it, so full pages can be
+        # shared and the partial tail exercises copy-on-write), then its
+        # own request
+        import numpy as np
+        system_prefix = data.sample_tokens(2 * ccfg.page_size
+                                           + ccfg.page_size // 2)
+        prompts = [np.concatenate([system_prefix, p]).astype(p.dtype)
+                   for p in prompts]
+    system = ServingSystem(model, params, ccfg)
     if args.cloud_batch:
         gen_kw = {}
         if args.channel == "sim":
@@ -155,6 +183,10 @@ def main():
     if args.preemption != "off":
         print(f"preemptions={st.preemptions} policy={args.preempt_policy} "
               f"mode={args.preemption}")
+    if args.chunked_prefill:
+        print(f"prefill_chunks={st.prefill_chunks} "
+              f"prefix_hit_tokens={st.prefix_hit_tokens} "
+              f"cow_copies={st.cow_copies}")
     if args.speculative and st.draft_tokens:
         print(f"draft: k={args.spec_k} draft_tokens={st.draft_tokens} "
               f"accepted={st.accepted_tokens} "
@@ -166,7 +198,14 @@ def main():
               f"fallbacks={st.fallbacks} stall={st.stall_s:.3f}s "
               f"overlap={st.overlap_s:.3f}s late_drops={r['late_drops']}")
     if args.mode != "cloud":
-        base = system.generate(prompts, args.max_new, mode="cloud")
+        base_sys = system
+        if args.chunked_prefill:
+            # chunked prefill is edge-resident; the cloud baseline runs on
+            # a plain config (same params, same greedy streams)
+            base_sys = ServingSystem(model, params, CollmConfig(
+                theta=args.theta, wire_format=args.wire,
+                kv_layout=args.kv_layout, kv_dtype=args.kv_dtype))
+        base = base_sys.generate(prompts, args.max_new, mode="cloud")
         ags = [token_agreement(a, b)
                for a, b in zip(r["tokens"], base["tokens"])]
         print(f"agreement vs cloud (LCS-F1): "

@@ -545,6 +545,86 @@ def decode_attention_paged(params: Params, cfg: ModelConfig, x: jax.Array,
     return y, cache
 
 
+def chunk_attention_paged(params: Params, cfg: ModelConfig, x: jax.Array,
+                          cache: Params, pos: jax.Array,
+                          block_tbl: jax.Array, *,
+                          window: int = 0, use_rope: bool = True,
+                          write_mask: Optional[jax.Array] = None
+                          ) -> Tuple[jax.Array, Params]:
+    """Multi-token chunk decode over a block-paged KV cache — the compute
+    path of chunked prefill (``decode_attention_paged`` generalized from
+    one token to a page-sized chunk).
+
+    x: (B,C,d); pos: scalar or per-row (B,) FIRST position of each row's
+    chunk (token ``i`` sits at ``pos + i``); block_tbl: (B, max_logical).
+    Each token writes its K/V at page ``block_tbl[b, (pos+i) // ps]``, slot
+    ``(pos+i) % ps``; tokens without a mapping or excluded by
+    ``write_mask`` ((B,C) per-token, or (B,) per-row) go to the trash page
+    with ``pos = -1`` — this is how a right-padded final chunk keeps its
+    pad positions invisible.  Writes land before the gather, so tokens of
+    the same chunk attend to each other through the pages, and the causal
+    ``kpos <= qpos`` mask plays the same role as in the dense prefill."""
+    b, c, _ = x.shape
+    hd = cfg.resolved_head_dim
+    h, kvh = cfg.n_heads, cfg.n_kv_heads
+    ps = cache["kp"].shape[1]
+    pos0 = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    pos_bc = pos0[:, None] + jnp.arange(c, dtype=jnp.int32)     # (B,C)
+    q = jnp.einsum("bsd,de->bse", x, params["wq"].astype(x.dtype))
+    knew = jnp.einsum("bsd,de->bse", x, params["wk"].astype(x.dtype))
+    vnew = jnp.einsum("bsd,de->bse", x, params["wv"].astype(x.dtype))
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+        knew = knew + params["bk"].astype(x.dtype)
+        vnew = vnew + params["bv"].astype(x.dtype)
+    q = q.reshape(b, c, h, hd)
+    knew = knew.reshape(b, c, kvh, hd)
+    vnew = vnew.reshape(b, c, kvh, hd)
+    if use_rope:
+        q = apply_rope(q, pos_bc, cfg.rope_theta)
+        knew = apply_rope(knew, pos_bc, cfg.rope_theta)
+
+    bidx = jnp.arange(b)[:, None]
+    page = block_tbl[bidx, pos_bc // ps]                        # (B,C)
+    ok = page >= 0
+    if write_mask is not None:
+        wm = write_mask if write_mask.ndim == 2 else write_mask[:, None]
+        ok &= wm
+    dest = jnp.where(ok, page, 0)
+    slot = (pos_bc % ps).astype(jnp.int32)
+    new_cache = {"pos": cache["pos"].at[dest, slot].set(
+        jnp.where(ok, pos_bc, -1))}
+    if "ks" in cache:                              # quantize on write
+        qk, sk = quantize_kv_rows(knew)            # (B,C,KV,d), (B,C,KV)
+        qv, sv = quantize_kv_rows(vnew)
+        new_cache["kp"] = cache["kp"].at[dest, slot].set(qk)
+        new_cache["vp"] = cache["vp"].at[dest, slot].set(qv)
+        new_cache["ks"] = cache["ks"].at[dest, slot].set(sk)
+        new_cache["vs"] = cache["vs"].at[dest, slot].set(sv)
+    else:
+        new_cache["kp"] = cache["kp"].at[dest, slot].set(
+            knew.astype(cache["kp"].dtype))
+        new_cache["vp"] = cache["vp"].at[dest, slot].set(
+            vnew.astype(cache["vp"].dtype))
+    cache = new_cache
+
+    k, v, kpos = paged_gather(cache, block_tbl)
+    g = h // kvh
+    qg = q.reshape(b, c, kvh, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= pos_bc[..., None])
+    if window:
+        valid &= (pos_bc[..., None] - kpos[:, None, :]) < window
+    logits = jnp.where(valid[:, None, None, :, :], logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    out = out.reshape(b, c, h * hd).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, params["wo"].astype(x.dtype))
+    return y, cache
+
+
 def build_cross_cache(params: Params, cfg: ModelConfig,
                       enc_out: jax.Array, dtype=None) -> Params:
     """Precompute encoder kv for cross-attention decode."""

@@ -24,8 +24,9 @@ from repro.models import mamba2 as m2
 from repro.models import moe as moe_mod
 from repro.models import xlstm
 from repro.models.attention import (attention_forward, build_cross_cache,
-                                    decode_attention, decode_attention_paged,
-                                    init_attn_cache, init_paged_attn_cache)
+                                    chunk_attention_paged, decode_attention,
+                                    decode_attention_paged, init_attn_cache,
+                                    init_paged_attn_cache)
 from repro.models.common import dense_init, layer_norm, rms_norm, split_rngs
 
 Params = Dict[str, Any]
@@ -228,9 +229,17 @@ def block_forward(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
 # ---------------------------------------------------------------------------
 def block_decode(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
                  cache: Params, ctx: BlockCtx) -> Tuple[jax.Array, Params]:
+    """Single-token decode; paged caches also accept a multi-token chunk
+    (``x``: (B,C,d) with ``ctx.pos`` the chunk's first position and
+    ``ctx.write_mask`` optionally (B,C)) — the chunked-prefill path."""
     if kind in (DENSE, SHARED_ATTN, MOE):
         h = _norm(x, params, cfg, "ln1")
-        if "kp" in cache["self"]:
+        if "kp" in cache["self"] and x.shape[1] > 1:
+            att, new_self = chunk_attention_paged(
+                params["attn"], cfg, h, cache["self"], ctx.pos,
+                ctx.block_tbl, window=ctx.window, use_rope=cfg.use_rope,
+                write_mask=ctx.write_mask)
+        elif "kp" in cache["self"]:
             att, new_self = decode_attention_paged(
                 params["attn"], cfg, h, cache["self"], ctx.pos,
                 ctx.block_tbl, window=ctx.window, use_rope=cfg.use_rope,

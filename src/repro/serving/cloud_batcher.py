@@ -46,7 +46,7 @@ import numpy as np
 
 from repro.core.collm import CoLLM
 from repro.core.content_manager import ContentManager
-from repro.core.paging import PagePool, pages_needed
+from repro.core.paging import OutOfPages, PagePool, pages_needed
 from repro.models.attention import paged_reset_pages, paged_scatter_prefill
 
 Pytree = Any
@@ -170,6 +170,23 @@ def _gather_pages_tree(caches: Pytree, phys: jax.Array) -> Pytree:
     return {si: go(c) for si, c in caches.items()}
 
 
+def _copy_pages_tree(caches: Pytree, src, dst) -> Pytree:
+    """Copy-on-write device half: duplicate physical page ``src`` into
+    ``dst`` across every paged cache node.  Generic over the node's
+    leaves, so int8 nodes' quantized K/V *and* their scale rows ride
+    along; ``src``/``dst`` trace as scalars (one compile for all ids)."""
+    def go(c: Pytree) -> Pytree:
+        if isinstance(c, dict):
+            if "kp" in c:
+                if _page_axis(c) == 1:
+                    return {k: v.at[:, dst].set(v[:, src])
+                            for k, v in c.items()}
+                return {k: v.at[dst].set(v[src]) for k, v in c.items()}
+            return {k: go(v) for k, v in c.items()}
+        return c
+    return {si: go(c) for si, c in caches.items()}
+
+
 def _write_pages_tree(caches: Pytree, phys: jax.Array,
                       data: Pytree) -> Pytree:
     """Swap-in: write snapshotted page contents into (freshly allocated)
@@ -234,6 +251,7 @@ SCATTER_PAGED = jax.jit(_scatter_row_paged)
 RESET_PAGES = jax.jit(_reset_pages_tree)
 GATHER_PAGES = jax.jit(_gather_pages_tree)
 WRITE_PAGES = jax.jit(_write_pages_tree)
+COPY_PAGES = jax.jit(_copy_pages_tree)
 
 
 def _jit(collm: CoLLM, name: str):
@@ -270,6 +288,8 @@ class BatcherStats:
     rows: int = 0               # summed rows served by those calls
     cancelled: int = 0
     prefills: int = 0
+    prefill_chunks: int = 0     # chunked-admission cloud prefill calls
+    prefix_hit_tokens: int = 0  # prompt tokens served from shared pages
     restores: int = 0           # preempted-stream cloud-KV replays
     swaps: int = 0              # cloud rows swapped out to host
     # host seconds spent in batched wave compute.  Prefill time is NOT
@@ -285,6 +305,8 @@ class BatcherStats:
         return {"requests": self.requests, "steps": self.steps,
                 "mean_batch": round(self.mean_batch, 2),
                 "cancelled": self.cancelled, "prefills": self.prefills,
+                "prefill_chunks": self.prefill_chunks,
+                "prefix_hit_tokens": self.prefix_hit_tokens,
                 "restores": self.restores, "swaps": self.swaps,
                 "cloud_time_s": round(self.cloud_time, 4)}
 
@@ -315,7 +337,8 @@ class CloudBatcher:
             self.max_ctx = max_ctx or max_seq
             n_pages = num_pages or num_slots * pages_needed(self.max_ctx, ps)
             self.pool = PagePool(n_pages, ps, num_slots,
-                                 pages_needed(self.max_ctx, ps))
+                                 pages_needed(self.max_ctx, ps),
+                                 prefix_cache=collm.ccfg.prefix_share)
             row_seq = _bucket(self.max_ctx)
             self.caches = collm.init_cloud_cache_paged(
                 num_slots, self.pool.num_pages, ps)
@@ -330,6 +353,7 @@ class CloudBatcher:
         self._ring_cloud = _jit(collm, "ring_cloud_steps")
         self._ring_cloud_all = _jit(collm, "ring_cloud_steps_all")
         self._cloud_prefill = _jit(collm, "cloud_prefill_padded")
+        self._cloud_chunk = _jit(collm, "cloud_prefill_chunk")
         self._invalidate_rows = _jit(collm, "invalidate_rows_after")
         self._scatter = SCATTER
         self._scatter_paged = SCATTER_PAGED
@@ -354,18 +378,42 @@ class CloudBatcher:
                        - self.pool.owned_pages(slot))
         return out
 
-    def can_admit(self, budget_tokens: int) -> bool:
-        """One more stream of ``prompt + max_new`` tokens, right now?"""
+    def can_admit(self, budget_tokens: int, hit_pages: int = 0) -> bool:
+        """One more stream of ``prompt + max_new`` tokens, right now?
+        ``hit_pages`` discounts prompt pages a prospective prefix-cache hit
+        would map instead of allocating (see ``PagePool.can_admit``), and
+        pages held only by the prefix cache count as available — they come
+        back on demand through ``evict_prefix``."""
         if self.cm.cloud_slots_free() <= 0:
             return False
         if self.pool is not None:
-            need = pages_needed(budget_tokens, self.pool.page_size)
+            need = pages_needed(budget_tokens, self.pool.page_size) \
+                - hit_pages
             if need > self.pool.num_pages:
                 raise ValueError(
                     f"stream of {budget_tokens} tokens needs more pages "
                     f"than the cloud pool has ({self.pool.num_pages})")
-            return need <= self.pool.free_pages - self._outstanding_pages()
+            avail = (self.pool.free_pages + self.pool.reclaimable_pages
+                     - self._outstanding_pages())
+            return need <= avail
         return True
+
+    def _alloc(self, slot: int, lp: int) -> None:
+        """Pool alloc that reclaims prefix-cache pages under pressure: a
+        failed alloc first evicts LRU trie entries (their device ``pos``
+        markers are invalidated here, so the recycled page cannot leak
+        stale K/V) and retries before letting ``OutOfPages`` escape."""
+        try:
+            self.pool.alloc(slot, lp)
+        except OutOfPages:
+            freed = self.pool.evict_prefix(1)
+            if not freed:
+                raise
+            ids = np.full((self.pool.max_logical,), -1, np.int32)
+            ids[:len(freed)] = freed
+            self.caches = self._reset_pages(self.caches, jnp.asarray(ids))
+            self.pool.alloc(slot, lp)
+        self._tbl_device = None
 
     def admit(self, device_id: str, h1_seq: jax.Array, true_len: int,
               budget_tokens: int) -> jax.Array:
@@ -379,7 +427,7 @@ class CloudBatcher:
         if self.pool is not None:
             n_prompt = pages_needed(true_len, self.pool.page_size)
             for lp in range(n_prompt):
-                self.pool.alloc(slot, lp)
+                self._alloc(slot, lp)
             pad = h1_seq.shape[1]
             pages = np.full((pages_needed(pad, self.pool.page_size),),
                             -1, np.int32)
@@ -394,6 +442,77 @@ class CloudBatcher:
                                               jnp.asarray(pages))
         self.stats.prefills += 1
         return logits
+
+    # -- chunked admission (prefix sharing) --------------------------------
+    def prefix_hit(self, tokens) -> int:
+        """Full-page prefix hit the batcher's OWN pool could serve for
+        this prompt (0 without prefix sharing).  The engine takes the min
+        of the edge-side and cloud-side hits, so upload skipping and
+        cloud-page sharing stay aligned — a chunk is only skipped when
+        BOTH service points already hold it."""
+        if self.pool is None or not self.pool.prefix_cache:
+            return 0
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)]
+        return len(self.pool.match_prefix(toks).pages)
+
+    def admit_begin(self, device_id: str, tokens, true_len: int,
+                    budget_tokens: int, hit_pages: int = 0) -> List[int]:
+        """Chunked admission, bookkeeping half: assign the cloud row, map
+        ``hit_pages`` shared prefix pages out of the batcher's own trie,
+        allocate the remaining prompt pages upfront (chunk compute never
+        allocates mid-flight), and register the prompt's full chunks for
+        future sharers.  Returns the shared page ids — the engine must see
+        ``pages_filled`` on them before uploading chunks that attend past
+        them (their owning stream may still be mid-prefill)."""
+        slot = self.cm.assign_cloud_slot(device_id)
+        self._budget[device_id] = budget_tokens
+        if self.pool is None:
+            return []
+        ps = self.pool.page_size
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)[:true_len]]
+        shared: List[int] = []
+        if hit_pages:
+            hit = self.pool.match_prefix(toks)
+            shared = list(hit.pages[:hit_pages])
+            for lp, page in enumerate(shared):
+                self.pool.share_page(slot, lp, page)
+            self.pool.stats.prefix_hit_tokens += len(shared) * ps
+            self.stats.prefix_hit_tokens += len(shared) * ps
+        for lp in range(len(shared), pages_needed(true_len, ps)):
+            self._alloc(slot, lp)
+        if self.pool.prefix_cache:
+            self.pool.insert_prefix(slot, toks)
+        self._tbl_device = None
+        self.stats.prefills += 1
+        return shared
+
+    def admit_chunk(self, device_id: str, h1: jax.Array, pos0: int,
+                    chunk_len: int) -> jax.Array:
+        """Chunked admission, compute half: cloud-prefill ONE uploaded
+        hidden chunk (h1: (1, C, d), right-padded to the page size) into
+        the stream's pages.  Returns the logits at the chunk's true last
+        position — only the final chunk's matter; earlier chunks run for
+        the KV side effect.  ``pos0``/``chunk_len`` trace as scalars, so
+        every chunk of every stream shares one compile."""
+        slot = self.cm.cloud_slot(device_id)
+        if slot is None:
+            raise KeyError(f"{device_id} has no cloud slot "
+                           "(admit_begin first)")
+        row_tbl = jnp.asarray(self.pool.block_table[slot:slot + 1])
+        logits, self.caches = self._cloud_chunk(
+            self.params, h1, jnp.int32(pos0), jnp.int32(chunk_len),
+            self.caches, row_tbl)
+        self.stats.prefill_chunks += 1
+        ps = self.pool.page_size
+        if chunk_len == ps:
+            self.pool.mark_filled(
+                int(self.pool.block_table[slot, pos0 // ps]))
+        return logits
+
+    def pages_filled(self, pages) -> bool:
+        """True once every given shared page's owning stream has computed
+        its chunk (engine-side stall check for concurrent sharers)."""
+        return self.pool is None or self.pool.pages_filled(pages)
 
     def release(self, device_id: str) -> None:
         """Stream finished (or was preempted): cancel its queued requests,
@@ -431,8 +550,7 @@ class CloudBatcher:
             for p, _ in packets:
                 lp = p // self.pool.page_size
                 if self.pool.block_table[slot, lp] == -1:
-                    self.pool.alloc(slot, lp)
-                    self._tbl_device = None
+                    self._alloc(slot, lp)
         group = {"logits": None, "np": None, "flush": self.flush}
         self._pending.append(_Entry(device_id=device_id, slot=slot, pos=pos,
                                     packets=packets, group=group))
@@ -465,8 +583,7 @@ class CloudBatcher:
             for p, _ in packets:
                 lp = p // self.pool.page_size
                 if self.pool.block_table[slot, lp] == -1:
-                    self.pool.alloc(slot, lp)
-                    self._tbl_device = None
+                    self._alloc(slot, lp)
         group = {"logits": None, "all": None, "np": None, "np_all": None,
                  "flush": self.flush}
         self._pending.append(_Entry(device_id=device_id, slot=slot,
@@ -516,8 +633,7 @@ class CloudBatcher:
             for p, _ in packets:
                 lp = p // self.pool.page_size
                 if self.pool.block_table[slot, lp] == -1:
-                    self.pool.alloc(slot, lp)
-                    self._tbl_device = None
+                    self._alloc(slot, lp)
         t0 = time.perf_counter()
         ring, ring_pos, valid = build_upload_ring([(slot, packets)], self.B)
         _, self.caches = self._ring_cloud(

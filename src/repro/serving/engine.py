@@ -73,7 +73,7 @@ from repro.core.transport import (TOKEN_BYTES, ChannelStats, CloudChannel,
                                   draft_request_bytes, hidden_wire_bytes)
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
-from repro.serving.cloud_batcher import (RESET_PAGES, SCATTER,
+from repro.serving.cloud_batcher import (COPY_PAGES, RESET_PAGES, SCATTER,
                                          SCATTER_PAGED, WRITE_PAGES,
                                          CloudBatcher, _bucket, _jit,
                                          all_paged, build_upload_ring,
@@ -99,6 +99,13 @@ class GenStats:
     # them — so accepted_tokens / draft_tokens is the draft acceptance rate.
     draft_tokens: int = 0         # draft tokens dispatched for verification
     accepted_tokens: int = 0      # draft tokens the cloud reply validated
+    # prefix sharing / chunked prefill (CollmConfig.prefix_share /
+    # .chunked_prefill): prompt tokens served from shared pages instead of
+    # prefill compute, copy-on-write page splits this stream triggered,
+    # and page-sized prefill chunk ticks it took to admit
+    prefix_hit_tokens: int = 0
+    cow_copies: int = 0
+    prefill_chunks: int = 0
     upload_bytes: int = 0
     edge_time: float = 0.0
     cloud_time: float = 0.0
@@ -313,6 +320,18 @@ class _Slot:
     # (gaps included) without recomputing the hidden states.  Tracked only
     # when preemption is enabled.
     cloud_pkts: List[tuple] = dataclasses.field(default_factory=list)
+    # chunked-prefill state machine (CollmConfig.chunked_prefill): while
+    # ``prefill_prompt`` is set the slot is mid-prefill — each tick computes
+    # ONE page-sized chunk starting at ``prefill_pos``; the remaining
+    # prompt (``prefill_remaining = len(prefill_prompt) - prefill_pos``)
+    # shrinks by page_size per tick.  ``prefill_wait`` /
+    # ``prefill_wait_cloud`` list shared page ids (engine pool / batcher
+    # pool) still being computed by their owning stream: the sharer stalls
+    # until they are marked filled, then computes only its suffix.
+    prefill_prompt: Optional[np.ndarray] = None
+    prefill_pos: int = 0
+    prefill_wait: List[int] = dataclasses.field(default_factory=list)
+    prefill_wait_cloud: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -349,10 +368,22 @@ class BatchScheduler:
     finished slots are refilled from the queue without recompiling.
 
     With ``CollmConfig.kv_layout="paged"`` the scheduler also owns a
-    ``PagePool``: prefill scatters the prompt's K/V into freshly allocated
-    pages, each decode tick allocates a page only when a row crosses a
-    page boundary, and retirement bulk-frees the slot's pages and
-    invalidates them on device.  Admission follows
+    ``PagePool``.  Admission is no longer all-or-nothing monolithic
+    prefill by construction: the default path still prefills the whole
+    prompt in one padded call and scatters its K/V into freshly allocated
+    pages, but with ``CollmConfig.chunked_prefill`` the prompt is
+    prefilled ONE page-sized chunk per tick through the paged decode
+    write path, interleaved with the other slots' decode (per-slot
+    ``prefill_remaining`` state machine; see docs/serving.md).  With
+    ``CollmConfig.prefix_share`` on top, admission first consults the
+    pool's radix prefix index: prompt pages another live stream (or the
+    cache) already holds are mapped by reference (suffix-only prefill,
+    deduped uploads), whole-prompt *terminal* hits skip prefill entirely,
+    and the first divergent write into a shared page splits it
+    copy-on-write (docs/kv_paging.md §Prefix sharing).  Each decode tick
+    allocates a page only when a row crosses a page boundary, and
+    retirement bulk-frees the slot's unshared pages and invalidates them
+    on device.  Admission follows
     ``CollmConfig.preemption``: ``"off"`` keeps the conservative
     worst-case check (an admitted stream can always finish), while
     ``"recompute"``/``"swap"`` admit optimistically on the prompt's pages
@@ -441,10 +472,32 @@ class BatchScheduler:
         if self._spec and not self.model.attention_only():
             raise ValueError("speculative decode rewinds positions; "
                              "recurrent state cannot rewind")
+        # chunked prefill + radix prefix sharing (docs/serving.md,
+        # docs/kv_paging.md §Prefix sharing): admission maps shared-prefix
+        # pages and prefills the suffix one page-sized chunk per tick
+        self._chunked = bool(self.ccfg.chunked_prefill)
+        self._prefix_share = bool(self.ccfg.prefix_share)
+        if self._chunked:
+            if mode == "cloud":
+                raise ValueError(
+                    "chunked_prefill is implemented for the edge-resident "
+                    'modes ("collm"/"standalone"), not mode="cloud"')
+            if not self.model.attention_only():
+                raise ValueError(
+                    "chunked_prefill writes chunks through the paged decode "
+                    "path and requires an attention-only model (recurrent "
+                    "state cannot resume mid-prompt)")
+        if self._prefix_share and sampler != "greedy":
+            raise ValueError(
+                "prefix_share memoizes greedy first tokens (terminal hits) "
+                "and requires greedy sampling")
         # recurrent state cannot absorb the placeholder steps stalled rows
-        # take through the batched graph -> masked edge step merges them out
-        self._mask_edge = (mode == "collm"
-                           and not self.model.attention_only())
+        # take through the batched graph -> masked edge step merges them out.
+        # Chunked mode also masks: a mid-prefill row's placeholder write
+        # would otherwise land in its (possibly shared) page-0 prefix.
+        self._mask_edge = ((mode == "collm"
+                            and not self.model.attention_only())
+                           or self._chunked)
 
         # KV layout.  dense: every slot owns a max_seq ring (pool memory
         # B x max_seq; a slot can never hold more than max_seq).  paged:
@@ -463,7 +516,8 @@ class BatchScheduler:
             n_pages = num_pages or num_slots * pages_needed(max_seq, ps)
             self.pool = PagePool(n_pages, ps, num_slots,
                                  pages_needed(self.max_ctx, ps),
-                                 watermark=watermark)
+                                 watermark=watermark,
+                                 prefix_cache=self._prefix_share)
             row_seq = _bucket(self.max_ctx)
         else:
             self.max_ctx = max_seq
@@ -532,6 +586,9 @@ class BatchScheduler:
         self._edge_prefill = _jit(collm, "edge_prefill_padded")
         self._cloud_prefill = _jit(collm, "cloud_prefill_padded")
         self._full_prefill = _jit(collm, "full_prefill_padded")
+        self._edge_chunk = _jit(collm, "edge_prefill_chunk")
+        self._cloud_chunk = _jit(collm, "cloud_prefill_chunk")
+        self._copy_pages = COPY_PAGES
         # recurrent segments can't absorb right-padding (their state would
         # advance through pad tokens) -> exact-length prefill for them
         self._pad_ok = self.model.attention_only()
@@ -599,6 +656,14 @@ class BatchScheduler:
             worst = pages_needed(len(s.req.prompt) + s.req.max_new,
                                  self.pool.page_size)
             out += max(0, worst - self.pool.owned_pages(s.index))
+            if self.pool.prefix_cache:
+                # a stream's first decode write may hit a still-shared tail
+                # page: the copy-on-write split consumes one extra free page
+                # beyond ``worst`` (owned count is unchanged by a CoW)
+                lp_tail = len(s.req.prompt) // self.pool.page_size
+                pg = self.pool.block_table[s.index, lp_tail]
+                if pg >= 0 and self.pool.is_shared(int(pg)):
+                    out += 1
         return out
 
     def _fits_now(self, need_pages: int) -> bool:
@@ -608,38 +673,80 @@ class BatchScheduler:
         protecting it (last-resort progress guarantee)."""
         free = self.pool.available_pages
         if not any(s.active for s in self.slots):
-            free = self.pool.free_pages
+            # reclaimable = prefix-cache pages nobody maps: evictable on
+            # demand, so an idle pool full of cached prefixes never wedges
+            free = self.pool.free_pages + self.pool.reclaimable_pages
         return need_pages <= free
 
-    def _admissible(self, req: Request, p_len: int, pad: int) -> bool:
+    def _admissible(self, req: Request, p_len: int, pad: int,
+                    hit_pages: int = 0, batcher_hit: int = 0) -> bool:
         """Capacity check.  Impossible requests raise; a request the paged
         pool could serve but not *right now* stays queued (back-pressure).
         With preemption enabled the check is optimistic — only the
         *prompt's* pages must fit (decode pages come from alloc-on-write,
         backstopped by preemption); with ``preemption="off"`` it stays the
-        conservative worst case, so a decode alloc can never fail."""
+        conservative worst case, so a decode alloc can never fail.
+        ``hit_pages`` prompt pages come from the radix prefix cache
+        (shared mappings, not fresh allocations) and are discounted;
+        prefix-cached pages on the free side are counted reclaimable —
+        ``PagePool.can_admit`` is the same arithmetic pool-side."""
         if p_len + req.max_new > self.max_ctx or pad > self._row_seq:
             raise ValueError(
                 f"request {req.device_id}: prompt {p_len} + max_new "
                 f"{req.max_new} exceeds max context {self.max_ctx}")
         if self._batcher is not None \
-                and not self._batcher.can_admit(p_len + req.max_new):
+                and not self._batcher.can_admit(p_len + req.max_new,
+                                                hit_pages=batcher_hit):
             return False        # shared cloud pool full: wait for a release
         if self.pool is None:
             return True
         need_worst = pages_needed(p_len + req.max_new, self.pool.page_size)
+        if self._prefix_share and p_len % self.pool.page_size:
+            need_worst += 1     # CoW split of the shared/cached tail page
         if need_worst > self.pool.num_pages:
             raise ValueError(
                 f"request {req.device_id}: needs {need_worst} pages but the "
                 f"pool only has {self.pool.num_pages}")
         if self.preemption == "off":
-            return need_worst <= (self.pool.free_pages
-                                  - self._outstanding_pages())
-        return self._fits_now(pages_needed(p_len, self.pool.page_size))
+            return need_worst - hit_pages <= (
+                self.pool.free_pages + self.pool.reclaimable_pages
+                - self._outstanding_pages())
+        need_now = max(0, pages_needed(p_len, self.pool.page_size)
+                       - hit_pages)
+        return self._fits_now(need_now)
 
     def _next_admit_seq(self) -> int:
         self._admit_counter += 1
         return self._admit_counter
+
+    def _reset_freed(self, freed: List[int]) -> None:
+        """Invalidate freed physical pages (pos = -1) on every cache tree
+        this engine holds, so reallocation can never leak their K/V."""
+        if not freed:
+            return
+        ids = np.full((max(self.pool.max_logical, len(freed)),), -1,
+                      np.int32)
+        ids[:len(freed)] = freed
+        ids = jnp.asarray(ids)
+        for name in ("main_caches", "edge_caches", "cloud_caches"):
+            c = getattr(self, name, None)
+            if c is not None:
+                setattr(self, name, self._reset_pages(c, ids))
+
+    def _alloc_page(self, idx: int, lp: int) -> None:
+        """``pool.alloc`` with prefix-cache reclaim: when the free list
+        alone cannot serve, evict LRU radix-cache pages nobody maps (and
+        invalidate them on device) before giving up.  Raises ``OutOfPages``
+        only when free + reclaimable are both exhausted."""
+        try:
+            self.pool.alloc(idx, lp)
+        except OutOfPages:
+            freed = self.pool.evict_prefix(1)
+            if not freed:
+                raise
+            self._reset_freed(freed)
+            self.pool.alloc(idx, lp)
+        self._tbl_device = None
 
     def _admit_pages(self, slot: _Slot, p_len: int, pad: int) -> np.ndarray:
         """Allocate the prompt's pages now (later pages are alloc-on-write)
@@ -648,7 +755,7 @@ class BatchScheduler:
         pool = self.pool
         n_prompt = pages_needed(p_len, pool.page_size)
         for lp in range(n_prompt):
-            pool.alloc(slot.index, lp)
+            self._alloc_page(slot.index, lp)
         pages = np.full((pages_needed(pad, pool.page_size),), -1, np.int32)
         pages[:n_prompt] = pool.block_table[slot.index, :n_prompt]
         self._tbl_device = None
@@ -676,9 +783,40 @@ class BatchScheduler:
             prompt = np.asarray(req.prompt, np.int32)
             p_len = len(prompt)
             pad = _bucket(p_len) if self._pad_ok else p_len
-            if not self._admissible(req, p_len, pad):
+            # radix prefix hit: full prompt pages already resident in the
+            # pool(s).  A *terminal* hit (whole prompt, memoized first
+            # token) skips prefill compute entirely; otherwise the hit is
+            # capped at (p_len-1)//ps full pages so the final chunk always
+            # recomputes into a private page (suffix-only prefill starts
+            # at the hit point).  With a shared CloudBatcher the usable
+            # hit is the MIN of both pools' hits — edge and cloud pages
+            # must cover the same positions.
+            hit, hit_pages, b_hit, terminal = None, 0, 0, None
+            if self._prefix_share:
+                hit = self.pool.match_prefix([int(t) for t in prompt])
+                cap = max(0, (p_len - 1) // self.pool.page_size)
+                if self._batcher is not None:
+                    b_hit = min(self._batcher.prefix_hit(prompt),
+                                len(hit.pages), cap)
+                    hit_pages = b_hit
+                elif hit.terminal is not None:
+                    terminal = hit.terminal
+                    hit_pages = len(hit.pages) + (
+                        1 if terminal[0] is not None else 0)
+                else:
+                    hit_pages = min(len(hit.pages), cap)
+            if not self._admissible(req, p_len, pad, hit_pages=hit_pages,
+                                    batcher_hit=b_hit):
                 break                       # FIFO back-pressure: wait for pages
             queue.popleft()
+            if self._chunked:
+                st = GenStats()
+                self._admit_chunked(slot, req, prompt, p_len, st, hit,
+                                    hit_pages, terminal)
+                admitted = True
+                if slot.prefill_prompt is None:   # terminal fast path
+                    self._maybe_finish(slot)
+                continue
             pages = (self._admit_pages(slot, p_len, pad)
                      if self.pool is not None else None)
             tokens = np.zeros((1, pad), np.int32)
@@ -741,6 +879,154 @@ class BatchScheduler:
             self._maybe_finish(slot)
         return admitted
 
+    def _admit_chunked(self, slot: _Slot, req: Request, prompt: np.ndarray,
+                       p_len: int, st: GenStats, hit, hit_pages: int,
+                       terminal) -> None:
+        """Chunked admission (CollmConfig.chunked_prefill): map the
+        shared-prefix pages, allocate the remaining prompt pages upfront
+        (mid-prefill slots are not preemptible, so they must never trigger
+        a mid-flight allocation), then either emit the memoized first
+        token (whole-prompt *terminal* hit — zero prefill compute) or arm
+        the per-slot prefill state machine that ``tick`` advances one
+        page-sized chunk at a time, interleaved with other slots'
+        decode."""
+        pool, ps = self.pool, self.pool.page_size
+        dev = req.device_id
+        n_full_shared = min(hit_pages, len(hit.pages)) if hit else 0
+        shared = list(hit.pages[:n_full_shared]) if hit else []
+        for lp, page in enumerate(shared):
+            pool.share_page(slot.index, lp, page)
+        tail_page = terminal[0] if terminal is not None else None
+        if tail_page is not None:
+            pool.share_page(slot.index, len(shared), tail_page)
+        hit_toks = p_len if terminal is not None else n_full_shared * ps
+        if hit_toks:
+            pool.stats.prefix_hit_tokens += hit_toks
+            st.prefix_hit_tokens += hit_toks
+            if self.mode == "collm":
+                # dedup ledger: these prompt positions never cross the wire
+                self.cm.note_prefix_reuse(dev, hit_toks)
+        n_prompt = pages_needed(p_len, ps)
+        first_alloc = len(shared) + (1 if tail_page is not None else 0)
+        for lp in range(first_alloc, n_prompt):
+            self._alloc_page(slot.index, lp)
+        if self._prefix_share:
+            # register this prompt's full chunks in the radix trie NOW
+            # (unfilled): a prompt admitted next tick maps them already
+            # and stalls until this stream's chunk compute fills them
+            pool.insert_prefix(slot.index, [int(t) for t in prompt])
+        self._tbl_device = None
+        slot.req, slot.stats = req, st
+        slot.pending = {}
+        slot.draft = []
+        slot.miss_streak = 0
+        slot.standalone = False
+        slot.admit_seq = self._next_admit_seq()
+        slot.cloud_pkts = []
+        slot.seq += 1
+        slot.active = True
+        slot.prefill_wait = []
+        slot.prefill_wait_cloud = []
+        if terminal is not None:
+            # the memoized greedy first token stands in for the whole
+            # prefill: edge exit decisions and cloud logits are
+            # deterministic functions of the (identical) prompt
+            tok = int(terminal[1])
+            st.tokens = 1
+            slot.tokens = [tok]
+            slot.events = ["admit"]
+            slot.last_token = tok
+            slot.pos = p_len
+            slot.prefill_prompt = None
+            return
+        slot.tokens = []
+        slot.events = []
+        slot.last_token = 0
+        slot.pos = 0                 # meaningless until prefill completes
+        slot.prefill_prompt = np.asarray(prompt, np.int32)
+        slot.prefill_pos = n_full_shared * ps
+        slot.prefill_wait = [p for p in shared
+                             if not pool.pages_filled([p])]
+        if self._batcher is not None:
+            b_shared = self._batcher.admit_begin(
+                dev, prompt, p_len, p_len + req.max_new,
+                hit_pages=n_full_shared)
+            slot.prefill_wait_cloud = [
+                p for p in b_shared if not self._batcher.pages_filled([p])]
+
+    def _prefill_tick(self, s: _Slot) -> None:
+        """Advance one mid-prefill slot by ONE page-sized chunk.  A sharer
+        whose mapped shared pages are still being computed by their owning
+        stream stalls (never deadlocks: the owner was admitted into an
+        earlier tick or slot and advances every tick).  The final chunk
+        yields the first-token decision exactly like monolithic
+        admission, then flips the slot to normal decode."""
+        pool = self.pool
+        if s.prefill_wait:
+            if not pool.pages_filled(s.prefill_wait):
+                return
+            s.prefill_wait = []
+        if s.prefill_wait_cloud:
+            if self._batcher is not None \
+                    and not self._batcher.pages_filled(s.prefill_wait_cloud):
+                return
+            s.prefill_wait_cloud = []
+        st, req = s.stats, s.req
+        prompt = s.prefill_prompt
+        p_len = len(prompt)
+        ps = pool.page_size
+        pos0 = s.prefill_pos
+        clen = min(ps, p_len - pos0)
+        chunk = np.zeros((1, ps), np.int32)
+        chunk[0, :clen] = prompt[pos0:pos0 + clen]
+        row_tbl = jnp.asarray(pool.block_table[s.index:s.index + 1])
+        t0 = time.perf_counter()
+        decisions, h1, self.edge_caches = self._edge_chunk(
+            self.params, jnp.asarray(chunk), jnp.asarray(pos0, jnp.int32),
+            clen, self.edge_caches, row_tbl)
+        st.edge_time += time.perf_counter() - t0
+        st.prefill_chunks += 1
+        final = pos0 + clen >= p_len
+        prefill_logits = None
+        if self.mode == "collm":
+            t0 = time.perf_counter()
+            if self._batcher is not None:
+                logits = self._batcher.admit_chunk(req.device_id, h1,
+                                                   pos0, clen)
+            else:
+                logits, self.cloud_caches = self._cloud_chunk(
+                    self.params, h1, jnp.asarray(pos0, jnp.int32), clen,
+                    self.cloud_caches, row_tbl)
+            st.cloud_time += time.perf_counter() - t0
+            # only the not-shared suffix crosses the wire, chunk by chunk
+            # (true chunk length, not the padded page — byte-identical in
+            # sum to the monolithic upload of the same suffix)
+            st.upload_bytes += hidden_wire_bytes(
+                self.model.cfg.d_model, self.ccfg.wire_format, seq=clen)
+            if final:
+                prefill_logits = np.asarray(logits)
+        if clen == ps and self._prefix_share:
+            pool.mark_filled(int(pool.block_table[s.index, pos0 // ps]))
+        s.prefill_pos = pos0 + clen
+        if not final:
+            return
+        fetched = jax.device_get(
+            {l: (d.token, d.confidence, d.logits)
+             for l, d in decisions.items()})
+        tok = self._first_token(fetched, prefill_logits, st)
+        st.tokens += 1
+        s.prefill_prompt = None
+        s.tokens = [tok]
+        s.events = ["admit"]
+        s.last_token = tok
+        s.pos = p_len
+        if self._prefix_share and self._batcher is None:
+            # terminal insertion at admission: a later identical prompt
+            # reuses the partial tail page + this first token, and THIS
+            # stream's own first decode write CoWs the now-shared tail
+            pool.insert_terminal(s.index, [int(t) for t in prompt], tok)
+        self._maybe_finish(s)
+
     def _first_token(self, fetched: Dict, prefill_logits, st: GenStats) -> int:
         """First token from the prompt's last position — same decision tree
         as the sequential path."""
@@ -787,8 +1073,11 @@ class BatchScheduler:
     def _runnable(self, s: _Slot) -> bool:
         """A slot decodes this tick unless it is stalled on an in-flight
         cloud reply (non-speculative) or has provisionally reached its end
-        and awaits validation (speculative)."""
+        and awaits validation (speculative).  Mid-prefill slots never
+        decode — ``_prefill_tick`` advances them instead."""
         if not s.active:
+            return False
+        if s.prefill_prompt is not None:
             return False
         if s.pending and not self._spec:
             return False
@@ -801,18 +1090,12 @@ class BatchScheduler:
 
     def _free_pages(self, slot: _Slot) -> None:
         """Bulk-free a retired slot's pages and invalidate them on device
-        (pos = -1) so reallocation can never leak its K/V."""
+        (pos = -1) so reallocation can never leak its K/V.  Pages the
+        radix prefix cache (or another slot) still references are only
+        unreferenced, stay resident, and are NOT invalidated."""
         freed = self.pool.free_slot(slot.index)
         self._tbl_device = None
-        if not freed:
-            return
-        ids = np.full((self.pool.max_logical,), -1, np.int32)
-        ids[:len(freed)] = freed
-        ids = jnp.asarray(ids)
-        for name in ("main_caches", "edge_caches", "cloud_caches"):
-            c = getattr(self, name, None)
-            if c is not None:
-                setattr(self, name, self._reset_pages(c, ids))
+        self._reset_freed(freed)
 
     # -- preemption ---------------------------------------------------------
     # Admission is optimistic, so a decode-time alloc can find the free
@@ -826,31 +1109,66 @@ class BatchScheduler:
     # re-dispatched — greedy decode makes the re-run bit-deterministic,
     # which is why preemption is invisible in output space.
 
+    def _preempt_victim(self, s: _Slot) -> None:
+        """Pick and preempt one victim stream to free pages for ``s``.
+        Shared (refcounted) pages don't come back on free, so victims are
+        ranked by *reclaimable* pages; mid-prefill slots are excluded —
+        their admission allocated everything upfront, and a checkpoint
+        with zero emitted tokens has no resume point."""
+        if self.preemption == "off":
+            raise RuntimeError(
+                f"slot {s.index}: out of pages mid-decode with "
+                f"preemption off — the conservative admission "
+                f"check should make this impossible") from None
+        cands = [VictimCandidate(v.index, v.admit_seq,
+                                 self.pool.owned_pages(v.index),
+                                 self.pool.shared_pages(v.index))
+                 for v in self.slots
+                 if v.active and v is not s and v.prefill_prompt is None]
+        try:
+            victim = select_victim(cands, self.preempt_policy)
+        except OutOfPages:
+            raise RuntimeError(
+                f"slot {s.index}: out of pages and no preemptible "
+                f"victim (pool of {self.pool.num_pages} pages too "
+                f"small for one stream?)") from None
+        self._preempt(self.slots[victim])
+
     def _ensure_page(self, s: _Slot, lp: int) -> None:
-        """Alloc-on-write with preemption: keep freeing victims until the
+        """Alloc-on-write with reclaim + preemption: evict unreferenced
+        prefix-cache pages first, then keep freeing victims until the
         page for ``s``'s next write exists."""
         while True:
             try:
-                self.pool.alloc(s.index, lp)
-                self._tbl_device = None
+                self._alloc_page(s.index, lp)
                 return
             except OutOfPages:
-                if self.preemption == "off":
-                    raise RuntimeError(
-                        f"slot {s.index}: out of pages mid-decode with "
-                        f"preemption off — the conservative admission "
-                        f"check should make this impossible") from None
-                cands = [VictimCandidate(v.index, v.admit_seq,
-                                         self.pool.owned_pages(v.index))
-                         for v in self.slots if v.active and v is not s]
-                try:
-                    victim = select_victim(cands, self.preempt_policy)
-                except OutOfPages:
-                    raise RuntimeError(
-                        f"slot {s.index}: out of pages and no preemptible "
-                        f"victim (pool of {self.pool.num_pages} pages too "
-                        f"small for one stream?)") from None
-                self._preempt(self.slots[victim])
+                self._preempt_victim(s)
+
+    def _cow_write(self, s: _Slot, lp: int) -> None:
+        """Copy-on-write: ``s`` is about to write into a page another
+        stream (or the radix cache) still references.  Allocate a private
+        copy, device-copy the page contents across every cache tree this
+        engine holds (K, V, pos, int8 scales — ``COPY_PAGES`` walks the
+        whole tree), and repoint the block table; co-holders keep reading
+        the original."""
+        while True:
+            try:
+                src, dst = self.pool.cow_page(s.index, lp)
+                break
+            except OutOfPages:
+                freed = self.pool.evict_prefix(1)
+                if freed:
+                    self._reset_freed(freed)
+                    continue
+                self._preempt_victim(s)
+        self._tbl_device = None
+        jsrc, jdst = jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32)
+        for name in ("main_caches", "edge_caches", "cloud_caches"):
+            c = getattr(self, name, None)
+            if c is not None:
+                setattr(self, name, self._copy_pages(c, jsrc, jdst))
+        s.stats.cow_copies += 1
 
     def _preempt(self, s: _Slot) -> None:
         """Checkpoint one active stream and free its slot + pages.
@@ -996,6 +1314,9 @@ class BatchScheduler:
         re-bind the slot's block table (pages are row-agnostic)."""
         if snap["trees"] is None or not len(snap["logical"]):
             return
+        short = len(snap["logical"]) - self.pool.free_pages
+        if short > 0:       # reclaim cached prefix pages for the rebind
+            self._reset_freed(self.pool.evict_prefix(short))
         padded = rebind_slot_pages(self.pool, slot.index, snap["logical"])
         self._tbl_device = None
         for name, data in snap["trees"].items():
@@ -1080,22 +1401,40 @@ class BatchScheduler:
         busy-waiting."""
         self._tick_no += 1
         for idx in self._preempt_schedule.get(self._tick_no, ()):
-            if self.slots[idx].active:     # forced-preemption test hook
+            # forced-preemption test hook (mid-prefill slots are never
+            # preemptible — they have no resume point yet)
+            if (self.slots[idx].active
+                    and self.slots[idx].prefill_prompt is None):
                 self._preempt(self.slots[idx])
         self._resolve()
-        runnable = [s for s in self.slots if self._runnable(s)]
+        # chunked prefill: every mid-prefill slot advances by ONE
+        # page-sized chunk per tick, interleaved with the other slots'
+        # decode below (sharers stalled on unfilled pages just wait)
+        prefilling = [s for s in self.slots
+                      if s.active and s.prefill_prompt is not None]
+        for s in prefilling:
+            self._prefill_tick(s)
+        busy = {s.index for s in prefilling}
+        runnable = [s for s in self.slots
+                    if self._runnable(s) and s.index not in busy]
         if not runnable:
-            if any(s.active for s in self.slots):
+            # a prefill chunk IS progress — don't jump the virtual clock
+            if any(s.active for s in self.slots) and not prefilling:
                 self._advance_idle()
                 self._resolve()
             return
         for s in runnable:
             if self.pool is not None and s.active:
                 # alloc-on-write: this tick writes KV at s.pos; an empty
-                # free list preempts a victim stream (never s itself)
+                # free list preempts a victim stream (never s itself).  A
+                # mapped-but-shared page (radix prefix / cached terminal
+                # tail) must be split before the write: copy-on-write.
                 lp = s.pos // self.pool.page_size
-                if self.pool.block_table[s.index, lp] == -1:
+                page = self.pool.block_table[s.index, lp]
+                if page == -1:
                     self._ensure_page(s, lp)
+                elif self.pool.is_shared(int(page)):
+                    self._cow_write(s, lp)
         runnable = [s for s in runnable if s.active]   # minus fresh victims
         tokens = np.zeros((self.B, 1), np.int32)
         pos = np.zeros((self.B,), np.int32)
@@ -1866,7 +2205,9 @@ class ServingSystem:
                 "num_slots": slots,
                 "virtual_time": sched.last_virtual_time,
                 "late_drops": sched.late_drops,
-                "channel_stats": sched.channel.stats.as_row()}
+                "channel_stats": sched.channel.stats.as_row(),
+                "pool_stats": (dataclasses.asdict(sched.pool.stats)
+                               if sched.pool is not None else None)}
 
     # ------------------------------------------------------------------
     def generate_multi(self, prompts: Sequence[np.ndarray], max_new: int,

@@ -1,0 +1,334 @@
+"""Radix prefix sharing + copy-on-write pages + chunked prefill.
+
+Two hard invariants under test:
+
+* **Pool accounting** — under random interleavings of admission (prefix
+  hits + fresh allocations), decode writes (alloc-on-write / CoW splits),
+  retirement and cache eviction, every physical page is either on the
+  free list or referenced, refcounts equal mappings-plus-cache holds, and
+  draining every slot and the trie returns the pool to fully free.
+* **Output invisibility** — prefix sharing is a pure memoization: shared
+  runs emit token streams identical to unshared chunked runs (which in
+  turn match monolithic prefill), across float32/int8 pools, collm /
+  standalone / batched-cloud modes, and under page pressure (preemption
+  interleaved with cache eviction).
+
+The engine-level suites run on an UNTRAINED tiny model (generation is
+deterministic either way) so they stay in the fast CI lane.
+"""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.base import ModelConfig
+from repro.core.collm import CollmConfig
+from repro.core.paging import OutOfPages, PagePool, pages_needed
+from repro.models.registry import build_model
+from repro.serving.cloud_batcher import COPY_PAGES
+from repro.serving.engine import ServingSystem
+
+PS = 4                                # pool-level tests: tiny pages
+VOCAB = 6                             # tiny vocab -> frequent collisions
+
+
+# ---------------------------------------------------------------------------
+# pool-level property: random share/alloc/cow/free/evict schedules
+# ---------------------------------------------------------------------------
+def _check_accounting(pool: PagePool):
+    """Every page is free xor referenced; refcounts == mappings + cache."""
+    free = set(pool._free)
+    assert len(free) == len(pool._free), "free list holds duplicates"
+    assert 0 not in free and 0 not in pool._ref, "trash page entered play"
+    mapcount = {}
+    for slot in range(pool.num_slots):
+        row = [int(p) for p in pool.block_table[slot] if p > 0]
+        assert sorted(row) == sorted(pool._owned[slot]), \
+            f"slot {slot}: block table and owned list disagree"
+        for p in row:
+            mapcount[p] = mapcount.get(p, 0) + 1
+    for page in range(1, pool.num_pages + 1):
+        ref = pool.refcount(page)
+        expect = mapcount.get(page, 0) + (1 if page in pool._cached else 0)
+        assert ref == expect, f"page {page}: ref {ref} != {expect}"
+        assert (page in free) == (ref == 0), \
+            f"page {page}: free-list/refcount disagree (ref={ref})"
+    assert pool.reclaimable_pages == sum(
+        1 for p in pool._cached if pool.refcount(p) == 1)
+
+
+def _admit(pool: PagePool, rng: random.Random, slot: int, prompt):
+    """Engine-shaped admission: map capped prefix hits, allocate the rest,
+    insert the prompt into the trie, mark computed pages filled."""
+    p_len = len(prompt)
+    hit = pool.match_prefix(prompt)
+    cap = max(0, (p_len - 1) // pool.page_size)
+    shared = list(hit.pages[:cap])
+    for lp, page in enumerate(shared):
+        pool.share_page(slot, lp, page)
+    for lp in range(len(shared), pages_needed(p_len, pool.page_size)):
+        try:
+            pool.alloc(slot, lp)
+        except OutOfPages:
+            freed = pool.evict_prefix(1)
+            if not freed:
+                pool.free_slot(slot)
+                return None
+            pool.alloc(slot, lp)
+    pool.insert_prefix(slot, prompt)
+    for lp in range(len(shared), p_len // pool.page_size):
+        pool.mark_filled(int(pool.block_table[slot, lp]))
+    pool.insert_terminal(slot, prompt, rng.randrange(VOCAB))
+    return p_len
+
+
+def _decode_write(pool: PagePool, slot: int, pos: int):
+    """Engine-shaped decode write at ``pos``: alloc-on-write a fresh page
+    or CoW-split a shared one."""
+    lp = pos // pool.page_size
+    if lp >= pool.max_logical:
+        return False
+    page = int(pool.block_table[slot, lp])
+    if page == -1:
+        try:
+            pool.alloc(slot, lp)
+        except OutOfPages:
+            freed = pool.evict_prefix(1)
+            if not freed:
+                return False
+            pool.alloc(slot, lp)
+    elif pool.is_shared(page):
+        try:
+            src, dst = pool.cow_page(slot, lp)
+        except OutOfPages:
+            if not pool.evict_prefix(1):
+                return False
+            src, dst = pool.cow_page(slot, lp)
+        assert src != dst and not pool.is_shared(dst)
+        assert int(pool.block_table[slot, lp]) == dst
+    return True
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 20))
+def test_pool_schedule_invariants(seed):
+    """Random op schedules keep accounting exact and drain to fully free."""
+    rng = random.Random(seed)
+    pool = PagePool(num_pages=rng.randint(6, 24), page_size=PS,
+                    num_slots=rng.randint(2, 4), max_logical=8,
+                    prefix_cache=True)
+    state = {}                        # slot -> decode position
+    for _ in range(60):
+        op = rng.random()
+        idle = [s for s in range(pool.num_slots) if s not in state]
+        if op < 0.4 and idle:
+            slot = rng.choice(idle)
+            prompt = [rng.randrange(VOCAB)
+                      for _ in range(rng.randint(1, 3 * PS + 2))]
+            p_len = _admit(pool, rng, slot, prompt)
+            if p_len is not None:
+                state[slot] = p_len
+        elif op < 0.75 and state:
+            slot = rng.choice(list(state))
+            if _decode_write(pool, slot, state[slot]):
+                state[slot] += 1
+        elif op < 0.9 and state:
+            slot = rng.choice(list(state))
+            pool.free_slot(slot)
+            del state[slot]
+        else:
+            pool.evict_prefix(rng.randint(1, 3))
+        _check_accounting(pool)
+    for slot in list(state):
+        pool.free_slot(slot)
+    pool.evict_prefix(pool.num_pages)
+    _check_accounting(pool)
+    assert pool.free_pages == pool.num_pages, "pool failed to drain"
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 20))
+def test_match_prefix_returns_inserted_pages(seed):
+    """A filled, terminated prompt matches itself exactly: full-page hits
+    point at the inserter's own pages, the terminal memoizes the whole
+    prompt and its first token; a diverging prompt hits only the common
+    page-aligned span."""
+    rng = random.Random(seed)
+    pool = PagePool(num_pages=16, page_size=PS, num_slots=2, max_logical=8,
+                    prefix_cache=True)
+    p_len = rng.randint(1, 3 * PS + 3)
+    prompt = [rng.randrange(VOCAB) for _ in range(p_len)]
+    tok = rng.randrange(VOCAB)
+    for lp in range(pages_needed(p_len, PS)):
+        pool.alloc(0, lp)
+    pool.insert_prefix(0, prompt)
+    for lp in range(p_len // PS):
+        pool.mark_filled(int(pool.block_table[0, lp]))
+    pool.insert_terminal(0, prompt, tok)
+
+    hit = pool.match_prefix(prompt)
+    assert list(hit.pages) == \
+        [int(pool.block_table[0, lp]) for lp in range(p_len // PS)]
+    assert hit.terminal is not None and hit.terminal[1] == tok
+    assert hit.hit_tokens == p_len
+
+    other = list(prompt)
+    other[-1] = (other[-1] + 1) % VOCAB      # diverge at the last token
+    h2 = pool.match_prefix(other)
+    assert h2.terminal is None
+    common = ((p_len - 1) // PS) * PS        # full chunks before divergence
+    assert h2.hit_tokens == common == len(h2.pages) * PS
+
+
+def test_cow_split_bookkeeping():
+    """CoW repoints exactly the writer: the source keeps its remaining
+    references, the copy is private, and a second write needs no copy."""
+    pool = PagePool(num_pages=8, page_size=PS, num_slots=2, max_logical=4,
+                    prefix_cache=True)
+    page = pool.alloc(0, 0)
+    pool.share_page(1, 0, page)
+    assert pool.is_shared(page) and pool.refcount(page) == 2
+    src, dst = pool.cow_page(1, 0)
+    assert (src, int(pool.block_table[1, 0])) == (page, dst)
+    assert pool.refcount(src) == 1 and pool.refcount(dst) == 1
+    assert int(pool.block_table[0, 0]) == src
+    with pytest.raises(ValueError):
+        pool.cow_page(1, 0)                  # already private
+    _check_accounting(pool)
+
+
+def test_copy_pages_duplicates_all_leaves():
+    """The device half of CoW copies every leaf of a paged node — K/V and
+    (for int8) the scale rows — without touching other pages."""
+    pages, heads, dim = 4, 2, 3
+    node = {"kp": jnp.arange(pages * PS * heads * dim, dtype=jnp.float32
+                             ).reshape(pages, PS, heads, dim),
+            "vp": -jnp.arange(pages * PS * heads * dim, dtype=jnp.float32
+                              ).reshape(pages, PS, heads, dim),
+            "scale": jnp.arange(pages * PS, dtype=jnp.float32
+                                ).reshape(pages, PS),
+            "pos": jnp.arange(pages * PS, dtype=jnp.int32
+                              ).reshape(pages, PS)}
+    out = COPY_PAGES({"0": node}, jnp.int32(1), jnp.int32(3))["0"]
+    for name, leaf in node.items():
+        np.testing.assert_array_equal(out[name][3], leaf[1],
+                                      err_msg=f"{name}: dst != src")
+        np.testing.assert_array_equal(out[name][:3], leaf[:3],
+                                      err_msg=f"{name}: bystander changed")
+
+
+# ---------------------------------------------------------------------------
+# engine-level: sharing must be invisible in output space
+# ---------------------------------------------------------------------------
+EPS = 8                               # engine tests: page size
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = ModelConfig(name="tiny-ee", arch_type="dense", n_layers=4,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=128, tie_embeddings=True,
+                      exit_layers=(1, 2)).validate()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return {"model": model, "params": params, "systems": {}}
+
+
+def _system(tiny, **ccfg_kw) -> ServingSystem:
+    key = tuple(sorted(ccfg_kw.items()))
+    if key not in tiny["systems"]:
+        tiny["systems"][key] = ServingSystem(
+            tiny["model"], tiny["params"],
+            CollmConfig(theta=0.8, kv_layout="paged", page_size=EPS,
+                        **ccfg_kw))
+    return tiny["systems"][key]
+
+
+def _shared_prompts(seed: int, n: int = 6):
+    """n prompts behind a common 2.5-page system prefix + 2 duplicates."""
+    rng = np.random.RandomState(seed)
+    pre = rng.randint(0, 128, size=2 * EPS + 3)
+    prompts = [np.concatenate([pre, rng.randint(0, 128, size=3 + i)]
+                              ).astype(np.int32) for i in range(n)]
+    return prompts + [prompts[0].copy(), prompts[1].copy()]
+
+GKW = dict(num_slots=4, max_seq=64, max_ctx=64, num_pages=48)
+
+
+@pytest.mark.parametrize("kv_dtype", ["float32", "int8"])
+@pytest.mark.parametrize("mode", ["collm", "standalone"])
+def test_shared_streams_token_identical(tiny, mode, kv_dtype):
+    """Shared == unshared-chunked == monolithic token streams, with real
+    prefix hits and at least one CoW split on the partial tail page."""
+    prompts = _shared_prompts(0)
+    mono = _system(tiny, kv_dtype=kv_dtype).generate(
+        prompts, 10, mode=mode, **GKW)
+    un = _system(tiny, kv_dtype=kv_dtype, chunked_prefill=True).generate(
+        prompts, 10, mode=mode, **GKW)
+    sh = _system(tiny, kv_dtype=kv_dtype, chunked_prefill=True,
+                 prefix_share=True).generate(prompts, 10, mode=mode, **GKW)
+    assert un["tokens"] == mono["tokens"], "chunked diverges from monolithic"
+    assert sh["tokens"] == un["tokens"], "sharing changed the output"
+    assert sh["stats"].prefix_hit_tokens > 0
+    assert sh["stats"].cow_copies >= 1
+    assert sh["stats"].prefill_chunks < un["stats"].prefill_chunks
+    assert sh["pool_stats"]["allocs"] < un["pool_stats"]["allocs"]
+    if mode == "collm":
+        assert sh["stats"].upload_bytes < un["stats"].upload_bytes
+
+
+def test_second_wave_is_all_terminal(tiny):
+    """Re-sent prompts hit cached terminals: zero prefill compute, same
+    streams (the memoized first token must match the computed one)."""
+    prompts = _shared_prompts(1)
+    sys_sh = _system(tiny, chunked_prefill=True, prefix_share=True)
+    r1 = sys_sh.generate(prompts, 10, mode="collm", **GKW)
+    r2 = sys_sh.generate(prompts[:3], 10, mode="collm", **GKW)
+    assert r2["tokens"] == r1["tokens"][:3]
+    assert r2["stats"].prefill_chunks == 0
+    assert r2["stats"].prefix_hit_tokens == sum(
+        len(p) for p in prompts[:3])
+
+
+def test_batched_cloud_dedupes_uploads(tiny):
+    """generate_multi: engine-side sharing and batcher-side upload dedupe
+    agree (min-hit), streams identical to the unshared batched run."""
+    prompts = _shared_prompts(2)
+    r_un = _system(tiny, chunked_prefill=True).generate_multi(
+        prompts, 10, n_engines=4, max_seq=64)
+    r_sh = _system(tiny, chunked_prefill=True, prefix_share=True
+                   ).generate_multi(prompts, 10, n_engines=4, max_seq=64)
+    assert r_sh["tokens"] == r_un["tokens"]
+    assert r_sh["stats"].prefix_hit_tokens > 0
+    assert r_sh["batcher"]["prefix_hit_tokens"] > 0
+    assert r_sh["stats"].prefill_chunks < r_un["stats"].prefill_chunks
+
+
+def test_prefix_share_survives_page_pressure(tiny):
+    """A pool too small for the load forces preemption AND prefix-cache
+    eviction; streams stay identical to an unconstrained shared run."""
+    prompts = _shared_prompts(3)
+    ref = _system(tiny, chunked_prefill=True, prefix_share=True).generate(
+        prompts, 12, mode="collm", **GKW)
+    for pre in ("recompute", "swap"):
+        sysp = _system(tiny, chunked_prefill=True, prefix_share=True,
+                       preemption=pre)
+        r = sysp.generate(prompts, 12, mode="collm", num_slots=4,
+                          max_seq=64, max_ctx=64, num_pages=12)
+        assert r["tokens"] == ref["tokens"], f"{pre}: tokens diverge"
+        assert r["pool_stats"]["prefix_evictions"] >= 1
+
+
+def test_config_validation(tiny):
+    model, params = tiny["model"], tiny["params"]
+    with pytest.raises(ValueError):                    # needs paged KV
+        ServingSystem(model, params, CollmConfig(chunked_prefill=True))
+    with pytest.raises(ValueError):                    # needs chunked
+        ServingSystem(model, params,
+                      CollmConfig(prefix_share=True, kv_layout="paged"))
+    sys_sh = _system(tiny, chunked_prefill=True, prefix_share=True)
+    with pytest.raises(ValueError):                    # edge-resident only
+        sys_sh.generate(_shared_prompts(4)[:2], 4, mode="cloud", **GKW)
