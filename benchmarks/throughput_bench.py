@@ -692,6 +692,121 @@ def run_cloud_batch(csv: bool = False, *, n_clients: int = 4,
     return out
 
 
+def run_cloud_tp(csv: bool = False, *, n_clients: int = 3, max_new: int = 8,
+                 theta: float = 0.8, dp: int = 2, tp: int = 4,
+                 check: bool = False, rows: list = None) -> dict:
+    """Cloud tensor parallelism (docs/sharding.md): the tiny EE model
+    served with the cloud partition's steps compiled against a (dp x tp)
+    host-device mesh vs. the single-device path.  Reports token identity,
+    per-device cloud param bytes (the analytic
+    ``estimate_param_bytes_per_device`` AND what ``device_put`` actually
+    committed to device 0), trace counts across two ``generate_multi``
+    fleets (the per-CoLLM memoization must keep N engines on one trace
+    per step), and the collective traffic parsed out of the sharded
+    ``cloud_step_masked`` HLO — predicted all-reduce / all-gather wire
+    bytes per device per cloud step, the sharded counterpart of the KV
+    bytes/token roofline rows.  With ``--check`` asserts token identity,
+    estimate == placed bytes with the expected model-axis shrink (GQA KV
+    projections and norms replicate, so the bar is >= 0.6*tp), zero
+    re-traces on the second fleet, and >= 1 all-reduce in the step."""
+    import jax.numpy as jnp
+
+    from repro.core.transport import quantize
+    from repro.launch import sharding as shardlib
+    from repro.roofline.collectives import (parse_collectives,
+                                            total_wire_bytes)
+    from repro.serving.mesh_exec import mesh_context
+
+    need = dp * tp
+    if len(jax.devices()) < need:
+        raise SystemExit(
+            f"--cloud-tp {tp} --cloud-dp {dp} needs {need} devices but "
+            f"only {len(jax.devices())} are visible; export "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+
+    tiny = tiny_trained_model()
+    model, params, data = tiny["model"], tiny["params"], tiny["data"]
+    prompts = _requests(data, n_clients)
+
+    ref = ServingSystem(model, params, CollmConfig(theta=theta)
+                        ).generate_multi(prompts, max_new)
+    sys_tp = ServingSystem(model, params,
+                           CollmConfig(theta=theta, cloud_mesh=(dp, tp)))
+    r1 = sys_tp.generate_multi(prompts, max_new)
+    mc = mesh_context(sys_tp.collm)
+    first_fleet = dict(mc.trace_counts)
+    r2 = sys_tp.generate_multi(prompts, max_new)
+    retraces = sum(mc.trace_counts.values()) - sum(first_fleet.values())
+    identical = (r1["tokens"] == ref["tokens"]
+                 and r2["tokens"] == ref["tokens"])
+
+    # per-device param bytes: analytic estimate vs device_put's shards
+    est = shardlib.estimate_param_bytes_per_device(
+        model.param_specs(), mc.mesh, fsdp=False,
+        head_dim=model.cfg.resolved_head_dim)
+    dev0 = mc.mesh.devices.flat[0]
+    placed = sum(s.data.nbytes for l in jax.tree.leaves(sys_tp.params)
+                 for s in l.addressable_shards if s.device == dev0)
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    shrink = total / placed
+
+    # collective traffic of one sharded masked cloud step at B rows
+    B, d = n_clients, model.cfg.d_model
+    caches = mc.shard_caches(sys_tp.collm.init_cloud_cache(B, 64), batch=B)
+    upload = quantize(jnp.zeros((B, 1, d), jnp.float32),
+                      sys_tp.collm.ccfg.wire_format)
+    pos = jnp.zeros((B,), jnp.int32)
+    mask = jnp.ones((B,), bool)
+    with shardlib.use_policy(mc.policy):
+        hlo = jax.jit(sys_tp.collm.cloud_step_masked).lower(
+            sys_tp.params, upload, caches, pos, mask).compile().as_text()
+    coll = parse_collectives(hlo, need)
+    ar = coll.get("all-reduce", {"count": 0, "wire_bytes": 0.0})
+    ag = coll.get("all-gather", {"count": 0, "wire_bytes": 0.0})
+
+    row = {"mode": "cloud_tp", "mesh": f"{dp}x{tp}", "devices": need,
+           "clients": n_clients, "max_new": max_new,
+           "tokens_equal": identical,
+           "param_bytes_total": total, "param_bytes_per_dev": placed,
+           "param_bytes_per_dev_est": est, "shrink_x": shrink,
+           "trace_counts": first_fleet, "retraces_2nd_fleet": retraces,
+           "allreduce_count": ar["count"],
+           "allreduce_wire_bytes": ar["wire_bytes"],
+           "allgather_count": ag["count"],
+           "allgather_wire_bytes": ag["wire_bytes"],
+           "coll_wire_bytes_per_step": total_wire_bytes(coll)}
+    if rows is not None:
+        rows.append(row)
+    print("mesh,devices,tokens_equal,param_KB_per_dev,param_KB_est,"
+          "shrink_x,retraces_2nd_fleet,allreduce_n,allreduce_KB,"
+          "allgather_n,allgather_KB,coll_KB_per_step")
+    print(f"{dp}x{tp},{need},{identical},{placed / 1e3:.1f},"
+          f"{est / 1e3:.1f},{shrink:.2f},{retraces},{ar['count']},"
+          f"{ar['wire_bytes'] / 1e3:.2f},{ag['count']},"
+          f"{ag['wire_bytes'] / 1e3:.2f},"
+          f"{total_wire_bytes(coll) / 1e3:.2f}")
+
+    if check:
+        assert identical, "sharded cloud steps must be token-identical " \
+            "to the single-device path"
+        assert abs(placed - est) <= 1e-6 * max(est, 1), (
+            f"placed per-device bytes {placed} != estimate {est}")
+        assert shrink >= 0.6 * tp, (
+            f"per-device param bytes shrank only {shrink:.2f}x on a "
+            f"model={tp} mesh (expected ~{tp}x less replicated leaves)")
+        assert retraces == 0, (
+            f"second generate_multi fleet re-traced {retraces} steps; "
+            f"the per-CoLLM jit memoization must hold across engines")
+        assert ar["count"] >= 1, (
+            "a row-parallel cloud step must all-reduce partial sums; "
+            "none found in the compiled HLO")
+        print(f"# check passed: {dp}x{tp} mesh token-identical, "
+              f"{shrink:.2f}x per-device param shrink (est==placed), "
+              f"0 re-traces on 2nd fleet, {ar['count']} all-reduces "
+              f"({total_wire_bytes(coll) / 1e3:.1f}KB wire/step)")
+    return row
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--clients", type=int, default=16)
@@ -732,7 +847,24 @@ def main() -> None:
                          "chunked prefill on float32 + int8 paged pools "
                          "(--check asserts fewer chunks/pages/upload "
                          "bytes, token-identical streams)")
+    ap.add_argument("--cloud-tp", type=int, default=0,
+                    help="cloud tensor-parallel sweep: serve with the "
+                         "cloud partition compiled against a "
+                         "(--cloud-dp x N) mesh vs. single device "
+                         "(needs XLA_FLAGS="
+                         "--xla_force_host_platform_device_count)")
+    ap.add_argument("--cloud-dp", type=int, default=2,
+                    help="data-axis size of the --cloud-tp mesh")
     args = ap.parse_args()
+    if args.cloud_tp:
+        rows = []
+        run_cloud_tp(n_clients=args.clients, max_new=args.max_new,
+                     theta=args.theta, dp=args.cloud_dp, tp=args.cloud_tp,
+                     check=args.check, rows=rows)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+        return
     if args.prefix_share:
         rows = []
         run_prefix_share(n_clients=args.clients, max_new=args.max_new,

@@ -119,6 +119,14 @@ class CollmConfig:
     # cache their greedy first token, skipping prefill entirely.  Requires
     # chunked_prefill=True (suffix-only compute) and greedy sampling.
     prefix_share: bool = False
+    # Cloud execution mesh (docs/sharding.md): a (data, model) device grid,
+    # e.g. (2, 4), the cloud partition's jitted steps compile against —
+    # params placed via role-based NamedShardings, the pooled batch-major
+    # cloud KV via cache_shardings, residual/logits constraints baked into
+    # the cloud traces.  None (the default) keeps the single-device path:
+    # no mesh, no policy, plain jax.jit.  Needs prod(cloud_mesh) visible
+    # devices (locally: XLA_FLAGS=--xla_force_host_platform_device_count=N).
+    cloud_mesh: Optional[Tuple[int, int]] = None
 
 
 class EdgeStepOut(NamedTuple):
@@ -162,6 +170,12 @@ class CoLLM:
             raise ValueError("prefix_share=True requires chunked_prefill="
                              "True (suffix-only compute needs chunk-"
                              "granular admission)")
+        if ccfg.cloud_mesh is not None:
+            cm_ = tuple(ccfg.cloud_mesh)
+            if len(cm_) != 2 or any(int(a) < 1 for a in cm_):
+                raise ValueError(f"cloud_mesh must be a (data, model) pair "
+                                 f"of positive ints, got "
+                                 f"{ccfg.cloud_mesh!r}")
         self.model = model
         self.ccfg = ccfg
         self.l_ee1 = cfg.exit_layers[0]

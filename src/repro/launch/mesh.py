@@ -14,6 +14,26 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_cloud_mesh(shape):
+    """Cloud-service mesh from a ``CollmConfig.cloud_mesh`` pair.
+
+    ``shape`` is a ``(data, model)`` device grid, e.g. ``(2, 4)``.  Fails
+    loudly when the host exposes fewer devices than the grid needs — on a
+    CPU dev box run with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    exported *before* python starts (jax reads it at import)."""
+    dims = tuple(int(s) for s in shape)
+    if len(dims) != 2 or any(d < 1 for d in dims):
+        raise ValueError(f"cloud_mesh must be a (data, model) pair of "
+                         f"positive ints, got {shape!r}")
+    need, have = dims[0] * dims[1], len(jax.devices())
+    if need > have:
+        raise ValueError(
+            f"cloud_mesh {dims} needs {need} devices but only {have} "
+            f"visible; set XLA_FLAGS=--xla_force_host_platform_device_"
+            f"count={need} before importing jax to emulate them")
+    return jax.make_mesh(dims, ("data", "model"))
+
+
 def make_debug_mesh(n_devices: int = 1):
     """Tiny mesh over whatever devices exist (tests)."""
     n = min(n_devices, len(jax.devices()))

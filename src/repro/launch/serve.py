@@ -85,6 +85,14 @@ def main():
                     help="edge draft length: ship up to k provisional "
                          "tokens per verification request (needs "
                          "--speculative; 1 = classic speculative path)")
+    ap.add_argument("--cloud-tp", type=int, default=0,
+                    help="model-axis size of the cloud tensor-parallel "
+                         "mesh; the cloud partition's steps compile "
+                         "against a (--cloud-dp x N) device grid "
+                         "(docs/sharding.md; 0 = single device)")
+    ap.add_argument("--cloud-dp", type=int, default=1,
+                    help="data-axis (batch) size of the cloud mesh "
+                         "(needs --cloud-tp)")
     ap.add_argument("--cloud-batch", action="store_true",
                     help="multi-client mode: one engine per client, cloud "
                          "requests coalesced by the shared CloudBatcher")
@@ -118,6 +126,17 @@ def main():
     if args.prefix_share and not args.chunked_prefill:
         ap.error("--prefix-share admits the unshared suffix through "
                  "chunked prefill; needs --chunked-prefill")
+    if args.cloud_dp != 1 and not args.cloud_tp:
+        ap.error("--cloud-dp sizes the data axis of the cloud mesh; "
+                 "needs --cloud-tp")
+    cloud_mesh = (args.cloud_dp, args.cloud_tp) if args.cloud_tp else None
+    if cloud_mesh is not None:
+        need = cloud_mesh[0] * cloud_mesh[1]
+        if need > len(jax.devices()):
+            ap.error(f"--cloud-dp x --cloud-tp = {need} devices but only "
+                     f"{len(jax.devices())} visible (locally: export "
+                     f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                     f"{need} before launching)")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = build_model(cfg)
@@ -132,7 +151,8 @@ def main():
         kv_layout=args.kv_layout, kv_dtype=args.kv_dtype,
         preemption=args.preemption, preempt_policy=args.preempt_policy,
         chunked_prefill=args.chunked_prefill,
-        prefix_share=args.prefix_share)
+        prefix_share=args.prefix_share,
+        cloud_mesh=cloud_mesh)
     prompts = [data.sample_tokens(args.prompt_len)
                for _ in range(args.clients)]
     if args.prefix_share:
@@ -175,6 +195,9 @@ def main():
     st = r["stats"]
     print(f"mode={args.mode} theta={args.theta} wire={args.wire} "
           f"channel={args.channel} cloud_batch={args.cloud_batch}")
+    if cloud_mesh is not None:
+        print(f"cloud mesh: data={cloud_mesh[0]} model={cloud_mesh[1]} "
+              f"({cloud_mesh[0] * cloud_mesh[1]} devices)")
     print(f"tokens={st.tokens} exits@l1={st.exits_l1} exits@l2={st.exits_l2} "
           f"cloud_requests={st.cloud_requests} "
           f"request_rate={st.request_rate:.2%}")

@@ -1,6 +1,6 @@
 """Role-based sharding policy for the production meshes.
 
-Rules (DESIGN.md §5):
+Rules (docs/sharding.md):
   * params — tensor-parallel on heads/d_ff/experts/vocab over ``model``;
     optional FSDP over ``data`` (and ``pod``) for storage of large models.
     Stacked segment params never shard the leading layer axis.
@@ -8,6 +8,10 @@ Rules (DESIGN.md §5):
   * decode caches — batch over ``("pod","data")``; KV sequence over
     ``model``; when batch is unshardable (long_500k B=1) the sequence dim
     takes ``("data","model")`` (sequence-parallel decode attention).
+  * paged pools (``kp``/``vp``/``ks``/``vs`` + page-major ``pos``) have no
+    batch axis — the page axis shards over ``("pod","data")``, KV heads
+    over ``model`` when they divide (never the in-page token axis: the
+    paged gather's flatten would cross shard boundaries).
   * activations — residual stream constrained to sequence-parallel
     ``(batch, "model", None)`` between blocks; logits vocab-sharded over
     ``model`` (keeps (B,S,V) exit/main logits on-chip).
@@ -78,7 +82,17 @@ _ROW_PARALLEL = {"wo", "w_down", "w2", "ffn_down", "w_out"}  # shard INPUT dim
 _EMBED = {"embed", "lm_head"}
 
 
-def param_pspec(path, leaf, mesh: Mesh, *, fsdp: bool) -> P:
+_ATTN_PROJ = {"wq", "wk", "wv", "wo"}   # reshaped to (.., heads, head_dim)
+
+
+def param_pspec(path, leaf, mesh: Mesh, *, fsdp: bool,
+                head_dim: int = 0) -> P:
+    """``head_dim`` > 0 restricts attention projections (wq/wk/wv/wo) to
+    head-aligned model sharding: the flattened heads*head_dim dim is only
+    sharded when the HEAD COUNT divides the model axis, so the downstream
+    (B,S,heads,head_dim) reshape never splits inside a head.  A mid-head
+    shard is both the wrong parallelism (rope/attention mix within a
+    head) and a known XLA resharding hazard on the reshape."""
     names = _path_names(path)
     name = names[-1] if names else ""
     in_segment = "segments" in names or "layers" in names
@@ -95,6 +109,12 @@ def param_pspec(path, leaf, mesh: Mesh, *, fsdp: bool) -> P:
             return True
         return False
 
+    def heads_align(dim) -> bool:
+        if head_dim <= 0 or name not in _ATTN_PROJ:
+            return True
+        heads, rem = divmod(leaf.shape[dim], head_dim)
+        return rem == 0 and heads % _axis_size(mesh, "model") == 0
+
     if nd - stack < 2:
         return P()                      # norms / biases replicated
     if name in _EMBED:
@@ -103,12 +123,14 @@ def param_pspec(path, leaf, mesh: Mesh, *, fsdp: bool) -> P:
             put(1, fsdp_axes)
         return P(*spec)
     if name in _COL_PARALLEL:
-        put(nd - 1, "model")
+        if heads_align(nd - 1):
+            put(nd - 1, "model")
         if fsdp_axes:
             put(nd - 2, fsdp_axes)
         return P(*spec)
     if name in _ROW_PARALLEL:
-        put(nd - 2, "model")
+        if heads_align(nd - 2):
+            put(nd - 2, "model")
         if fsdp_axes:
             put(nd - 1, fsdp_axes)
         return P(*spec)
@@ -134,6 +156,15 @@ def cache_pspec(path, leaf, mesh: Mesh, *, batch: int) -> P:
        k/v:  (L?, B, S, KV, hd)   pos: (L?, B, S)
        gla S:(L?, B, H, dk, dv)   n: (L?, B, H, dk)   m: (L?, B, H)
        conv: (L?, B, W, di)       slstm c/n/m/h: (L?, B, H, hd)
+    Paged pools are page-major with no batch axis (rows reach pages
+    through their block tables; physical page 0 is the trash page):
+       kp/vp: (L?, P, ps, KV, hd)   ks/vs: (L?, P, ps, KV)
+       pos:   (L?, P, ps) — told apart from dense pos by the batch dim.
+    Page axis shards over ("pod","data"); KV heads over "model" when they
+    divide, else replicated (kp and ks share the same KV count, so pages
+    and their int8 scale rows always shard consistently; the in-page
+    token axis is never sharded — the paged gather's flatten would cross
+    shard boundaries).
     """
     names = _path_names(path)
     name = names[-1] if names else ""
@@ -148,6 +179,28 @@ def cache_pspec(path, leaf, mesh: Mesh, *, batch: int) -> P:
             spec[dim] = axes if isinstance(axes, str) else tuple(axes)
             return True
         return False
+
+    # page-major pool leaves (paged/int8 layouts, PRs 2/6)
+    if name in ("kp", "vp"):
+        pdim, kvdim = nd - 4, nd - 2
+    elif name in ("ks", "vs"):
+        pdim, kvdim = nd - 3, nd - 1
+    elif name == "pos" and nd >= 2 and leaf.shape[nd - 2] != batch:
+        pdim, kvdim = nd - 2, None      # paged pos: (L?, P, ps)
+    else:
+        pdim = None
+    if pdim is not None:
+        for trial in (("pod", "data"), ("data",)):
+            axes = tuple(a for a in trial if a in mesh.axis_names)
+            if axes and put(pdim, axes):
+                break
+        if kvdim is not None:
+            # KV heads over model when they divide; otherwise replicate.
+            # Never shard the in-page token axis: the paged gather
+            # flattens (logical_pages, ps) and a sharded ps would put
+            # shard boundaries mid-flatten (an XLA resharding hazard).
+            put(kvdim, "model")
+        return P(*spec)
 
     # locate dims from the right (robust to the optional stack axis)
     if name in ("k", "v"):
@@ -258,9 +311,11 @@ def constrain_logits(x: jax.Array) -> jax.Array:
 # --------------------------------------------------------------------------
 # pytree -> NamedSharding trees
 # --------------------------------------------------------------------------
-def params_shardings(specs: Pytree, mesh: Mesh, *, fsdp: bool) -> Pytree:
+def params_shardings(specs: Pytree, mesh: Mesh, *, fsdp: bool,
+                     head_dim: int = 0) -> Pytree:
     return jax.tree_util.tree_map_with_path(
-        lambda p, l: NamedSharding(mesh, param_pspec(p, l, mesh, fsdp=fsdp)),
+        lambda p, l: NamedSharding(mesh, param_pspec(p, l, mesh, fsdp=fsdp,
+                                                     head_dim=head_dim)),
         specs)
 
 
@@ -280,11 +335,11 @@ def replicated(specs: Pytree, mesh: Mesh) -> Pytree:
 
 
 def estimate_param_bytes_per_device(specs: Pytree, mesh: Mesh,
-                                    fsdp: bool) -> float:
+                                    fsdp: bool, head_dim: int = 0) -> float:
     total = 0.0
     def visit(path, leaf):
         nonlocal total
-        spec = param_pspec(path, leaf, mesh, fsdp=fsdp)
+        spec = param_pspec(path, leaf, mesh, fsdp=fsdp, head_dim=head_dim)
         shards = 1
         for s in spec:
             if s:

@@ -28,6 +28,7 @@ from repro.models.attention import (attention_forward, build_cross_cache,
                                     decode_attention_paged, init_attn_cache,
                                     init_paged_attn_cache)
 from repro.models.common import dense_init, layer_norm, rms_norm, split_rngs
+from repro.launch.sharding import constrain_residual
 
 Params = Dict[str, Any]
 
@@ -181,7 +182,11 @@ def block_forward(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
             causal=ctx.causal, window=ctx.window, prefix_len=ctx.prefix_len,
             use_rope=cfg.use_rope, cache=self_cache,
             cache_offset=ctx.cache_offset)
-        x = x + att
+        # mid-block sequence-parallel point (active ShardingPolicy only):
+        # the residual re-enters its (batch, "model", None) layout between
+        # the attention and MLP sub-layers instead of drifting to whatever
+        # layout the attention output propagated
+        x = constrain_residual(x + att)
         new_cache: Optional[Params] = None
         if cache is not None:
             new_cache = dict(cache)
@@ -249,7 +254,9 @@ def block_decode(params: Params, cfg: ModelConfig, kind: str, x: jax.Array,
                                              cache["self"], ctx.pos,
                                              window=ctx.window,
                                              use_rope=cfg.use_rope)
-        x = x + att
+        # same mid-block sequence-parallel point as block_forward (no-op
+        # for S=1 decode; load-bearing for page-sized prefill chunks)
+        x = constrain_residual(x + att)
         new_cache = dict(cache)
         new_cache["self"] = new_self
         if "cross" in params and "cross" in cache:

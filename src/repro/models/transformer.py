@@ -277,6 +277,10 @@ class Model:
         exit_set = set(cfg.exit_layers) if collect_exits else set()
         exit_hiddens: Dict[int, jax.Array] = {}
         new_caches: Dict[int, Params] = {}
+        # sequence-parallel constraint under an active ShardingPolicy:
+        # a no-op for single-token decode (S=1 can't split), load-bearing
+        # for the chunked-prefill path that decodes page-sized chunks
+        x = shardlib.constrain_residual(x)
         for si in seg_indices:
             seg = self.segments[si]
             sctx = dataclasses.replace(ctx, window=seg.window)
@@ -284,11 +288,12 @@ class Model:
             cache = caches[si]
             if seg.shared:
                 x, nc = block_decode(p, cfg, seg.kind, x, cache, sctx)
+                x = shardlib.constrain_residual(x)
             else:
                 def body(h, inp):
                     lp, lc = inp
                     h, nc = block_decode(lp, cfg, seg.kind, h, lc, sctx)
-                    return h, nc
+                    return shardlib.constrain_residual(h), nc
 
                 x, nc = jax.lax.scan(body, x, (p, cache))
             new_caches[si] = nc

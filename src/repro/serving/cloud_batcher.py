@@ -48,6 +48,7 @@ from repro.core.collm import CoLLM
 from repro.core.content_manager import ContentManager
 from repro.core.paging import OutOfPages, PagePool, pages_needed
 from repro.models.attention import paged_reset_pages, paged_scatter_prefill
+from repro.serving.mesh_exec import jit_step, mesh_context
 
 Pytree = Any
 
@@ -254,17 +255,11 @@ WRITE_PAGES = jax.jit(_write_pages_tree)
 COPY_PAGES = jax.jit(_copy_pages_tree)
 
 
-def _jit(collm: CoLLM, name: str):
-    """Per-CoLLM memoized ``jax.jit`` of a bound step method: every
-    scheduler/batcher sharing one CoLLM (the multi-engine mode spawns one
-    scheduler per client) reuses one traced wrapper instead of re-tracing
-    per engine."""
-    cache = getattr(collm, "_jit_cache", None)
-    if cache is None:
-        cache = collm._jit_cache = {}
-    if name not in cache:
-        cache[name] = jax.jit(getattr(collm, name))
-    return cache[name]
+# per-CoLLM memoized jit of bound step methods now lives in the
+# MeshContext (serving/mesh_exec.py): same one-trace-per-CoLLM guarantee,
+# but cloud steps are traced under the sharding policy when
+# CollmConfig.cloud_mesh is set
+_jit = jit_step
 
 
 # ---------------------------------------------------------------------------
@@ -322,7 +317,13 @@ class CloudBatcher:
                  max_ctx: Optional[int] = None,
                  num_pages: Optional[int] = None):
         self.collm = collm
-        self.params = params
+        # mesh-aware placement (docs/sharding.md): with cloud_mesh set the
+        # params and the pooled batch-major cloud KV get committed to the
+        # cloud mesh via role-based NamedShardings, and the jitted cloud
+        # steps below trace under the sharding policy.  Without a mesh
+        # both calls are identity.
+        self._mesh = mesh_context(collm)
+        self.params = self._mesh.shard_params(params)
         self.cm = cm
         self.B = num_slots
         self.max_seq = max_seq
@@ -346,6 +347,7 @@ class CloudBatcher:
             self.max_ctx = max_seq
             row_seq = max_seq
             self.caches = collm.init_cloud_cache(num_slots, max_seq)
+        self.caches = self._mesh.shard_caches(self.caches, batch=num_slots)
         self._row_seq = row_seq
         self._row0 = collm.init_cloud_cache(1, row_seq)
 

@@ -79,6 +79,7 @@ from repro.serving.cloud_batcher import (COPY_PAGES, RESET_PAGES, SCATTER,
                                          all_paged, build_upload_ring,
                                          gather_slot_pages,
                                          rebind_slot_pages)
+from repro.serving.mesh_exec import mesh_context
 
 Pytree = Any
 
@@ -442,7 +443,9 @@ class BatchScheduler:
         self.collm = collm
         self.model = collm.model
         self.ccfg = collm.ccfg
-        self.params = params
+        # cloud_mesh placement (docs/sharding.md): identity without a mesh
+        self._mesh = mesh_context(collm)
+        self.params = self._mesh.shard_params(params)
         self.cm = cm
         self.B = num_slots
         self.max_seq = max_seq
@@ -558,18 +561,24 @@ class BatchScheduler:
 
         # pooled caches (compiled once per pool size; refills only scatter)
         if mode == "cloud":
-            self.main_caches = self._init_pool_cache(
-                self.model.init_cache,
-                lambda b, n, ps: self.model.init_paged_cache(
-                    b, n, ps, kv_dtype=self.ccfg.kv_dtype))
+            self.main_caches = self._mesh.shard_caches(
+                self._init_pool_cache(
+                    self.model.init_cache,
+                    lambda b, n, ps: self.model.init_paged_cache(
+                        b, n, ps, kv_dtype=self.ccfg.kv_dtype)),
+                batch=num_slots)
             self._full_row0 = self.model.init_cache(1, row_seq)
         else:
             self.edge_caches = self._init_pool_cache(
                 collm.init_edge_cache, collm.init_edge_cache_paged)
             self._edge_row0 = collm.init_edge_cache(1, row_seq)
             if mode == "collm" and self._batcher is None:
-                self.cloud_caches = self._init_pool_cache(
-                    collm.init_cloud_cache, collm.init_cloud_cache_paged)
+                # the cloud half of this engine's caches lives on the
+                # cloud mesh (identity when cloud_mesh is unset)
+                self.cloud_caches = self._mesh.shard_caches(
+                    self._init_pool_cache(
+                        collm.init_cloud_cache, collm.init_cloud_cache_paged),
+                    batch=num_slots)
                 self._cloud_row0 = collm.init_cloud_cache(1, row_seq)
 
         self._write_pages = WRITE_PAGES
@@ -2133,10 +2142,13 @@ class ServingSystem:
     def __init__(self, model: Model, params: Pytree,
                  ccfg: CollmConfig = CollmConfig()):
         self.model = model
-        self.params = params
         self.ccfg = ccfg
         self.collm = CoLLM(model, ccfg)
-        self.cloud = CloudServer(self.collm, params)
+        # with ccfg.cloud_mesh set, commit the params to the cloud mesh
+        # once — every scheduler / CloudBatcher below shares the placed
+        # tree (identity without a mesh, the single-device default)
+        self.params = mesh_context(self.collm).shard_params(params)
+        self.cloud = CloudServer(self.collm, self.params)
         self._schedulers: Dict[tuple, BatchScheduler] = {}
 
     # ------------------------------------------------------------------

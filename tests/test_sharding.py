@@ -100,3 +100,184 @@ def test_batch_axes_divisibility():
     assert shardlib.batch_axes(MESH2, 16) == ("data",)
     assert shardlib.batch_axes(MESH2, 1) is None
     assert shardlib.batch_axes(MESH1, 128) == ("data",)
+
+
+# ---------------------------------------------------------------------------
+# paged / int8 pool leaves (page-major rules)
+# ---------------------------------------------------------------------------
+PAGED_MESH = FakeMesh((2, 4), ("data", "model"))
+
+needs8 = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="run with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def _sds(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pspecs(tree, mesh, batch):
+    out = {}
+
+    def visit(path, leaf):
+        out[shardlib._path_names(path)[-1]] = shardlib.cache_pspec(
+            path, leaf, mesh, batch=batch)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, tree)
+    return out
+
+
+def test_cache_pspec_paged_divisible():
+    # int8 pool: (P+1=64, ps=16, KV=8, hd=32) on (data=2, model=4) —
+    # page axis over data, KV heads over model, scales follow the pages
+    tree = {"self": {"kp": _sds(64, 16, 8, 32, dtype=jnp.int8),
+                     "vp": _sds(64, 16, 8, 32, dtype=jnp.int8),
+                     "ks": _sds(64, 16, 8), "vs": _sds(64, 16, 8),
+                     "pos": _sds(64, 16, dtype=jnp.int32)}}
+    sp = _pspecs(tree, PAGED_MESH, batch=4)
+    assert sp["kp"] == P(("data",), None, "model", None)
+    assert sp["vp"] == P(("data",), None, "model", None)
+    assert sp["ks"] == P(("data",), None, "model")
+    assert sp["vs"] == P(("data",), None, "model")
+    assert sp["pos"] == P(("data",), None)
+
+
+def test_cache_pspec_paged_indivisible_replicates():
+    # 2 KV heads can't split over model=4; 65 pages can't split over
+    # data=2 — both must fall back to replication, never mis-shard
+    tree = {"self": {"kp": _sds(65, 16, 2, 32), "vp": _sds(65, 16, 2, 32),
+                     "pos": _sds(65, 16, dtype=jnp.int32)}}
+    sp = _pspecs(tree, PAGED_MESH, batch=4)
+    assert sp["kp"] == P(None, None, None, None)
+    assert sp["pos"] == P(None, None)
+
+
+def test_cache_pspec_paged_stacked_segment():
+    # scanned segments carry a leading layer axis; dims located from the
+    # right so the same rules apply
+    tree = {"self": {"kp": _sds(2, 64, 16, 8, 32),
+                     "ks": _sds(2, 64, 16, 8)}}
+    sp = _pspecs(tree, PAGED_MESH, batch=4)
+    assert sp["kp"] == P(None, ("data",), None, "model", None)
+    assert sp["ks"] == P(None, ("data",), None, "model")
+
+
+def test_cache_pspec_dense_pos_untouched_by_paged_rules():
+    # dense pos (B, S) with B == batch keeps the batch/seq rules; paged
+    # pos is recognized by its page-major first dim != batch
+    dense = _pspecs({"self": {"pos": _sds(4, 64, dtype=jnp.int32)}},
+                    PAGED_MESH, batch=4)
+    assert dense["pos"] == P(("data",), "model")
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-110b", "gemma3-12b"])
+@pytest.mark.parametrize("kv_dtype", ["float32", "int8"])
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_paged_cache_specs_divisible(arch, kv_dtype, mesh):
+    model = build_model(get_config(arch), param_dtype=jnp.bfloat16)
+    specs = jax.eval_shape(
+        lambda: model.init_paged_cache(8, 63, 16, kv_dtype=kv_dtype))
+    _specs_ok(specs, mesh, shardlib.cache_pspec, batch=8)
+
+
+def test_param_pspec_head_aligned_attention():
+    # GQA: 2 KV heads on a model axis of 4 — wk/wv must replicate (a
+    # mid-head shard splits head_dim across devices: wrong parallelism
+    # and an XLA resharding hazard on the heads reshape); wq/wo with 4
+    # heads shard cleanly
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="tiny-tp", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=256, tie_embeddings=True,
+                      exit_layers=(1, 2)).validate()
+    model = build_model(cfg)
+    hd = cfg.resolved_head_dim
+    seen = set()
+
+    def visit(path, leaf):
+        name = shardlib._path_names(path)[-1]
+        sp = shardlib.param_pspec(path, leaf, PAGED_MESH, fsdp=False,
+                                  head_dim=hd)
+        if name in ("wk", "wv"):
+            assert all(s is None for s in sp), (name, sp)
+        elif name == "wq":
+            assert sp[leaf.ndim - 1] == "model", sp
+        elif name == "wo":
+            assert sp[leaf.ndim - 2] == "model", sp
+        else:
+            return leaf
+        seen.add(name)
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, model.param_specs())
+    assert seen == {"wq", "wk", "wv", "wo"}
+
+
+# ---------------------------------------------------------------------------
+# launch/mesh.py + estimate-vs-actual (forced multi-device lane)
+# ---------------------------------------------------------------------------
+def test_make_debug_mesh_clamps_to_available():
+    from repro.launch.mesh import make_debug_mesh
+    assert make_debug_mesh(1).devices.size == 1
+    assert make_debug_mesh(10 ** 6).devices.size == len(jax.devices())
+
+
+def test_make_cloud_mesh_too_few_devices():
+    from repro.launch.mesh import make_cloud_mesh
+    with pytest.raises(ValueError, match="device_"):
+        make_cloud_mesh((64, 64))
+
+
+def test_make_cloud_mesh_rejects_bad_shape():
+    from repro.launch.mesh import make_cloud_mesh
+    with pytest.raises(ValueError, match="pair"):
+        make_cloud_mesh((2, 4, 1))
+    with pytest.raises(ValueError, match="pair"):
+        make_cloud_mesh((0, 2))
+
+
+@needs8
+def test_make_debug_mesh_device_counts():
+    from repro.launch.mesh import make_debug_mesh
+    assert dict(make_debug_mesh(8).shape) == {"data": 2, "model": 4}
+    assert dict(make_debug_mesh(6).shape) == {"data": 3, "model": 2}
+    assert dict(make_debug_mesh(3).shape) == {"data": 3, "model": 1}
+
+
+@needs8
+def test_pod_submeshes_split():
+    from repro.launch.mesh import pod_submeshes
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    edge, cloud = pod_submeshes(mesh)
+    assert edge.axis_names == ("data", "model")
+    assert cloud.axis_names == ("data", "model")
+    assert edge.devices.size == 4 and cloud.devices.size == 4
+    eids = {d.id for d in edge.devices.flat}
+    cids = {d.id for d in cloud.devices.flat}
+    assert eids.isdisjoint(cids)
+
+
+@needs8
+def test_estimate_matches_actual_device_bytes():
+    # the analytic estimate must agree with what device_put actually
+    # commits per device under the same specs
+    from repro.configs.base import ModelConfig
+    cfg = ModelConfig(name="tiny-tp-bytes", arch_type="dense", n_layers=4,
+                      d_model=128, n_heads=4, n_kv_heads=2, d_ff=256,
+                      vocab_size=256, tie_embeddings=True,
+                      exit_layers=(1, 2)).validate()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    hd = cfg.resolved_head_dim
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    placed = jax.device_put(
+        params, shardlib.params_shardings(params, mesh, fsdp=False,
+                                          head_dim=hd))
+    dev0 = mesh.devices.flat[0]
+    actual = sum(s.data.nbytes
+                 for l in jax.tree.leaves(placed)
+                 for s in l.addressable_shards if s.device == dev0)
+    est = shardlib.estimate_param_bytes_per_device(
+        model.param_specs(), mesh, fsdp=False, head_dim=hd)
+    total = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    assert actual == pytest.approx(est, rel=1e-6)
+    assert actual < total           # model-axis sharding is effective
