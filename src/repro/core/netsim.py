@@ -82,6 +82,9 @@ class TokenTrace:
 class CaseTrace:
     prompt_len: int
     tokens: List[TokenTrace]      # generated tokens
+    arrival_t: float = 0.0        # open-loop virtual arrival time; a case
+                                  # never starts before it (workload.
+                                  # stamp_arrivals attaches these)
 
 
 @dataclasses.dataclass
@@ -148,13 +151,6 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
     hb = _hidden_bytes(split.d_model, half_precision)
     theta_eff = theta if early_exit else 2.0   # never exit early
 
-    # ---- prompt prefill (per client, before the token loop) ---------------
-    for c in clients:
-        t = 0.0
-        for case in c.cases:
-            pass
-        c.now = 0.0
-
     heap = [(c.now, c.cid) for c in clients]
     heapq.heapify(heap)
     edge_layers_e1 = split.l_ee1
@@ -176,6 +172,10 @@ def simulate(strategy: str, clients_cases: Sequence[List[CaseTrace]],
         case = c.cases[c.case_idx]
 
         if c.tok_idx == 0:
+            # open-loop replay: a case stamped with an arrival time in the
+            # client's future starts then — the gap is idle, not busy
+            if case.arrival_t > c.now:
+                c.now = case.arrival_t
             # ---------------- prompt processing (batched prefill) ----------
             p = case.prompt_len
             pf = comp.prefill_discount

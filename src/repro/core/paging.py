@@ -123,7 +123,12 @@ class PagePool:
     ``block_table`` is ``(num_slots, max_logical)`` int32.  ``watermark``
     pages are held back from admission (``can_admit``) so in-flight
     streams keep some alloc-on-write headroom before the scheduler has to
-    preempt; it never blocks ``alloc`` itself.
+    preempt; it never blocks ``alloc`` itself.  The attribute is a live
+    control knob: only ``__init__`` validates it, and the engine's
+    adaptive loop (``serving/adaptive.py``, docs/fleet_sim.md) raises and
+    decays it between scheduler ticks in response to observed
+    ``OutOfPages``/preemption pressure — mutate it freely between
+    ``can_admit`` calls, never mid-allocation.
 
     With ``prefix_cache=True`` the pool additionally keeps a radix trie of
     page-aligned prompt token chunks (``match_prefix`` / ``insert_prefix``)

@@ -220,7 +220,8 @@ class CloudServicePoint:
     """
 
     def __init__(self, service_s: float = 0.0, *,
-                 batch_window_s: float = 0.0, max_batch: int = 1):
+                 batch_window_s: float = 0.0, max_batch: int = 1,
+                 window_controller: Any = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if batch_window_s > 0.0 and max_batch == 1:
@@ -230,7 +231,13 @@ class CloudServicePoint:
                              "(a window with max_batch=1 never coalesces)")
         self.service_s = float(service_s)
         self.batch_window_s = float(batch_window_s)
+        self._init_window_s = self.batch_window_s
         self.max_batch = int(max_batch)
+        # optional adaptive controller (serving.adaptive.WindowController):
+        # consulted on every booking with the request's ready time, it
+        # returns the accumulation window to use from the observed arrival
+        # rate — None keeps the static knob
+        self.window_controller = window_controller
         self.reset()
 
     def reset(self) -> None:
@@ -244,6 +251,9 @@ class CloudServicePoint:
         self.requests = 0
         self.busy_s = 0.0          # summed server busy time (per batch,
                                    # not per request — coalescing shrinks it)
+        self.batch_window_s = self._init_window_s
+        if self.window_controller is not None:
+            self.window_controller.reset()
 
     @property
     def batched(self) -> bool:
@@ -253,6 +263,9 @@ class CloudServicePoint:
                 ) -> float:
         svc = self.service_s if service_s is None else float(service_s)
         self.requests += 1
+        if self.window_controller is not None:
+            self.batch_window_s = float(
+                self.window_controller.observe(ready_t, self))
         if self._count and self._count < self.max_batch \
                 and ready_t <= self._close_t:
             # join the open batch: one masked step serves this request too;
@@ -305,12 +318,16 @@ class CloudRequest:
 class ChannelStats:
     requests: int = 0
     replies: int = 0
+    dropped: int = 0            # submitted but never delivered (reset /
+                                # end-of-run drain): zero flight billed
     bytes_up: int = 0           # requests + notified uploads
-    bytes_down: int = 0
-    flight_s: float = 0.0       # summed virtual in-flight time
+    bytes_down: int = 0         # delivered replies only
+    flight_s: float = 0.0       # summed virtual in-flight time of
+                                # DELIVERED replies (billed at poll)
 
     def as_row(self) -> Dict[str, float]:
         return {"requests": self.requests, "replies": self.replies,
+                "dropped": self.dropped,
                 "bytes_up": self.bytes_up, "bytes_down": self.bytes_down,
                 "flight_s": round(self.flight_s, 4)}
 
@@ -342,10 +359,12 @@ class CloudChannel:
             submit_t=now, arrival_t=arrival,
             deadline_t=now + self.deadline_s,
             nbytes_up=nbytes_up, nbytes_down=nbytes_down)
+        # only the request side is billed here: the reply's downlink bytes
+        # and its flight time are billed when the reply is actually
+        # delivered by ``poll`` — a request discarded by ``reset``/
+        # ``drop_in_flight`` must not count virtual flight it never flew
         self.stats.requests += 1
         self.stats.bytes_up += nbytes_up
-        self.stats.bytes_down += nbytes_down
-        self.stats.flight_s += arrival - now
         return handle
 
     def poll(self, now: float = math.inf) -> List[CloudRequest]:
@@ -356,6 +375,8 @@ class CloudChannel:
                       if r.arrival_t <= now), key=lambda r: r.arrival_t)
         for r in due:
             del self._inflight[r.handle]
+            self.stats.bytes_down += r.nbytes_down
+            self.stats.flight_s += r.arrival_t - r.submit_t
         self.stats.replies += len(due)
         return due
 
@@ -380,14 +401,25 @@ class CloudChannel:
         del slot, now
         self.stats.bytes_up += nbytes
 
+    def drop_in_flight(self) -> int:
+        """Discard every in-flight request without billing it: the reply
+        was never consumed (end-of-run drain, slot teardown), so its
+        flight time and downlink bytes never happened.  Returns the count
+        (the ``dropped`` stat increments by the same amount)."""
+        n = len(self._inflight)
+        self._inflight.clear()
+        self.stats.dropped += n
+        return n
+
     def reset(self) -> None:
         """Forget virtual-time state between ``generate()`` runs.
 
         A reused channel would otherwise inherit the previous run's link /
         service bookkeeping (virtual times far beyond the new run's clock)
         and skew the second run's latency trace.  Cumulative counters
-        (``stats``) survive; any stale in-flight request is dropped."""
-        self._inflight.clear()
+        (``stats``) survive; any stale in-flight request is dropped
+        unbilled (it counts as ``dropped``, never as flight)."""
+        self.drop_in_flight()
 
     # -- latency model ------------------------------------------------------
     def _latency(self, slot: int, now: float, nbytes_up: int,

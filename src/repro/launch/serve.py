@@ -24,8 +24,10 @@ from repro.configs.registry import get_config, get_smoke_config
 from repro.core.collm import CollmConfig
 from repro.core.netsim import NetworkParams
 from repro.core.transport import AsyncSimChannel, CloudServicePoint
+from repro.core.workload import ArrivalProcess, arrival_times
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.registry import build_model
+from repro.serving.adaptive import AdaptiveConfig, ResumeCostModel
 from repro.serving.engine import ServingSystem, token_agreement
 from repro.training.checkpoint import load_checkpoint
 
@@ -102,6 +104,30 @@ def main():
     ap.add_argument("--service-s", type=float, default=0.008,
                     help="virtual cost of one cloud service step "
                          "(--channel sim)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop fleet replay (docs/fleet_sim.md): mean "
+                         "request arrivals per virtual second (0 = closed "
+                         "loop, the whole backlog at t=0)")
+    ap.add_argument("--arrival-cv2", type=float, default=1.0,
+                    help="interarrival squared coefficient of variation "
+                         "(1 = Poisson, >1 = bursty gamma renewals)")
+    ap.add_argument("--diurnal-amp", type=float, default=0.0,
+                    help="sinusoidal arrival-rate modulation depth in "
+                         "[0, 1)")
+    ap.add_argument("--diurnal-period", type=float, default=10.0,
+                    help="diurnal modulation period (virtual s)")
+    ap.add_argument("--arrival-seed", type=int, default=0)
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="per-request time-to-first-token target "
+                         "(virtual s) folded into SLO attainment")
+    ap.add_argument("--slo-tpot", type=float, default=None,
+                    help="per-request mean inter-token latency target "
+                         "(virtual s)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="engine-side adaptive control: watermark AIMD on "
+                         "the page pool, fluid-ODE admission gate, "
+                         "per-victim swap-vs-recompute (needs --kv-layout "
+                         "paged)")
     args = ap.parse_args()
     if args.cloud_batch and (args.preemption != "off"
                              or args.num_pages is not None):
@@ -129,6 +155,22 @@ def main():
     if args.cloud_dp != 1 and not args.cloud_tp:
         ap.error("--cloud-dp sizes the data axis of the cloud mesh; "
                  "needs --cloud-tp")
+    if args.arrival_rate < 0:
+        ap.error("--arrival-rate must be >= 0")
+    if args.arrival_rate == 0 and (args.arrival_cv2 != 1.0
+                                   or args.diurnal_amp != 0.0):
+        ap.error("--arrival-cv2/--diurnal-amp shape the arrival process; "
+                 "need --arrival-rate > 0")
+    if ((args.arrival_rate > 0 or args.slo_ttft is not None
+         or args.slo_tpot is not None) and args.channel != "sim"):
+        ap.error("--arrival-rate/--slo-* replay in virtual time; need "
+                 "--channel sim")
+    if args.adaptive and args.kv_layout != "paged":
+        ap.error("--adaptive tunes the paged pool's watermark and "
+                 "admission; needs --kv-layout paged")
+    if args.adaptive and args.cloud_batch:
+        ap.error("--adaptive drives the single-engine scheduler; drop "
+                 "--cloud-batch to use it")
     cloud_mesh = (args.cloud_dp, args.cloud_tp) if args.cloud_tp else None
     if cloud_mesh is not None:
         need = cloud_mesh[0] * cloud_mesh[1]
@@ -165,32 +207,54 @@ def main():
                                            + ccfg.page_size // 2)
         prompts = [np.concatenate([system_prefix, p]).astype(p.dtype)
                    for p in prompts]
+    arrivals = None
+    if args.arrival_rate > 0:
+        proc = ArrivalProcess(
+            rate=args.arrival_rate,
+            kind="poisson" if args.arrival_cv2 == 1.0 else "gamma",
+            cv2=args.arrival_cv2, diurnal_amp=args.diurnal_amp,
+            diurnal_period_s=args.diurnal_period)
+        arrivals = arrival_times(proc, len(prompts),
+                                 seed=args.arrival_seed)
+    fleet_kw = {}
+    if arrivals is not None:
+        fleet_kw["arrivals"] = arrivals
+    if args.slo_ttft is not None:
+        fleet_kw["slo_ttft_s"] = args.slo_ttft
+    if args.slo_tpot is not None:
+        fleet_kw["slo_tpot_s"] = args.slo_tpot
     system = ServingSystem(model, params, ccfg)
     if args.cloud_batch:
-        gen_kw = {}
+        gen_kw = dict(fleet_kw)
         if args.channel == "sim":
             # a single client has nobody to coalesce with: plain FIFO
             svc = CloudServicePoint(
                 args.service_s,
                 batch_window_s=args.batch_window if args.clients > 1 else 0.0,
                 max_batch=args.clients)
-            gen_kw = {"channels": [AsyncSimChannel(NetworkParams(),
-                                                   deadline_s=args.deadline,
-                                                   service=svc)
-                                   for _ in range(args.clients)],
-                      "tick_time_s": args.tick_time}
+            gen_kw.update(
+                channels=[AsyncSimChannel(NetworkParams(),
+                                          deadline_s=args.deadline,
+                                          service=svc)
+                          for _ in range(args.clients)],
+                tick_time_s=args.tick_time)
         r = system.generate_multi(prompts, args.max_new, mode=args.mode,
                                   cloud_batch=True, **gen_kw)
         if "batcher" in r:
             print(f"cloud batcher: {r['batcher']}")
     else:
-        gen_kw = {}
+        gen_kw = dict(fleet_kw)
         if args.channel == "sim":
-            gen_kw = {"channel": AsyncSimChannel(NetworkParams(),
-                                                 deadline_s=args.deadline),
-                      "tick_time_s": args.tick_time}
+            gen_kw.update(channel=AsyncSimChannel(NetworkParams(),
+                                                  deadline_s=args.deadline),
+                          tick_time_s=args.tick_time)
         if args.num_pages is not None:
             gen_kw["num_pages"] = args.num_pages
+        if args.adaptive:
+            # per-victim swap-vs-recompute needs the cost model; both the
+            # watermark AIMD and the admission gate hang off the config
+            gen_kw.update(adaptive=AdaptiveConfig(),
+                          resume_cost=ResumeCostModel())
         r = system.generate(prompts, args.max_new, mode=args.mode, **gen_kw)
     st = r["stats"]
     print(f"mode={args.mode} theta={args.theta} wire={args.wire} "
@@ -220,6 +284,16 @@ def main():
               f"deadline_misses={st.deadline_misses} "
               f"fallbacks={st.fallbacks} stall={st.stall_s:.3f}s "
               f"overlap={st.overlap_s:.3f}s late_drops={r['late_drops']}")
+    if fleet_kw:
+        print(f"fleet: ttft_p50={st.ttft_p(50) * 1e3:.1f}ms "
+              f"ttft_p99={st.ttft_p(99) * 1e3:.1f}ms "
+              f"tpot_p50={st.token_lat_p(50) * 1e3:.1f}ms "
+              f"tpot_p99={st.token_lat_p(99) * 1e3:.1f}ms "
+              f"slo={st.slo_attainment:.2%} ({st.slo_met}/{st.slo_total}) "
+              f"preempt_rate={st.preemption_rate:.3f} "
+              f"miss_rate={st.deadline_miss_rate:.3f}")
+    if args.adaptive and r.get("adaptive") is not None:
+        print(f"adaptive: {r['adaptive']}")
     if args.mode != "cloud":
         base_sys = system
         if args.chunked_prefill:

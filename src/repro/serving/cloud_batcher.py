@@ -281,6 +281,7 @@ class BatcherStats:
     requests: int = 0
     steps: int = 0              # masked batched cloud calls executed
     rows: int = 0               # summed rows served by those calls
+    max_rows: int = 0           # peak rows in any single wave (occupancy)
     cancelled: int = 0
     prefills: int = 0
     prefill_chunks: int = 0     # chunked-admission cloud prefill calls
@@ -299,6 +300,7 @@ class BatcherStats:
     def as_row(self) -> Dict[str, float]:
         return {"requests": self.requests, "steps": self.steps,
                 "mean_batch": round(self.mean_batch, 2),
+                "max_batch": self.max_rows,
                 "cancelled": self.cancelled, "prefills": self.prefills,
                 "prefill_chunks": self.prefill_chunks,
                 "prefix_hit_tokens": self.prefix_hit_tokens,
@@ -749,6 +751,7 @@ class CloudBatcher:
             e.group["logits"] = logits
         self.stats.steps += 1
         self.stats.rows += len(wave)
+        self.stats.max_rows = max(self.stats.max_rows, len(wave))
         self.stats.cloud_time += time.perf_counter() - t0
 
     def kv_cache_bytes(self) -> int:

@@ -73,6 +73,8 @@ from repro.core.transport import (TOKEN_BYTES, ChannelStats, CloudChannel,
                                   draft_request_bytes, hidden_wire_bytes)
 from repro.models.transformer import Model
 from repro.serving import sampler as samplerlib
+from repro.serving.adaptive import (AdaptiveConfig, AdaptiveController,
+                                    ResumeCostModel)
 from repro.serving.cloud_batcher import (COPY_PAGES, RESET_PAGES, SCATTER,
                                          SCATTER_PAGED, WRITE_PAGES,
                                          CloudBatcher, _bucket, _jit,
@@ -116,6 +118,15 @@ class GenStats:
     # accepted-prefix length of each verified draft reply (0..k); the
     # accept-length histogram of the bench / property tests
     accept_lens: List[int] = dataclasses.field(default_factory=list)
+    # fleet replay metrics (docs/fleet_sim.md): per retired stream, the
+    # virtual time from its open-loop arrival to its first token, and the
+    # virtual gap between consecutive committed tokens (the per-token
+    # latency whose p50/p99 the fleet bench gates).  ``slo_total`` counts
+    # streams that carried an SLO; ``slo_met`` the ones that met it.
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    token_lat_s: List[float] = dataclasses.field(default_factory=list)
+    slo_total: int = 0
+    slo_met: int = 0
 
     @property
     def request_rate(self) -> float:
@@ -126,6 +137,29 @@ class GenStats:
         if self.tokens <= 0:
             return 0.0
         return self.cloud_requests / self.tokens
+
+    def ttft_p(self, q: float) -> float:
+        """Time-to-first-token percentile (virtual s), 0 when unmeasured."""
+        return float(np.percentile(self.ttft_s, q)) if self.ttft_s else 0.0
+
+    def token_lat_p(self, q: float) -> float:
+        """Inter-token latency percentile (virtual s), 0 when unmeasured."""
+        return (float(np.percentile(self.token_lat_s, q))
+                if self.token_lat_s else 0.0)
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of SLO-carrying streams that met every armed target
+        (vacuously 1.0 when no stream carried an SLO)."""
+        return self.slo_met / self.slo_total if self.slo_total else 1.0
+
+    @property
+    def preemption_rate(self) -> float:
+        return self.preemptions / self.tokens if self.tokens else 0.0
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return self.deadline_misses / self.tokens if self.tokens else 0.0
 
 
 def _aggregate(stats: Sequence[Optional[GenStats]]) -> GenStats:
@@ -241,12 +275,21 @@ class EdgeClient:
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
 class Request:
-    """One client stream queued for the scheduler."""
+    """One client stream queued for the scheduler.
+
+    ``arrival_t`` is the stream's open-loop virtual arrival time: the
+    scheduler never admits it earlier (closed-loop replay leaves it 0).
+    ``slo_ttft_s`` / ``slo_tpot_s`` arm per-stream service objectives —
+    time-to-first-token and mean time-per-output-token budgets checked at
+    retirement (``GenStats.slo_attainment``)."""
     device_id: str
     prompt: np.ndarray
     max_new: int
     eos_id: Optional[int] = None
     index: int = 0                   # submission order (result slot)
+    arrival_t: float = 0.0
+    slo_ttft_s: Optional[float] = None
+    slo_tpot_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -303,6 +346,10 @@ class _Slot:
     req: Optional[Request] = None
     stats: Optional[GenStats] = None
     tokens: List[int] = dataclasses.field(default_factory=list)
+    # virtual commit time of each entry of ``tokens`` (kept in lockstep
+    # through rewinds/preemption): the raw material of the per-token
+    # latency and TTFT metrics finalized at retirement
+    emit_ts: List[float] = dataclasses.field(default_factory=list)
     pos: int = 0
     last_token: int = 0
     active: bool = False
@@ -350,6 +397,7 @@ class _Checkpoint:
     req: Request
     stats: GenStats
     tokens: List[int]
+    emit_ts: List[float]
     events: List[str]
     cloud_pkts: List[tuple]               # [(pos, StatePacket)] pos < resume
     uploads: List[tuple]                  # pending CM uploads, pos < resume
@@ -432,7 +480,9 @@ class BatchScheduler:
                  fallback_after: int = 0,
                  cloud_batcher: Optional[CloudBatcher] = None,
                  watermark: int = 0,
-                 preempt_schedule: Optional[Sequence] = None):
+                 preempt_schedule: Optional[Sequence] = None,
+                 adaptive: Optional[AdaptiveConfig] = None,
+                 resume_cost: Optional[ResumeCostModel] = None):
         if mode not in ("collm", "standalone", "cloud"):
             raise ValueError(mode)
         # cloud compute delegated to a shared CloudBatcher (multi-engine
@@ -552,6 +602,22 @@ class BatchScheduler:
         self._admit_counter = 0
         self._tick_no = 0
         self.preemptions = 0          # scheduler-lifetime preempt events
+        self.oops = 0                 # scheduler-lifetime OutOfPages events
+        self._arrival_hint: Optional[float] = None   # next queued arrival
+        # resume pricing + adaptive control (docs/fleet_sim.md): the cost
+        # model is physics shared by every configuration; the controller
+        # is the optional loop that tunes watermark / admission / resume
+        # mode against it
+        self._resume_cost = resume_cost
+        self._adaptive: Optional[AdaptiveController] = None
+        self._kv_tok_bytes: Optional[float] = None
+        if adaptive is not None:
+            if self.pool is None:
+                raise ValueError("adaptive control tunes the paged pool's "
+                                 "watermark and admission; needs "
+                                 'kv_layout="paged"')
+            self._adaptive = AdaptiveController(adaptive)
+            self._adaptive.attach(self.pool, resume_cost)
         self._preempt_schedule: Dict[int, List[int]] = {}
         if preempt_schedule:
             if self.preemption == "off":
@@ -722,7 +788,21 @@ class BatchScheduler:
                 - self._outstanding_pages())
         need_now = max(0, pages_needed(p_len, self.pool.page_size)
                        - hit_pages)
-        return self._fits_now(need_now)
+        if not self._fits_now(need_now):
+            return False
+        if self._adaptive is not None and any(s.active for s in self.slots):
+            # fluid-ODE admission gate (docs/fleet_sim.md): hold the
+            # request while its worst-case residency would overcommit the
+            # capacity curve.  Skipped when nothing runs — the gate
+            # protects running streams from churn, never wedges an idle
+            # engine (mirrors the _fits_now last-resort rule).
+            resident = (self.pool.num_pages - self.pool.free_pages
+                        - self.pool.reclaimable_pages) * self.pool.page_size
+            n_active = sum(1 for s in self.slots if s.active)
+            if not self._adaptive.admit_ok(resident, n_active,
+                                           p_len + req.max_new):
+                return False
+        return True
 
     def _next_admit_seq(self) -> int:
         self._admit_counter += 1
@@ -789,6 +869,11 @@ class BatchScheduler:
                 # _collect copies the results out — never reuse it here
                 continue
             req: Request = queue[0]
+            if req.arrival_t > self.vnow:
+                # open-loop replay: the head request hasn't arrived yet,
+                # and the queue is arrival-sorted so nothing behind it is
+                # due either — the run loop jumps the clock when idle
+                break
             prompt = np.asarray(req.prompt, np.int32)
             p_len = len(prompt)
             pad = _bucket(p_len) if self._pad_ok else p_len
@@ -873,6 +958,7 @@ class BatchScheduler:
             st.tokens = 1
             slot.req, slot.stats = req, st
             slot.tokens = [tok]
+            slot.emit_ts = [self.vnow]
             slot.events = ["admit"]
             slot.last_token = tok
             slot.pos = p_len
@@ -943,12 +1029,14 @@ class BatchScheduler:
             tok = int(terminal[1])
             st.tokens = 1
             slot.tokens = [tok]
+            slot.emit_ts = [self.vnow]
             slot.events = ["admit"]
             slot.last_token = tok
             slot.pos = p_len
             slot.prefill_prompt = None
             return
         slot.tokens = []
+        slot.emit_ts = []
         slot.events = []
         slot.last_token = 0
         slot.pos = 0                 # meaningless until prefill completes
@@ -1026,6 +1114,7 @@ class BatchScheduler:
         st.tokens += 1
         s.prefill_prompt = None
         s.tokens = [tok]
+        s.emit_ts = [self.vnow]
         s.events = ["admit"]
         s.last_token = tok
         s.pos = p_len
@@ -1056,6 +1145,30 @@ class BatchScheduler:
         st.cloud_requests += 1
         return int(self._pick(prefill_logits)[0])
 
+    def _finalize_latency(self, slot: _Slot) -> None:
+        """Fold the stream's per-token emission timestamps into its stats
+        at retirement: TTFT (first emission minus request arrival),
+        inter-token gaps, and — when the request carries SLO targets —
+        one met/total attainment sample.  Virtual-time quantities only,
+        so fleet-bench gates built on them are deterministic."""
+        st, req = slot.stats, slot.req
+        ts = slot.emit_ts
+        if not ts:
+            return
+        ttft = ts[0] - req.arrival_t
+        st.ttft_s.append(ttft)
+        gaps = [b - a for a, b in zip(ts, ts[1:])]
+        st.token_lat_s.extend(gaps)
+        if req.slo_ttft_s is not None or req.slo_tpot_s is not None:
+            st.slo_total += 1
+            met = True
+            if req.slo_ttft_s is not None and ttft > req.slo_ttft_s:
+                met = False
+            if (req.slo_tpot_s is not None and gaps
+                    and sum(gaps) / len(gaps) > req.slo_tpot_s):
+                met = False
+            st.slo_met += int(met)
+
     # -- slot retirement ----------------------------------------------------
     def _maybe_finish(self, slot: _Slot) -> bool:
         req = slot.req
@@ -1069,6 +1182,7 @@ class BatchScheduler:
         # run before the slot can retire.
         done = done and not slot.pending and not slot.draft
         if done:
+            self._finalize_latency(slot)
             if self.mode == "collm":
                 if self._batcher is not None:
                     # cancels queued requests, frees the cloud pool row
@@ -1152,6 +1266,7 @@ class BatchScheduler:
                 self._alloc_page(s.index, lp)
                 return
             except OutOfPages:
+                self.oops += 1
                 self._preempt_victim(s)
 
     def _cow_write(self, s: _Slot, lp: int) -> None:
@@ -1166,6 +1281,7 @@ class BatchScheduler:
                 src, dst = self.pool.cow_page(s.index, lp)
                 break
             except OutOfPages:
+                self.oops += 1
                 freed = self.pool.evict_prefix(1)
                 if freed:
                     self._reset_freed(freed)
@@ -1200,12 +1316,28 @@ class BatchScheduler:
             for kind in reversed(s.events[cut:]):
                 self._unwind_event(s, kind)
             del s.tokens[cut:]
+            del s.emit_ts[cut:]
             del s.events[cut:]
+        # abandoned in-flight waits are virtual time this stream really
+        # spent: bill their stall/overlap here, because their replies will
+        # late-drop and poll-time billing never sees a dropped request
+        for pend in s.pending.values():
+            if not self._spec:
+                st.stall_s += self.vnow - pend.stall_from
+            st.overlap_s += self._hidden_s(pend)
         s.pending = {}
         # dropped draft packets sit at/after the resume point — re-decode
         # re-creates (and re-uploads) them, so they are NOT checkpointed
         s.draft = []
         resume_pos = len(req.prompt) + len(s.tokens) - 1
+        use_swap = self.preemption == "swap"
+        if (use_swap and self._adaptive is not None
+                and self._adaptive.cfg.adapt_resume_mode
+                and self._resume_cost is not None):
+            # per-victim mode choice: short contexts re-prefill cheaper
+            # than their KV round-trips the host; long contexts flip
+            use_swap = self._resume_cost.prefer_swap(
+                resume_pos, int(resume_pos * self._kv_token_bytes()))
         # cloud KV at/after the resume point is re-created by re-decode;
         # everything before it replays from the consumed-upload log
         ck_pkts = [e for e in s.cloud_pkts if e[0] < resume_pos]
@@ -1215,17 +1347,18 @@ class BatchScheduler:
                        if u[0] < resume_pos]
         batcher_swap = None
         if self._batcher is not None:
-            if self.preemption == "swap":
+            if use_swap:
                 batcher_swap = self._batcher.swap_out(req.device_id)
             else:
                 self._batcher.release(req.device_id)
         swap_key, swap_pages = None, 0
         if self.pool is not None:
-            if self.preemption == "swap":
+            if use_swap:
                 swap_key, swap_pages = self._swap_out_slot(s)
             self._free_pages(s)
         self._preempted.append(_Checkpoint(
             req=req, stats=st, tokens=list(s.tokens), events=list(s.events),
+            emit_ts=list(s.emit_ts),
             cloud_pkts=ck_pkts, uploads=uploads, standalone=s.standalone,
             miss_streak=s.miss_streak, swap_key=swap_key,
             swap_pages=swap_pages, batcher_swap=batcher_swap))
@@ -1236,8 +1369,18 @@ class BatchScheduler:
         s.req = None
         s.stats = None
         s.tokens = []
+        s.emit_ts = []
         s.events = []
         s.cloud_pkts = []
+
+    def _kv_token_bytes(self) -> float:
+        """Modeled device bytes of KV/state per resident token (paged
+        layout: total pooled cache bytes over total pooled capacity) —
+        the quantity the swap cost model prices per victim."""
+        if self._kv_tok_bytes is None:
+            cap = self.pool.num_pages * self.pool.page_size
+            self._kv_tok_bytes = self.kv_cache_bytes() / max(1, cap)
+        return self._kv_tok_bytes
 
     def _swap_out_slot(self, s: _Slot) -> tuple:
         """Copy the slot's physical pages (every cache tree this engine
@@ -1295,6 +1438,16 @@ class BatchScheduler:
         prompt = np.asarray(req.prompt, np.int32)
         p_len = len(prompt)
         resume_pos = p_len + len(ck.tokens) - 1
+        if self._resume_cost is not None:
+            # bill the chosen resume mode's modeled cost into this
+            # engine's virtual clock — static and adaptive configurations
+            # pay the same physics, they just choose differently
+            if ck.swap_key is not None:
+                kv_bytes = int(ck.swap_pages * self.pool.page_size
+                               * self._kv_token_bytes())
+                self.vnow += self._resume_cost.swap_s(kv_bytes)
+            else:
+                self.vnow += self._resume_cost.recompute_s(resume_pos)
         if self.mode == "collm":
             self.cm.restore_uploads(req.device_id, ck.uploads)
         if ck.swap_key is not None:
@@ -1305,6 +1458,7 @@ class BatchScheduler:
             self._reprefill(slot, ck, prompt, resume_pos)
         slot.req, slot.stats = req, ck.stats
         slot.tokens = list(ck.tokens)
+        slot.emit_ts = list(ck.emit_ts)
         slot.events = list(ck.events)
         slot.last_token = ck.tokens[-1]
         slot.pos = resume_pos
@@ -1409,6 +1563,9 @@ class BatchScheduler:
         the virtual clock jumps to the next arrival/deadline instead of
         busy-waiting."""
         self._tick_no += 1
+        if self._adaptive is not None:
+            self._adaptive.on_tick(self._tick_no, self.pool,
+                                   self.preemptions, self.oops)
         for idx in self._preempt_schedule.get(self._tick_no, ()):
             # forced-preemption test hook (mid-prefill slots are never
             # preemptible — they have no resume point yet)
@@ -1963,6 +2120,11 @@ class BatchScheduler:
         for s in self.slots:
             if s.active:
                 cands.extend(p.deadline_t for p in s.pending.values())
+        if self._arrival_hint is not None and self._arrival_hint > self.vnow:
+            # open-loop replay: a queued request's future arrival is also
+            # a wake-up point — a free slot may admit it before any reply
+            # lands (jumping past it would inflate its queueing delay)
+            cands.append(self._arrival_hint)
         cands = [t for t in cands if t != math.inf]
         if not cands:
             raise RuntimeError(
@@ -1998,8 +2160,10 @@ class BatchScheduler:
         for kind in reversed(s.events[i + 1:]):
             self._unwind_event(s, kind)
         del s.tokens[i + 1:]
+        del s.emit_ts[i + 1:]
         del s.events[i + 1:]
         s.tokens[i] = tok
+        s.emit_ts[i] = self.vnow   # the corrected token streams out NOW
         s.events[i] = "cloud"
         s.stats.cloud_requests += 1
         s.stats.spec_rewinds += 1
@@ -2027,6 +2191,7 @@ class BatchScheduler:
 
     def _emit(self, slot: _Slot, tok: int, event: str) -> None:
         slot.tokens.append(tok)
+        slot.emit_ts.append(self.vnow)
         slot.events.append(event)
         slot.last_token = tok
         if self.mode == "cloud":
@@ -2046,7 +2211,14 @@ class BatchScheduler:
         (token lists, per-request GenStats) in submission order."""
         for i, r in enumerate(requests):
             r.index = i
-        queue = collections.deque(requests)
+            # arrival stamps are relative to the trace start: rebase them
+            # onto this engine's (possibly reused) virtual clock
+            r.arrival_t += self.vnow
+        # open-loop replay admits in arrival order; the sort is stable, so
+        # the closed-loop default (every arrival_t == 0) keeps submission
+        # order exactly as before
+        queue = collections.deque(
+            sorted(requests, key=lambda r: (r.arrival_t, r.index)))
         results: List[Optional[List[int]]] = [None] * len(requests)
         stats: List[Optional[GenStats]] = [None] * len(requests)
         v0 = self.vnow
@@ -2056,12 +2228,19 @@ class BatchScheduler:
         # virtual times (or stale in-flight replies) into this run's trace
         self.channel.reset()
         while queue or self._preempted or any(s.active for s in self.slots):
+            self._arrival_hint = queue[0].arrival_t if queue else None
             admitted = self._admit(queue)
             self._collect(results, stats)     # finished at admission
             if any(s.active for s in self.slots):
                 self.tick()
                 self._collect(results, stats)
             elif (queue or self._preempted) and not admitted:
+                if queue and queue[0].arrival_t > self.vnow:
+                    # open-loop gap: nothing running and the next request
+                    # hasn't arrived — jump the clock there (pure idle)
+                    self._idle_s += queue[0].arrival_t - self.vnow
+                    self.vnow = queue[0].arrival_t
+                    continue
                 # nothing active, nothing admitted/resumed, yet work
                 # remains: no tick can ever free pages, so fail loudly
                 # instead of spinning (conservative admission makes this
@@ -2072,9 +2251,11 @@ class BatchScheduler:
                     f"scheduler wedged: {len(queue)} queued, "
                     f"{len(self._preempted)} preempted, 0 active, "
                     f"pool {self.pool and self.pool.free_pages} pages free")
-        # replies still in flight belong to retired slots — drop them now
-        # so a reused channel can never leak them into a later run
-        self.late_drops += len(self.channel.poll(math.inf))
+        # replies still in flight belong to retired slots — discard them
+        # unbilled (they were never delivered) so a reused channel can
+        # never leak them into a later run
+        self.late_drops += self.channel.drop_in_flight()
+        self._arrival_hint = None
         self.last_virtual_time = self.vnow - v0
         return results, stats
 
@@ -2089,12 +2270,19 @@ def run_multi(scheds: Sequence[BatchScheduler],
     engines' channels and, in cloud-batch mode, a ``CloudBatcher``
     (compute) that coalesces the round's concurrent requests into one
     masked cloud step.  Returns (per-engine token lists, per-engine
-    stats, virtual makespan across engines)."""
+    stats, virtual makespan across engines).
+
+    An engine handed an empty request list stays idle: its clock never
+    advances, so it contributes ``0`` to the makespan ``max`` and cannot
+    skew it (``workload.split_clients`` caps the fan-out but callers may
+    still round-robin fewer requests than engines)."""
     queues = []
-    for reqs in request_lists:
+    for reqs, s in zip(request_lists, scheds):
         for i, r in enumerate(reqs):
             r.index = i
-        queues.append(collections.deque(reqs))
+            r.arrival_t += s.vnow     # rebase trace time onto engine clock
+        queues.append(collections.deque(
+            sorted(reqs, key=lambda r: (r.arrival_t, r.index))))
     results = [[None] * len(rs) for rs in request_lists]
     stats = [[None] * len(rs) for rs in request_lists]
     v0 = [s.vnow for s in scheds]
@@ -2118,11 +2306,19 @@ def run_multi(scheds: Sequence[BatchScheduler],
         for i, s in enumerate(scheds):
             if not busy(i):
                 continue
+            s._arrival_hint = (queues[i][0].arrival_t if queues[i]
+                               else None)
             progressed |= s._admit(queues[i])
             s._collect(results[i], stats[i])
             if any(sl.active for sl in s.slots):
                 s.tick()
                 s._collect(results[i], stats[i])
+                progressed = True
+            elif queues[i] and queues[i][0].arrival_t > s.vnow:
+                # open-loop gap: this engine is empty until its next
+                # arrival — jumping its private clock there IS progress
+                s._idle_s += queues[i][0].arrival_t - s.vnow
+                s.vnow = queues[i][0].arrival_t
                 progressed = True
         if not progressed:
             raise RuntimeError(
@@ -2130,7 +2326,8 @@ def run_multi(scheds: Sequence[BatchScheduler],
                 "engine can admit or tick (shared cloud slots/pages "
                 "exhausted with nothing running?)")
     for s, v in zip(scheds, v0):
-        s.late_drops += len(s.channel.poll(math.inf))
+        s.late_drops += s.channel.drop_in_flight()
+        s._arrival_hint = None
         s.last_virtual_time = s.vnow - v
     makespan = max(s.last_virtual_time for s in scheds)
     return results, stats, makespan
@@ -2162,7 +2359,12 @@ class ServingSystem:
                  channel: Optional[CloudChannel] = None,
                  tick_time_s: float = 0.0, overlap: bool = True,
                  fallback_after: int = 0, watermark: int = 0,
-                 preempt_schedule: Optional[Sequence] = None
+                 preempt_schedule: Optional[Sequence] = None,
+                 arrivals: Optional[Sequence[float]] = None,
+                 slo_ttft_s: Optional[float] = None,
+                 slo_tpot_s: Optional[float] = None,
+                 adaptive: Optional[AdaptiveConfig] = None,
+                 resume_cost: Optional[ResumeCostModel] = None
                  ) -> Dict[str, Any]:
         """mode: collm | standalone | cloud.  One client per prompt, decoded
         by the continuous-batching ``BatchScheduler`` (num_slots streams in
@@ -2183,7 +2385,18 @@ class ServingSystem:
         ``watermark`` holds that many free pages back from admission as
         decode headroom, and ``preempt_schedule`` ([(tick, slot), ...])
         force-preempts specific slots at specific ticks (test hook —
-        preemption is token-invisible either way)."""
+        preemption is token-invisible either way).
+
+        Open-loop replay (docs/fleet_sim.md): ``arrivals`` stamps one
+        virtual arrival time per prompt (admission waits for it);
+        ``slo_ttft_s`` / ``slo_tpot_s`` arm per-request SLO targets the
+        stats fold into ``slo_attainment``; ``adaptive`` turns on the
+        engine-side control loops and ``resume_cost`` prices preemption
+        resumes into the virtual clock (both arms of a static-vs-adaptive
+        comparison should share one ``ResumeCostModel``)."""
+        if arrivals is not None and len(arrivals) != len(prompts):
+            raise ValueError(f"need one arrival time per prompt "
+                             f"({len(arrivals)} != {len(prompts)})")
         slots = num_slots or max(1, min(len(prompts), 8))
         longest = max(len(p) for p in prompts)
         max_seq = max_seq or (longest + max_new + 8)
@@ -2193,7 +2406,11 @@ class ServingSystem:
         key = (mode, slots, max_seq, sampler, temperature, top_k, seed,
                max_ctx, num_pages,
                id(channel) if channel is not None else None,
-               tick_time_s, overlap, fallback_after, watermark, sched_tuple)
+               tick_time_s, overlap, fallback_after, watermark, sched_tuple,
+               dataclasses.astuple(adaptive) if adaptive is not None
+               else None,
+               dataclasses.astuple(resume_cost) if resume_cost is not None
+               else None)
         sched = self._schedulers.get(key)
         if sched is None:
             # bounded cache: each scheduler owns pooled device caches
@@ -2206,10 +2423,14 @@ class ServingSystem:
                 top_k=top_k, seed=seed, max_ctx=max_ctx, num_pages=num_pages,
                 channel=channel, tick_time_s=tick_time_s, overlap=overlap,
                 fallback_after=fallback_after, watermark=watermark,
-                preempt_schedule=sched_tuple)
+                preempt_schedule=sched_tuple, adaptive=adaptive,
+                resume_cost=resume_cost)
             self._schedulers[key] = sched
         reqs = [Request(device_id=f"edge-{i}", prompt=np.asarray(p),
-                        max_new=max_new, eos_id=eos_id)
+                        max_new=max_new, eos_id=eos_id,
+                        arrival_t=(float(arrivals[i])
+                                   if arrivals is not None else 0.0),
+                        slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s)
                 for i, p in enumerate(prompts)]
         results, stats = sched.run(reqs)
         return {"tokens": results, "stats": _aggregate(stats),
@@ -2218,6 +2439,9 @@ class ServingSystem:
                 "virtual_time": sched.last_virtual_time,
                 "late_drops": sched.late_drops,
                 "channel_stats": sched.channel.stats.as_row(),
+                "preemptions": sched.preemptions, "oops": sched.oops,
+                "adaptive": (sched._adaptive.as_row()
+                             if sched._adaptive is not None else None),
                 "pool_stats": (dataclasses.asdict(sched.pool.stats)
                                if sched.pool is not None else None)}
 
@@ -2231,7 +2455,10 @@ class ServingSystem:
                        channels: Optional[Sequence[CloudChannel]] = None,
                        preempt_schedules: Optional[Sequence] = None,
                        tick_time_s: float = 0.0, overlap: bool = True,
-                       fallback_after: int = 0) -> Dict[str, Any]:
+                       fallback_after: int = 0,
+                       arrivals: Optional[Sequence[float]] = None,
+                       slo_ttft_s: Optional[float] = None,
+                       slo_tpot_s: Optional[float] = None) -> Dict[str, Any]:
         """Multi-client mode (paper §5): each edge client is its own
         single-slot ``BatchScheduler`` with its own channel and virtual
         clock; all of them share ONE cloud.
@@ -2249,11 +2476,19 @@ class ServingSystem:
         virtual cloud queue.  Defaults to a ``SyncChannel`` each, in which
         case the streams are token-identical to independent
         ``generate()`` runs.  Returns the usual result dict plus
-        ``n_engines`` and, in cloud-batch mode, the batcher's stats row."""
+        ``n_engines`` and, in cloud-batch mode, the batcher's stats row.
+
+        ``arrivals`` / ``slo_ttft_s`` / ``slo_tpot_s`` mirror
+        ``generate()``: open-loop fleet replay stamps one virtual arrival
+        per prompt and each engine admits its requests in arrival order
+        (docs/fleet_sim.md)."""
         n = n_engines or len(prompts)
         if channels is not None and len(channels) != n:
             raise ValueError(f"need one channel per engine "
                              f"({len(channels)} != {n})")
+        if arrivals is not None and len(arrivals) != len(prompts):
+            raise ValueError(f"need one arrival time per prompt "
+                             f"({len(arrivals)} != {len(prompts)})")
         longest = max(len(p) for p in prompts)
         max_seq = max_seq or (longest + max_new + 8)
         max_seq = max(max_seq, _bucket(longest))
@@ -2274,7 +2509,10 @@ class ServingSystem:
         for j, p in enumerate(prompts):
             per_engine[j % n].append(Request(
                 device_id=f"edge-{j}", prompt=np.asarray(p),
-                max_new=max_new, eos_id=eos_id))
+                max_new=max_new, eos_id=eos_id,
+                arrival_t=(float(arrivals[j])
+                           if arrivals is not None else 0.0),
+                slo_ttft_s=slo_ttft_s, slo_tpot_s=slo_tpot_s))
             assign[j % n].append(j)
         results, stats, makespan = run_multi(scheds, per_engine)
         tokens: List[Optional[List[int]]] = [None] * len(prompts)

@@ -73,6 +73,39 @@ def test_scripted_channel_replays_trace():
     assert [r.reply for r in ch.poll(0.35)] == ["b"]
 
 
+def test_reply_billing_happens_at_poll_not_submit():
+    """Regression (docs/fleet_sim.md): flight time and downlink bytes used
+    to be billed at ``submit`` — a request dropped by ``reset`` or the
+    end-of-run drain then counted virtual flight it never flew."""
+    ch = AsyncSimChannel(WIFI, service_s=0.005)
+    ch.submit(slot=0, reply="r", now=0.0, nbytes_up=8, nbytes_down=64)
+    assert ch.stats.requests == 1 and ch.stats.bytes_up == 8
+    # nothing delivered yet: the reply side must be unbilled
+    assert ch.stats.replies == 0
+    assert ch.stats.bytes_down == 0
+    assert ch.stats.flight_s == 0.0
+    ch.reset()                          # run teardown with a stale reply
+    assert ch.stats.dropped == 1 and ch.in_flight() == 0
+    assert ch.stats.bytes_down == 0 and ch.stats.flight_s == 0.0
+    assert ch.stats.replies == 0
+    assert ch.stats.as_row()["dropped"] == 1
+
+
+def test_partial_poll_bills_only_delivered_replies():
+    ch = ScriptedChannel([0.1, 0.4])
+    ch.submit(reply="a", now=0.0, nbytes_down=10)
+    ch.submit(reply="b", now=0.0, nbytes_down=1000)
+    assert [r.reply for r in ch.poll(0.2)] == ["a"]
+    assert ch.stats.replies == 1
+    assert ch.stats.bytes_down == 10                 # only "a" delivered
+    assert ch.stats.flight_s == pytest.approx(0.1)
+    assert ch.drop_in_flight() == 1                  # "b" dies unbilled
+    assert ch.stats.dropped == 1
+    assert ch.stats.bytes_down == 10
+    assert ch.stats.flight_s == pytest.approx(0.1)
+    assert ch.poll(math.inf) == []                   # nothing left over
+
+
 def test_wire_accounting_single_source_of_truth():
     """netsim prices hidden/token packets with transport's helpers — the
     simulator and the engine can never disagree on transmitted MB."""

@@ -1,0 +1,301 @@
+"""Fleet simulation: adaptive controllers, open-loop arrival replay
+through the engine, and the netsim arrival honoring (docs/fleet_sim.md).
+
+Fast lane: controller unit tests (pure virtual-time arithmetic).
+Slow lane (``tiny_trained``): open-loop ``generate``/``generate_multi``
+replay — TTFT/SLO accounting, idle-engine tolerance, and adaptive
+control staying token-invisible."""
+import pytest
+
+from repro.core.netsim import (CaseTrace, ComputeParams, ModelSplit,
+                               NetworkParams, TokenTrace, simulate)
+from repro.core.transport import CloudServicePoint
+from repro.core.workload import ArrivalProcess, arrival_times
+from repro.serving.adaptive import (AdaptiveConfig, AdaptiveController,
+                                    FluidCapacity, ResumeCostModel,
+                                    WindowController)
+
+
+# ---------------------------------------------------------------------------
+# WindowController
+# ---------------------------------------------------------------------------
+def _svc(window=0.004, max_batch=4, service=0.008):
+    return CloudServicePoint(service, batch_window_s=window,
+                             max_batch=max_batch)
+
+
+def test_window_controller_warmup_keeps_static_window():
+    ctrl = WindowController(min_obs=4)
+    svc = _svc()
+    for k in range(4):
+        assert ctrl.observe(0.01 * k, svc) == svc.batch_window_s
+    assert ctrl.adjustments == 0
+
+
+def test_window_controller_sparse_arrivals_drop_window_to_zero():
+    ctrl = WindowController(min_obs=2)
+    svc = _svc(service=0.008)
+    # 100ms gaps: rate 10/s, rate*service = 0.08 << 1 -> pure latency tax
+    last = None
+    for k in range(8):
+        last = ctrl.observe(0.1 * k, svc)
+    assert last == 0.0
+    assert ctrl.mean_gap_s == pytest.approx(0.1, rel=0.05)
+
+
+def test_window_controller_dense_arrivals_size_window_to_batch():
+    ctrl = WindowController(min_obs=2, max_window_s=0.016)
+    svc = _svc(max_batch=4, service=0.008)
+    # 2ms gaps: rate 500/s, rate*service = 4 >= 1 -> coalesce
+    last = None
+    for k in range(12):
+        last = ctrl.observe(0.002 * k, svc)
+    assert last == pytest.approx((svc.max_batch - 1) * 0.002, rel=0.1)
+    ctrl2 = WindowController(min_obs=2, max_window_s=0.003)
+    for k in range(12):
+        last = ctrl2.observe(0.002 * k, svc)
+    assert last == 0.003                       # clamped to max_window_s
+
+
+def test_window_controller_ignores_out_of_order_ready_times():
+    ctrl = WindowController(min_obs=2)
+    svc = _svc()
+    ctrl.observe(0.10, svc)
+    ctrl.observe(0.08, svc)        # out-of-order uplink interleave
+    assert ctrl.mean_gap_s == 0.0  # negative gap carries no information
+    ctrl.observe(0.12, svc)
+    assert ctrl.mean_gap_s > 0.0
+
+
+def test_service_point_consults_controller_and_resets_it():
+    class Fixed:
+        def __init__(self):
+            self.calls, self.resets = 0, 0
+
+        def observe(self, ready_t, svc):
+            self.calls += 1
+            return 0.123
+
+        def reset(self):
+            self.resets += 1
+
+    ctrl = Fixed()
+    svc = CloudServicePoint(0.008, batch_window_s=0.004, max_batch=2,
+                            window_controller=ctrl)
+    resets0 = ctrl.resets            # __init__ resets once already
+    svc.service(0.0)
+    assert ctrl.calls == 1 and svc.batch_window_s == 0.123
+    svc.reset()
+    assert svc.batch_window_s == 0.004        # static knob restored
+    assert ctrl.resets == resets0 + 1
+
+
+def test_window_controller_validation():
+    with pytest.raises(ValueError):
+        WindowController(max_window_s=0.0)
+    with pytest.raises(ValueError):
+        WindowController(ewma=0.0)
+
+
+# ---------------------------------------------------------------------------
+# ResumeCostModel + FluidCapacity
+# ---------------------------------------------------------------------------
+def test_resume_cost_crossover():
+    rc = ResumeCostModel(d0_s=0.004, d1_s=2e-4, host_bw=1e8)
+    assert rc.recompute_s(0) == 0.004
+    assert rc.recompute_s(100) == pytest.approx(0.024)
+    assert rc.swap_s(1_000_000) == pytest.approx(0.02)
+    # short context, heavy KV -> recompute; long context, light KV -> swap
+    assert not rc.prefer_swap(10, 10_000_000)
+    assert rc.prefer_swap(1000, 1_000_000)
+
+
+def test_fluid_capacity_curve_and_gate():
+    cap = FluidCapacity(m_total=256, b_tokens=4, d0_s=0.004, d1_s=1e-3)
+    assert cap.batch_time_s(0) == 0.004
+    assert cap.batch_time_s(100) == 0.008      # clamped at b_tokens
+    assert cap.throughput(0) == 0.0
+    assert cap.throughput(4) == pytest.approx(4 / 0.008)
+    assert cap.can_admit(resident_tokens=100, active_streams=2,
+                         new_tokens=100)
+    assert not cap.can_admit(200, 2, 100)      # memory curve exceeded
+    assert not cap.can_admit(0, 4, 10)         # batch budget full
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveController (watermark AIMD)
+# ---------------------------------------------------------------------------
+class _Pool:
+    def __init__(self, num_pages=40, page_size=8, num_slots=4,
+                 watermark=0):
+        self.num_pages, self.page_size = num_pages, page_size
+        self.num_slots, self.watermark = num_slots, watermark
+
+
+def _controller(**cfg_kw):
+    cfg = AdaptiveConfig(interval_ticks=2, quiet_intervals=2, **cfg_kw)
+    ctrl = AdaptiveController(cfg)
+    pool = _Pool()
+    ctrl.attach(pool, ResumeCostModel())
+    return ctrl, pool
+
+
+def test_aimd_raises_watermark_under_pressure():
+    ctrl, pool = _controller()
+    ctrl.on_tick(2, pool, preemptions=3, oops=1)
+    assert pool.watermark == 4                 # +max(1, 4 events) ... wait
+    ctrl.on_tick(3, pool, preemptions=3, oops=1)   # mid-interval: no-op
+    assert pool.watermark == 4
+    ctrl.on_tick(4, pool, preemptions=30, oops=0)
+    assert pool.watermark == 10                # clamped at 25% of 40 pages
+    assert ctrl.watermark_raises == 2
+
+
+def test_aimd_decays_watermark_after_quiet_intervals():
+    ctrl, pool = _controller()
+    ctrl.on_tick(2, pool, preemptions=2, oops=0)
+    assert pool.watermark == 2
+    ctrl.on_tick(4, pool, 2, 0)        # quiet 1
+    ctrl.on_tick(6, pool, 2, 0)        # quiet 2 -> decay
+    assert pool.watermark == 1
+    ctrl.on_tick(8, pool, 2, 0)
+    ctrl.on_tick(10, pool, 2, 0)       # decay to floor
+    ctrl.on_tick(12, pool, 2, 0)
+    ctrl.on_tick(14, pool, 2, 0)
+    assert pool.watermark == 0         # never below the attach-time floor
+    assert ctrl.watermark_decays == 2
+
+
+def test_adaptive_attach_derives_fluid_capacity_from_pool():
+    ctrl, pool = _controller()
+    assert ctrl.capacity.m_total == pool.num_pages * pool.page_size
+    assert ctrl.capacity.b_tokens == pool.num_slots
+    assert ctrl.admit_ok(0, 0, 10)
+    assert not ctrl.admit_ok(pool.num_pages * pool.page_size, 0, 1)
+    assert ctrl.gate_holds == 1
+    row = ctrl.as_row()
+    assert row["gate_holds"] == 1
+
+
+def test_adaptive_gate_can_be_disabled():
+    ctrl, pool = _controller(gate_admission=False)
+    assert ctrl.admit_ok(10 ** 9, 10 ** 9, 10 ** 9)
+    assert ctrl.gate_holds == 0
+
+
+# ---------------------------------------------------------------------------
+# netsim honors case arrival stamps
+# ---------------------------------------------------------------------------
+def _netsim_args():
+    net = NetworkParams(up_bw=4e6, down_bw=8e6, rtt=0.003)
+    comp = ComputeParams(edge_layer_time=1e-3, cloud_layer_time=1e-3)
+    split = ModelSplit(n_layers=12, l_ee1=4, l_ee2=6, d_model=256)
+    return net, comp, split
+
+
+def test_netsim_waits_for_case_arrival():
+    net, comp, split = _netsim_args()
+    toks = [TokenTrace(0.95, 0.99)] * 3
+    closed = [[CaseTrace(prompt_len=8, tokens=list(toks))]]
+    stamped = [[CaseTrace(prompt_len=8, tokens=list(toks), arrival_t=5.0)]]
+    r0 = simulate("standalone", closed, net, comp, split)
+    r1 = simulate("standalone", stamped, net, comp, split)
+    assert r1.total_time >= 5.0
+    assert r1.total_time == pytest.approx(5.0 + r0.total_time, rel=1e-6)
+    assert r1.tokens == r0.tokens
+
+
+# ---------------------------------------------------------------------------
+# engine open-loop replay (slow lane)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def served(tiny_trained):
+    from repro.core.collm import CollmConfig
+    from repro.serving.engine import ServingSystem
+    model, params = tiny_trained["model"], tiny_trained["params"]
+    data = tiny_trained["data"]
+    prompts = [data.sample_tokens(8) for _ in range(4)]
+    return {"mk": lambda ccfg=None: ServingSystem(
+                model, params, ccfg or CollmConfig(theta=0.8)),
+            "prompts": prompts, "data": data}
+
+
+def test_open_loop_arrivals_gate_admission_and_ttft(served):
+    sysv = served["mk"]()
+    prompts = served["prompts"]
+    arr = [0.0, 0.2, 0.4, 3.0]
+    r = sysv.generate(prompts, 6, num_slots=2, tick_time_s=0.01,
+                      arrivals=arr, slo_ttft_s=5.0, slo_tpot_s=5.0)
+    st = r["stats"]
+    assert len(st.ttft_s) == len(prompts)
+    assert all(t >= 0.0 for t in st.ttft_s)
+    assert len(st.token_lat_s) == sum(len(t) - 1 for t in r["tokens"])
+    # the last request arrives at t=3.0: the makespan must cover it
+    assert r["virtual_time"] >= 3.0
+    assert st.slo_total == len(prompts) and st.slo_met == st.slo_total
+    assert st.slo_attainment == 1.0
+    # arrivals are timing-only: tokens match the closed-loop replay
+    r0 = sysv.generate(prompts, 6, num_slots=2, tick_time_s=0.01)
+    assert r["tokens"] == r0["tokens"]
+
+
+def test_open_loop_arrival_idle_gap_counts_as_idle(served):
+    sysv = served["mk"]()
+    prompts = served["prompts"][:1]
+    r = sysv.generate(prompts, 4, num_slots=1, tick_time_s=0.01,
+                      arrivals=[2.0])
+    # nothing ran before t=2: the whole gap is idle, TTFT starts at 2.0
+    assert r["virtual_time"] >= 2.0
+    assert r["stats"].ttft_s[0] < 1.0
+
+
+def test_slo_miss_counted(served):
+    sysv = served["mk"]()
+    prompts = served["prompts"][:2]
+    # impossible TPOT target: every stream must miss
+    r = sysv.generate(prompts, 6, num_slots=2, tick_time_s=0.01,
+                      arrivals=[0.0, 0.0], slo_tpot_s=1e-9)
+    st = r["stats"]
+    assert st.slo_total == 2 and st.slo_met == 0
+    assert st.slo_attainment == 0.0
+
+
+def test_generate_multi_tolerates_idle_engines(served):
+    sysv = served["mk"]()
+    prompts = served["prompts"][:2]
+    # 4 engines, 2 prompts: engines 2/3 never see a request
+    r = sysv.generate_multi(prompts, 5, n_engines=4, tick_time_s=0.01,
+                            arrivals=[0.0, 0.5])
+    assert all(t is not None and len(t) == 5 for t in r["tokens"])
+    assert r["virtual_time"] >= 0.5
+    ref = sysv.generate_multi(prompts, 5, n_engines=2, tick_time_s=0.01)
+    assert r["tokens"] == ref["tokens"]
+
+
+def test_adaptive_control_is_token_invisible(served):
+    from repro.core.collm import CollmConfig
+    ccfg = CollmConfig(theta=0.8, kv_layout="paged", preemption="swap")
+    max_new = 8
+    prompts = [served["data"].sample_tokens(12) for _ in range(4)]
+    arr = arrival_times(ArrivalProcess(rate=40.0, kind="gamma", cv2=4.0),
+                        len(prompts), seed=0)
+    ps = ccfg.page_size
+    worst = max((len(p) + max_new - 1) // ps + 1 for p in prompts)
+    pages = max(worst, int(0.6 * 2 * worst))
+    rc = ResumeCostModel(host_bw=2e7)
+    kw = dict(num_slots=2, num_pages=pages, tick_time_s=0.01,
+              arrivals=arr, resume_cost=rc)
+    r_ad = served["mk"](ccfg).generate(prompts, max_new,
+                                       adaptive=AdaptiveConfig(), **kw)
+    r_st = served["mk"](CollmConfig(theta=0.8, kv_layout="paged",
+                                    preemption="recompute")
+                        ).generate(prompts, 8, **kw)
+    assert r_ad["tokens"] == r_st["tokens"]
+    assert r_ad["adaptive"] is not None
+    assert r_st["adaptive"] is None
+
+
+def test_adaptive_requires_paged_pool(served):
+    with pytest.raises(ValueError, match="paged"):
+        served["mk"]().generate(served["prompts"][:1], 4,
+                                adaptive=AdaptiveConfig())

@@ -1,0 +1,158 @@
+"""Workload generators: confidence-trace calibration, the open-loop
+arrival layer, and the split_clients fan-out guard (docs/fleet_sim.md)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import workload
+from repro.core.netsim import CaseTrace, TokenTrace
+from repro.core.workload import (ALPACA, XSUM, ArrivalProcess,
+                                 arrival_times, paper_calibrated_cases,
+                                 split_clients, stamp_arrivals)
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+def test_paper_cases_seed_deterministic():
+    a = paper_calibrated_cases(ALPACA, 20, seed=7)
+    b = paper_calibrated_cases(ALPACA, 20, seed=7)
+    c = paper_calibrated_cases(ALPACA, 20, seed=8)
+    assert [x.prompt_len for x in a] == [x.prompt_len for x in b]
+    assert all(t1.conf2 == t2.conf2
+               for x, y in zip(a, b) for t1, t2 in zip(x.tokens, y.tokens))
+    assert [x.prompt_len for x in a] != [x.prompt_len for x in c]
+
+
+def test_arrival_times_seed_deterministic():
+    proc = ArrivalProcess(rate=10.0, kind="gamma", cv2=4.0,
+                          diurnal_amp=0.4, diurnal_period_s=2.0)
+    assert arrival_times(proc, 50, seed=3) == arrival_times(proc, 50, seed=3)
+    assert arrival_times(proc, 50, seed=3) != arrival_times(proc, 50, seed=4)
+
+
+# ---------------------------------------------------------------------------
+# confidence exceedance calibration
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("profile", [ALPACA, XSUM], ids=["alpaca", "xsum"])
+def test_sample_conf_exceedance_matches_profile(profile):
+    """P(conf2 >= 0.8) and P(conf2 >= 0.9) of the sampled traces must
+    match the Table 2 calibration within sampling noise."""
+    cases = paper_calibrated_cases(profile, 60, seed=0)
+    confs = np.array([t.conf2 for c in cases for t in c.tokens])
+    assert len(confs) >= 3000
+    assert abs((confs >= 0.8).mean() - profile.p2_ge_08) < 0.03
+    assert abs((confs >= 0.9).mean() - profile.p2_ge_09) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# arrival process moments
+# ---------------------------------------------------------------------------
+def test_poisson_interarrival_moments():
+    t = arrival_times(ArrivalProcess(rate=20.0), 4000, seed=1)
+    gaps = np.diff([0.0] + t)
+    assert abs(gaps.mean() - 1 / 20.0) < 0.005          # mean = 1/rate
+    cv2 = gaps.var() / gaps.mean() ** 2
+    assert abs(cv2 - 1.0) < 0.15                        # exponential: cv2=1
+
+
+def test_gamma_interarrival_burstiness():
+    t = arrival_times(ArrivalProcess(rate=20.0, kind="gamma", cv2=4.0),
+                      4000, seed=1)
+    gaps = np.diff([0.0] + t)
+    assert abs(gaps.mean() - 1 / 20.0) < 0.01
+    cv2 = gaps.var() / gaps.mean() ** 2
+    assert 2.5 < cv2 < 6.0          # bursty: cv2 ~ 4 within sampling noise
+
+
+def test_diurnal_modulation_shifts_density():
+    """With a diurnal ramp, more arrivals land in the sin>0 half-period
+    than the sin<0 half-period; peak density ~ (1+amp)/(1-amp) trough."""
+    proc = ArrivalProcess(rate=50.0, diurnal_amp=0.8, diurnal_period_s=1.0)
+    t = np.asarray(arrival_times(proc, 4000, seed=2))
+    phase = np.mod(t, 1.0)
+    up = ((phase >= 0.0) & (phase < 0.5)).sum()      # sin >= 0 half
+    down = ((phase >= 0.5) & (phase < 1.0)).sum()
+    assert up > 1.5 * down
+    # exact time-rescaling: Lambda(t_k) is a unit-rate renewal sequence,
+    # so its mean gap is ~1
+    lam = np.array([proc._cum_intensity(x) for x in t])
+    lgaps = np.diff(np.concatenate([[0.0], lam]))
+    assert abs(lgaps.mean() - 1.0) < 0.05
+
+
+def test_invert_roundtrips_cum_intensity():
+    proc = ArrivalProcess(rate=3.0, diurnal_amp=0.5, diurnal_period_s=7.0)
+    for target in (0.1, 1.0, 12.3, 400.0):
+        t = proc._invert(target)
+        assert proc._cum_intensity(t) == pytest.approx(target, abs=1e-6)
+
+
+def test_arrival_times_sorted_nonnegative():
+    proc = ArrivalProcess(rate=5.0, kind="gamma", cv2=2.0,
+                          diurnal_amp=0.3)
+    t = arrival_times(proc, 200, seed=0)
+    assert all(x >= 0 for x in t)
+    assert t == sorted(t)
+    assert arrival_times(proc, 0) == []
+
+
+@pytest.mark.parametrize("kw", [
+    {"rate": 0.0},
+    {"rate": -1.0},
+    {"rate": 1.0, "kind": "weibull"},
+    {"rate": 1.0, "cv2": 0.0},
+    {"rate": 1.0, "diurnal_amp": 1.0},
+    {"rate": 1.0, "diurnal_amp": -0.1},
+    {"rate": 1.0, "diurnal_period_s": 0.0},
+])
+def test_arrival_process_validation(kw):
+    with pytest.raises(ValueError):
+        ArrivalProcess(**kw)
+
+
+# ---------------------------------------------------------------------------
+# split_clients guard + arrival stamping
+# ---------------------------------------------------------------------------
+def _cases(n):
+    return [CaseTrace(prompt_len=4 + i, tokens=[TokenTrace(0.5, 0.9)])
+            for i in range(n)]
+
+
+def test_split_clients_round_robin():
+    out = split_clients(_cases(7), 3)
+    assert [len(x) for x in out] == [3, 2, 2]
+    assert out[1][0].prompt_len == 5          # case 1 -> client 1
+
+
+def test_split_clients_caps_oversized_fleet():
+    """More clients than cases used to return silently empty per-client
+    lists; now the fan-out caps at len(cases) and every list is busy."""
+    out = split_clients(_cases(3), 8)
+    assert len(out) == 3
+    assert all(len(x) == 1 for x in out)
+
+
+def test_split_clients_rejects_degenerate_inputs():
+    with pytest.raises(ValueError):
+        split_clients(_cases(3), 0)
+    with pytest.raises(ValueError):
+        split_clients([], 2)
+
+
+def test_stamp_arrivals_copies_with_timestamps():
+    cases = _cases(3)
+    stamped = stamp_arrivals(cases, [0.5, 1.25, 9.0])
+    assert [c.arrival_t for c in stamped] == [0.5, 1.25, 9.0]
+    assert all(c.arrival_t == 0.0 for c in cases)        # originals intact
+    assert stamped[0].prompt_len == cases[0].prompt_len
+    with pytest.raises(ValueError):
+        stamp_arrivals(cases, [0.1])                      # too few times
+
+
+def test_case_trace_arrival_default_is_closed_loop():
+    assert dataclasses.fields(CaseTrace)[-1].name == "arrival_t"
+    assert CaseTrace(prompt_len=1, tokens=[]).arrival_t == 0.0
+    assert workload.traces_from_confidences([2], [[(0.1, 0.9)]])[0] \
+        .arrival_t == 0.0
